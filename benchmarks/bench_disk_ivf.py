@@ -1,0 +1,58 @@
+"""Beyond-paper suite (paper §7 roadmap): SPANN-style disk-resident candidate
+generation + RAID-0 multi-SSD scaling.
+
+Full-offload memory factor: with BOTH the BOW table (ESPN) and the IVF
+postings (this module) on SSD, resident memory = centroids + offsets only.
+RAID-0: eq.-4 batch thresholds scale ~linearly with drive count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, scoring_corpus, scoring_index
+from repro.core.disk_ivf import build_disk_ivf, search_disk
+from repro.storage import ssd as S
+
+PREFETCH_BUDGET_S = 0.028
+DOC_BYTES = 4096
+
+
+def main() -> list[str]:
+    c = scoring_corpus()
+    mem_index = scoring_index(c)
+    out = []
+
+    bow_bytes = int(c.doc_lens.astype(np.int64).sum()) * 32 * 2
+    for cache_frac in (0.0, 0.1, 0.3):
+        cache_cells = int(mem_index.ncells * cache_frac)
+        disk = build_disk_ivf(mem_index, cache_cells=cache_cells)
+        # warm the hot-cell cache with half the query stream
+        if cache_cells:
+            search_disk(disk, c.queries_cls[:24], nprobe=mem_index.ncells // 10,
+                        k=100)
+        q = c.queries_cls[24:40]
+        _, ids, io_s = search_disk(disk, q, nprobe=mem_index.ncells // 10,
+                                   k=100)
+        hit = np.mean([int(next(iter(c.qrels[24 + i]))) in ids[i]
+                       for i in range(len(q))])
+        full = mem_index.memory_bytes() + bow_bytes
+        factor = full / disk.memory_bytes()
+        out.append(row(
+            f"disk_ivf/cache={int(cache_frac*100)}%",
+            io_s / len(q) * 1e6,
+            f"ann_io_ms/q={io_s/len(q)*1e3:.2f} recall@100={hit:.2f} "
+            f"resident={disk.memory_bytes()/2**20:.1f}MB "
+            f"full_offload_factor={factor:.0f}x"))
+
+    # RAID-0 scaling of the paper's eq.-4 batch threshold
+    for n in (1, 2, 4):
+        spec = S.PM983_PCIE3.raid0(n) if n > 1 else S.PM983_PCIE3
+        bw = min(spec.seq_bw, spec.rand_iops * spec.block)
+        th = bw * PREFETCH_BUDGET_S / (1000 * DOC_BYTES)
+        out.append(row(f"raid0/drives={n}", 0.0,
+                       f"exact_batch_threshold={th:.0f}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Tables 1-3: index sizes + the ESPN memory factor.
+
+Analytic model over the paper's corpora (MS-MARCO v1: 8.8M passages, ~29
+whole-word vectors/passage; v2: 138.4M passages) across ANN-index
+quantization levels — reproducing the 5-16x memory-reduction claim.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core.quantize import memory_report
+
+DATASETS = {
+    # name: (n_docs, effective vectors/doc)  [ColBERTer whole-word counts]
+    "msmarco-v1": (8_800_000, 29),
+    "msmarco-v2": (138_400_000, 29),
+}
+
+
+def main() -> list[str]:
+    out = []
+    for name, (n, t) in DATASETS.items():
+        for quant in ("fp32", "fp16", "int8", "int4"):
+            r = memory_report(n, t, ann_quant=quant, bow_dtype="fp16")
+            out.append(row(
+                f"index_size/{name}/ann={quant}", 0.0,
+                f"full={r.full_resident/2**30:.1f}GB "
+                f"espn={r.espn_resident/2**30:.2f}GB factor={r.factor:.1f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig 5: Recall@1K vs nprobe (accuracy/speed trade-off of the candidate
+generator, which defines the prefetch budget)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, v1_index, v1_like_corpus
+from repro.core.ivf import ANNCostModel, search
+
+
+def main() -> list[str]:
+    c = v1_like_corpus()
+    index = v1_index(c)
+    q = jnp.asarray(c.queries_cls)
+    cm = ANNCostModel()
+    out = []
+    total = index.ncells
+    for frac in (0.005, 0.01, 0.02, 0.046, 0.092, 0.2):
+        nprobe = max(1, int(total * frac))
+        t0 = time.time()
+        _, ids = search(index, q, nprobe, 1000)
+        wall = (time.time() - t0) / q.shape[0]
+        ids = np.asarray(ids)
+        hit = np.mean([int(next(iter(c.qrels[i]))) in ids[i]
+                       for i in range(len(c.qrels))])
+        out.append(row(f"ivf_recall/nprobe={nprobe}", wall * 1e6,
+                       f"recall@1k={hit:.3f} "
+                       f"model_ann_ms={cm.time(index, nprobe)*1e3:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig 6: normalized MRR@10 vs re-rank count (bandwidth-efficient partial
+re-ranking; the paper keeps 99.0-99.7% of MRR@10 at rerank 64-128)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, scoring_corpus, scoring_index, scoring_layout
+from repro.core.espn import ESPNConfig, ESPNRetriever
+from repro.core.metrics import mrr_at_k
+from repro.storage.io_engine import StorageTier
+
+
+def main() -> list[str]:
+    c = scoring_corpus()
+    index = scoring_index(c)
+    layout = scoring_layout(c)
+    out = []
+    tier = StorageTier(layout, stack="espn", t_max=180)
+    nprobe = max(8, index.ncells // 10)
+
+    def run(rerank):
+        r = ESPNRetriever(index, tier, ESPNConfig(
+            mode="espn", nprobe=nprobe, k_candidates=1000,
+            prefetch_step=0.2, rerank_count=rerank))
+        resp = r.query_batch(c.queries_cls, c.queries_bow, c.query_lens)
+        ranked = [x.doc_ids for x in resp.ranked]
+        return (mrr_at_k(ranked, c.qrels, 10),
+                resp.breakdown.bytes_read / len(ranked))
+
+    base_mrr, base_bytes = run(None)
+    out.append(row("partial_rerank/full-1000", 0.0,
+                   f"mrr=1.000 bytes/q={base_bytes/1024:.0f}KB"))
+    for rr in (16, 32, 64, 128, 256):
+        mrr, b = run(rr)
+        out.append(row(
+            f"partial_rerank/top-{rr}", 0.0,
+            f"norm_mrr={mrr/max(base_mrr,1e-9):.4f} "
+            f"bytes/q={b/1024:.0f}KB bw_saving={base_bytes/max(b,1):.1f}x"))
+    tier.close()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,358 @@
+"""Config dataclasses + registry for all assigned architectures.
+
+Every architecture is a frozen dataclass; ``register`` adds a factory to the
+global registry so launchers can do ``get_config("qwen2-72b")``. Each family
+defines its shape set (the assigned input shapes) and an ``input_specs``
+builder that returns ShapeDtypeStruct stand-ins (never allocates memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Architecture configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0       # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    family: str                      # "lm-dense" | "lm-moe"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    moe: MoEConfig | None = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16        # activation/compute dtype
+    param_dtype: Any = jnp.float32
+    attn_chunk: int = 1024           # kv-chunk for blockwise online-softmax attn
+    remat: bool = True
+    max_seq_len: int = 524_288
+    # activation-sharding constraint axes (set by the launcher; None = off)
+    batch_axes: Any = None           # e.g. ("data",) or ("pod", "data")
+    tp_axis: Any = None              # e.g. "model"
+    # scan_layers=False unrolls the layer loop (roofline probes: XLA cost
+    # analysis counts while-loop bodies once, so probes must be loop-free)
+    scan_layers: bool = True
+    # --- perf-iteration flags (EXPERIMENTS.md §Perf; default = baseline) ---
+    attn_unroll: bool = False        # unroll the kv-chunk loop (probes)
+    causal_skip: bool = False        # skip fully-masked kv chunks (q-chunked)
+    score_dtype: Any = jnp.float32   # attention score/probability dtype
+    seq_shard_acts: bool = False     # sequence-shard the saved residual carry
+    onehot_cache_update: bool = False  # SPMD-friendly decode cache write
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def scaled(self, **kw) -> "TransformerConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    family: str = "gnn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    aggregator: str = "gated"
+    d_in: int = 1433                 # overridden per shape
+    d_edge_in: int = 0
+    n_classes: int = 40
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = False
+    scan_layers: bool = True
+
+    def scaled(self, **kw) -> "GNNConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    family: str = "recsys"
+    variant: str = "dlrm"            # dlrm | fm | autoint | two-tower
+    n_dense: int = 0
+    embed_dim: int = 128
+    table_sizes: tuple[int, ...] = ()
+    bot_mlp: tuple[int, ...] = ()
+    top_mlp: tuple[int, ...] = ()
+    # autoint
+    n_attn_layers: int = 0
+    n_attn_heads: int = 0
+    d_attn: int = 0
+    # two-tower
+    tower_mlp: tuple[int, ...] = ()
+    n_query_fields: int = 0
+    n_item_fields: int = 0
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.table_sizes)
+
+    def scaled(self, **kw) -> "RecsysConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ColberterConfig:
+    """Late-interaction dual-head encoder (the paper's own model family)."""
+    name: str = "colberter"
+    family: str = "retrieval"
+    n_layers: int = 6                # distilBERT-like
+    d_model: int = 768
+    n_heads: int = 12
+    n_kv_heads: int = 12
+    d_ff: int = 3072
+    vocab_size: int = 30_522
+    d_cls: int = 128                 # single-vector head dim
+    d_bow: int = 32                  # multi-vector (token) head dim
+    max_doc_len: int = 180
+    max_query_len: int = 32
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    norm_eps: float = 1e-12
+    attn_chunk: int = 512
+    qkv_bias: bool = True
+    remat: bool = False
+    scan_layers: bool = True
+    attn_unroll: bool = False
+    score_dtype: Any = jnp.float32   # MaxSim score-block dtype (perf flag)
+    shard_encode: bool = False       # encode over the FULL mesh (perf flag):
+    # baseline shards queries over "data" only, so the 16 model-axis devices
+    # redundantly encode the same queries; this shards B over (data, model)
+    # for the encoder and reshards q_bow for the K-sharded MaxSim.
+
+    def scaled(self, **kw) -> "ColberterConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Shape sets (the assigned input shapes, per family)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                        # "train" | "prefill" | "decode" | "serve"
+    dims: dict[str, int] = field(default_factory=dict)
+
+
+LM_SHAPES = {
+    "train_4k":    ShapeSpec("train_4k", "train", {"seq_len": 4096, "global_batch": 256}),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", {"seq_len": 32_768, "global_batch": 32}),
+    "decode_32k":  ShapeSpec("decode_32k", "decode", {"seq_len": 32_768, "global_batch": 128}),
+    # decode with a 500k KV cache is O(S) per token (prefill would be O(S^2));
+    # runnable for full-attention archs with a sequence-sharded cache (DESIGN §8).
+    "long_500k":   ShapeSpec("long_500k", "decode", {"seq_len": 524_288, "global_batch": 1}),
+}
+
+def pad512(n: int) -> int:
+    """Sharded leading dims must divide the 512-device mesh; data pipelines
+    pad (GNN: dst=n_nodes sink edges, dropped by segment_sum OOB semantics;
+    retrieval: extra candidates masked)."""
+    return -(-n // 512) * 512
+
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec("full_graph_sm", "train",
+                               {"n_nodes": 2708, "n_edges": 10_556, "d_feat": 1433}),
+    "minibatch_lg":  ShapeSpec("minibatch_lg", "train",
+                               {"n_nodes": 232_965, "n_edges": 114_615_892,
+                                "batch_nodes": 1024, "fanout0": 15, "fanout1": 10,
+                                "d_feat": 602}),
+    "ogb_products":  ShapeSpec("ogb_products", "train",
+                               {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100}),
+    "molecule":      ShapeSpec("molecule", "train",
+                               {"n_nodes": 30, "n_edges": 64, "batch": 128, "d_feat": 16}),
+}
+
+RECSYS_SHAPES = {
+    "train_batch":    ShapeSpec("train_batch", "train", {"batch": 65_536}),
+    "serve_p99":      ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk":     ShapeSpec("serve_bulk", "serve", {"batch": 262_144}),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "serve",
+                                {"batch": 1, "n_candidates": 1_000_000}),
+}
+
+RETRIEVAL_SHAPES = {
+    "serve_q32":  ShapeSpec("serve_q32", "serve", {"batch": 32, "k_docs": 1024}),
+    "serve_q512": ShapeSpec("serve_q512", "serve", {"batch": 512, "k_docs": 128}),
+}
+
+FAMILY_SHAPES = {
+    "lm-dense": LM_SHAPES,
+    "lm-moe": LM_SHAPES,
+    "gnn": GNN_SHAPES,
+    "recsys": RECSYS_SHAPES,
+    "retrieval": RETRIEVAL_SHAPES,
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], Any]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str):
+    if name not in _REGISTRY:
+        from repro import configs  # noqa: F401  (trigger arch module imports)
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def shapes_for(config) -> dict[str, ShapeSpec]:
+    return FAMILY_SHAPES[config.family]
+
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for mod in ("qwen2_0_5b", "qwen2_72b", "smollm_135m", "granite_moe_1b_a400m",
+                "llama4_scout_17b_a16e", "gatedgcn", "fm", "two_tower_retrieval",
+                "dlrm_mlperf", "autoint", "colberter"):
+        importlib.import_module(f"repro.configs.{mod}")
+    _LOADED = True
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every (arch x shape) cell
+# ---------------------------------------------------------------------------
+
+def input_specs(config, shape: ShapeSpec) -> dict[str, ShapeDtypeStruct]:
+    """Return the model-input ShapeDtypeStructs for one (arch, shape) cell.
+
+    These are the *data* inputs only; parameter / optimizer-state shapes come
+    from the model module's ``param_shapes``.
+    """
+    fam = config.family
+    if fam in ("lm-dense", "lm-moe"):
+        b, s = shape.dims["global_batch"], shape.dims["seq_len"]
+        if shape.kind == "train":
+            return {
+                "tokens": ShapeDtypeStruct((b, s), jnp.int32),
+                "targets": ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        if shape.kind == "prefill":
+            return {"tokens": ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.kind == "decode":
+            return {
+                "tokens": ShapeDtypeStruct((b, 1), jnp.int32),
+                "positions": ShapeDtypeStruct((b,), jnp.int32),
+            }
+    if fam == "gnn":
+        d = shape.dims
+        if shape.name == "minibatch_lg":
+            # 2-hop sampled block (padded worst case): seeds + fanout0 + fanout0*fanout1
+            n_sub = d["batch_nodes"] * (1 + d["fanout0"] + d["fanout0"] * d["fanout1"])
+            e_sub = pad512(d["batch_nodes"] * (d["fanout0"] + d["fanout0"] * d["fanout1"]))
+            return {
+                "node_feats": ShapeDtypeStruct((n_sub, d["d_feat"]), jnp.float32),
+                "edge_src": ShapeDtypeStruct((e_sub,), jnp.int32),
+                "edge_dst": ShapeDtypeStruct((e_sub,), jnp.int32),
+                "labels": ShapeDtypeStruct((d["batch_nodes"],), jnp.int32),
+                "label_nodes": ShapeDtypeStruct((d["batch_nodes"],), jnp.int32),
+            }
+        if shape.name == "molecule":
+            n = d["n_nodes"] * d["batch"]
+            e = pad512(d["n_edges"] * d["batch"])
+            return {
+                "node_feats": ShapeDtypeStruct((n, d["d_feat"]), jnp.float32),
+                "edge_src": ShapeDtypeStruct((e,), jnp.int32),
+                "edge_dst": ShapeDtypeStruct((e,), jnp.int32),
+                "graph_ids": ShapeDtypeStruct((n,), jnp.int32),
+                "labels": ShapeDtypeStruct((d["batch"],), jnp.int32),
+            }
+        e = pad512(d["n_edges"])
+        return {
+            "node_feats": ShapeDtypeStruct((d["n_nodes"], d["d_feat"]), jnp.float32),
+            "edge_src": ShapeDtypeStruct((e,), jnp.int32),
+            "edge_dst": ShapeDtypeStruct((e,), jnp.int32),
+            "labels": ShapeDtypeStruct((d["n_nodes"],), jnp.int32),
+        }
+    if fam == "recsys":
+        b = shape.dims["batch"]
+        if shape.name == "retrieval_cand":
+            nc = pad512(shape.dims["n_candidates"])
+            if config.variant == "two-tower":
+                return {
+                    "query_ids": ShapeDtypeStruct((b, config.n_query_fields), jnp.int32),
+                    "candidate_ids": ShapeDtypeStruct((nc, config.n_item_fields), jnp.int32),
+                }
+            # CTR models score 1M assembled rows (user fields broadcast into
+            # each candidate's feature vector by the host pipeline)
+            specs = {"sparse_ids": ShapeDtypeStruct((nc, config.n_sparse), jnp.int32)}
+            if config.n_dense:
+                specs["dense"] = ShapeDtypeStruct((nc, config.n_dense), jnp.float32)
+            return specs
+        if config.variant == "two-tower":
+            specs = {
+                "query_ids": ShapeDtypeStruct((b, config.n_query_fields), jnp.int32),
+                "item_ids": ShapeDtypeStruct((b, config.n_item_fields), jnp.int32),
+            }
+            if shape.kind == "train":
+                specs["labels"] = ShapeDtypeStruct((b,), jnp.int32)
+            return specs
+        specs = {"sparse_ids": ShapeDtypeStruct((b, config.n_sparse), jnp.int32)}
+        if config.n_dense:
+            specs["dense"] = ShapeDtypeStruct((b, config.n_dense), jnp.float32)
+        if shape.kind == "train":
+            specs["labels"] = ShapeDtypeStruct((b,), jnp.float32)
+        return specs
+    if fam == "retrieval":
+        b = shape.dims["batch"]
+        k = shape.dims["k_docs"]
+        return {
+            "query_tokens": ShapeDtypeStruct((b, config.max_query_len), jnp.int32),
+            "doc_bow": ShapeDtypeStruct((b, k, config.max_doc_len, config.d_bow),
+                                        jnp.bfloat16),
+            "doc_lens": ShapeDtypeStruct((b, k), jnp.int32),
+            "cls_scores": ShapeDtypeStruct((b, k), jnp.float32),
+        }
+    raise ValueError(f"no input specs for family {fam} shape {shape.name}")

@@ -1,0 +1,52 @@
+"""MaxSim late-interaction scoring (paper eq. 1):
+
+    S_{q,d} = sum_i max_j  E_q[i] . E_d[j]^T
+
+Pure-JAX implementation here (works everywhere, used under pjit for the
+distributed dry-run); the Pallas TPU kernel lives in repro/kernels/maxsim and
+is dispatched via ``repro.kernels.maxsim.ops.maxsim`` when use_pallas=True.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def maxsim_scores(q_bow, q_mask, d_bow, d_mask, score_dtype=jnp.float32):
+    """Batched MaxSim.
+
+    q_bow: (B, Lq, D) query token vectors; q_mask: (B, Lq) bool
+    d_bow: (B, K, Ld, D) candidate doc token vectors; d_mask: (B, K, Ld) bool
+    score_dtype: dtype of the (B,K,Lq,Ld) score block (bf16 halves traffic;
+    the final sum stays fp32). Returns scores (B, K) fp32.
+    """
+    s = jnp.einsum("bqd,bktd->bkqt", q_bow.astype(score_dtype),
+                   d_bow.astype(score_dtype),
+                   preferred_element_type=score_dtype)
+    s = jnp.where(d_mask[:, :, None, :], s, jnp.asarray(NEG, score_dtype))
+    m = s.max(axis=-1).astype(jnp.float32)               # (B, K, Lq)
+    m = jnp.where(q_mask[:, None, :], m, 0.0)
+    m = jnp.maximum(m, 0.0) + jnp.minimum(m, 0.0) * (m > NEG / 2)  # keep finite
+    return m.sum(axis=-1)
+
+
+def maxsim_single(q_bow, d_bow, d_len):
+    """Unbatched: q_bow (Lq, D); d_bow (Ld, D); d_len scalar. fp32 score."""
+    s = q_bow.astype(jnp.float32) @ d_bow.astype(jnp.float32).T   # (Lq, Ld)
+    mask = jnp.arange(d_bow.shape[0]) < d_len
+    s = jnp.where(mask[None, :], s, NEG)
+    return s.max(axis=-1).sum()
+
+
+def aggregate_scores(cls_scores, bow_scores, alpha: float | jax.Array = 1.0):
+    """ColBERTer final score: learned mix of candidate-gen (CLS dot) and
+    re-rank (BOW MaxSim) scores."""
+    return bow_scores + alpha * cls_scores
+
+
+def rank(scores, k: int):
+    """Top-k doc ranking from scores (..., K_cand) -> (values, indices)."""
+    k = min(k, scores.shape[-1])
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,99 @@
+"""Early re-ranking, partial re-ranking, and score aggregation (paper §4.3-4.4).
+
+Early re-ranking: MaxSim runs on prefetched embeddings during the remaining
+ANN probes; the critical path only scores the misses and merges.
+
+Partial re-ranking: only the top R candidates (by candidate-generation score)
+get MaxSim; the rest keep their CLS ordering. R=64-128 retains 99.3-99.7% of
+MRR@10 while cutting bandwidth 8-16x (Fig 6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.maxsim import maxsim_scores
+
+
+@dataclass
+class RerankOutput:
+    doc_ids: np.ndarray          # ranked doc ids (k,)
+    scores: np.ndarray           # aggregate scores, descending
+    n_reranked: int
+    bow_bytes_read: int          # bandwidth bill for this query
+
+
+def _maxsim_np(q_bow: np.ndarray, q_len: int, d_bow: np.ndarray,
+               d_lens: np.ndarray, use_pallas: bool = False) -> np.ndarray:
+    """q_bow (Lq, D); d_bow (K, T, D); returns (K,) fp32 MaxSim scores.
+
+    use_pallas=True routes through the TPU MaxSim kernel (interpret mode on
+    CPU); default is the jnp/XLA path.
+    """
+    if d_bow.shape[0] == 0:
+        return np.zeros((0,), np.float32)
+    if use_pallas:
+        from repro.kernels.maxsim.ops import maxsim as maxsim_kernel
+        return np.asarray(maxsim_kernel(
+            jnp.asarray(q_bow[:q_len]), jnp.ones((q_len,), jnp.float32),
+            jnp.asarray(d_bow), jnp.asarray(d_lens), use_pallas=True))
+    q = jnp.asarray(q_bow[None, :q_len])
+    qm = jnp.ones((1, q_len), bool)
+    d = jnp.asarray(d_bow[None])
+    dm = (jnp.arange(d_bow.shape[1])[None, None, :]
+          < jnp.asarray(d_lens)[None, :, None])
+    return np.asarray(maxsim_scores(q, qm, d, dm)[0])
+
+
+def rerank_query(q_bow, q_len, result, *, alpha: float = 1.0,
+                 rerank_count: int | None = None, doc_bytes=None,
+                 use_pallas: bool = False) -> RerankOutput:
+    """Score one QueryResult (from ANNPrefetcher.run_batch).
+
+    rerank_count=None -> exact (re-rank every candidate, hits scored early,
+    misses in the critical path). rerank_count=R -> partial re-ranking of the
+    top-R candidates by CLS score; remaining docs keep alpha*CLS only.
+    """
+    ids = result.doc_ids
+    k = len(ids)
+    rr = k if rerank_count is None else min(rerank_count, k)
+    # candidates arrive CLS-sorted (IVF top-k): top-rr get MaxSim
+    sel = np.arange(rr)
+
+    bow_scores = np.zeros(k, np.float32)
+    bytes_read = 0
+    # hits: scored from the prefetch buffers (early re-rank)
+    pref_rows, pref_pos = [], []
+    miss_rows, miss_pos = [], []
+    n_miss_seen = 0
+    miss_row_of = {}
+    if result.miss_buffers is not None:
+        miss_ids = ids[~result.hit_mask]
+        miss_row_of = {int(i): j for j, i in enumerate(miss_ids)}
+    for j in sel:
+        i = int(ids[j])
+        if i in result.prefetched and result.buffers is not None:
+            pref_rows.append(result.prefetched[i])
+            pref_pos.append(j)
+        elif i in miss_row_of:
+            miss_rows.append(miss_row_of[i])
+            miss_pos.append(j)
+    if pref_rows:
+        _, bow, lens = result.buffers
+        s = _maxsim_np(q_bow, q_len, bow[pref_rows], lens[pref_rows],
+                       use_pallas)
+        bow_scores[pref_pos] = s
+    if miss_rows:
+        _, bow, lens = result.miss_buffers
+        s = _maxsim_np(q_bow, q_len, bow[miss_rows], lens[miss_rows],
+                       use_pallas)
+        bow_scores[miss_pos] = s
+    if doc_bytes is not None:
+        bytes_read = int(sum(doc_bytes(int(ids[j])) for j in sel))
+
+    agg = alpha * result.cand_scores[:k] + bow_scores
+    order = np.argsort(-agg, kind="stable")
+    return RerankOutput(doc_ids=ids[order], scores=agg[order], n_reranked=rr,
+                        bow_bytes_read=bytes_read)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash_decode (mirrors models/attention.decode_attention)."""
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def flash_decode_ref(q, k_cache, v_cache, lengths):
+    """q: (B, KV, G, Dh); k/v: (B, S, KV, Dh); lengths (B,) -> (B, KV, G, Dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * dh ** -0.5
+    valid = (jnp.arange(k_cache.shape[1])[None, :]
+             < lengths[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, NEG)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
+                   v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)

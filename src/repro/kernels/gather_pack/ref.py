@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for gather_pack."""
+import jax.numpy as jnp
+
+
+def gather_pack_ref(pool, idx):
+    """pool: (R, D); idx: (K, T) int32 (-1 pad) -> (K, T, D), pads zeroed."""
+    rows = jnp.take(pool, jnp.maximum(idx, 0), axis=0)     # (K, T, D)
+    return rows * (idx >= 0)[..., None].astype(pool.dtype)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the ivf_scan kernel."""
+import jax.numpy as jnp
+
+
+def ivf_scan_ref(q, centroids):
+    return jnp.einsum("bd,nd->bn", q.astype(jnp.float32),
+                      centroids.astype(jnp.float32))

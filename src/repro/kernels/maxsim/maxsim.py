@@ -1,0 +1,73 @@
+"""Pallas TPU MaxSim kernel (paper eq. 1; the CUDA MaxSim-kernel analogue).
+
+Grid over document tiles; the query token matrix stays VMEM-resident across
+the whole grid (BlockSpec index_map pins block 0). Each step loads a
+(BK, T, D) tile of packed document token embeddings, runs ONE MXU matmul
+(Lq x D) @ (D, BK*T), applies the doc-length mask, reduces max-over-tokens
+then sum-over-query-tokens, and writes (BK,) scores.
+
+VMEM budget per step (defaults BK=16, T=256, D=128, bf16):
+  doc tile 16*256*128*2 = 1.0 MB, scores 32*4096*4 = 0.5 MB  << 16 MB VMEM.
+Alignment: D padded to 128 (lane), BK*T a multiple of 128, Lq padded to 8
+(sublane) — all matmul dims MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, qmask_ref, d_ref, len_ref, out_ref, *, bk: int, t: int):
+    q = q_ref[...]                                   # (Lqp, D)
+    qmask = qmask_ref[...]                           # (Lqp,)
+    d = d_ref[...]                                   # (BK, T, D)
+    lens = len_ref[...]                              # (BK,)
+    lqp = q.shape[0]
+
+    dt = d.reshape(bk * t, d.shape[-1])              # (BK*T, D)
+    s = jax.lax.dot_general(q, dt, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Lqp, BK*T)
+    s = s.reshape(lqp, bk, t)
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (lqp, bk, t), 2)
+    s = jnp.where(tpos < lens[None, :, None], s, NEG)
+    m = jnp.max(s, axis=2)                           # (Lqp, BK)
+    m = m * qmask[:, None]
+    out_ref[...] = jnp.sum(m, axis=0)                # (BK,)
+
+
+@functools.partial(jax.jit, static_argnames=("block_docs", "interpret"))
+def maxsim_pallas(q, q_mask, docs, doc_lens, *, block_docs: int = 16,
+                  interpret: bool = True):
+    """q: (Lq, D); q_mask: (Lq,) float; docs: (K, T, D); doc_lens: (K,).
+
+    Returns (K,) fp32 MaxSim scores. Pads Lq to 8 and K to block_docs.
+    """
+    lq, d_dim = q.shape
+    k, t, _ = docs.shape
+    lqp = -(-lq // 8) * 8
+    kp = -(-k // block_docs) * block_docs
+    q = jnp.pad(q, ((0, lqp - lq), (0, 0)))
+    q_mask = jnp.pad(q_mask.astype(q.dtype), (0, lqp - lq))
+    docs = jnp.pad(docs, ((0, kp - k), (0, 0), (0, 0)))
+    doc_lens = jnp.pad(doc_lens.astype(jnp.int32), (0, kp - k))
+
+    grid = (kp // block_docs,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=block_docs, t=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((lqp, d_dim), lambda i: (0, 0)),       # q pinned
+            pl.BlockSpec((lqp,), lambda i: (0,)),               # q mask pinned
+            pl.BlockSpec((block_docs, t, d_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_docs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_docs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((kp,), jnp.float32),
+        interpret=interpret,
+    )(q, q_mask, docs, doc_lens)
+    return out[:k]

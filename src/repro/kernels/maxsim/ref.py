@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the MaxSim kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def maxsim_ref(q, q_mask, docs, doc_lens):
+    """q: (Lq, D); q_mask: (Lq,); docs: (K, T, D); doc_lens: (K,) -> (K,) fp32."""
+    s = jnp.einsum("qd,ktd->kqt", q.astype(jnp.float32),
+                   docs.astype(jnp.float32))
+    t = docs.shape[1]
+    tmask = jnp.arange(t)[None, None, :] < doc_lens[:, None, None]
+    s = jnp.where(tmask, s, NEG)
+    m = s.max(axis=-1)                               # (K, Lq)
+    m = m * q_mask.astype(jnp.float32)[None, :]
+    return m.sum(axis=-1)

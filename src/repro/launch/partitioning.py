@@ -1,0 +1,25 @@
+"""Logical-axis -> NamedSharding resolution."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def resolve_spec(logical: tuple, rules: dict) -> P:
+    """logical: tuple of logical axis names (or None) per dim."""
+    return P(*[rules.get(a) if a is not None else None for a in logical])
+
+
+def resolve_tree(logical_tree, mesh, rules):
+    return jax.tree.map(
+        lambda lg: NamedSharding(mesh, resolve_spec(lg, rules)),
+        logical_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def like_tree(tree, sharding):
+    return jax.tree.map(lambda _: sharding, tree)

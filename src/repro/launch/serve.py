@@ -1,0 +1,77 @@
+"""Serving launcher: builds the full ESPN stack (synthetic corpus -> IVF ->
+SSD layout -> retrieval server) and replays a query stream through the
+continuous batcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --docs 50000 --queries 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20_000)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--ncells", type=int, default=128)
+    ap.add_argument("--nprobe", type=int, default=24)
+    ap.add_argument("--k", type=int, default=200)
+    ap.add_argument("--mode", default="espn",
+                    choices=["espn", "gds", "mmap", "swap", "dram"])
+    ap.add_argument("--prefetch-step", type=float, default=0.2)
+    ap.add_argument("--rerank", type=int, default=0,
+                    help="partial re-rank count (0 = exact)")
+    ap.add_argument("--max-batch", type=int, default=12)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.core.espn import ESPNConfig, ESPNRetriever
+    from repro.core.ivf import build_ivf
+    from repro.core.metrics import mrr_at_k, recall_at_k
+    from repro.data.synthetic import make_corpus
+    from repro.serve.engine import RetrievalServer
+    from repro.serve.scheduler import BatchPolicy
+    from repro.storage.io_engine import StorageTier
+    from repro.storage.layout import pack
+
+    print(f"building corpus ({args.docs} docs) ...", flush=True)
+    corpus = make_corpus(n_docs=args.docs, n_queries=args.queries,
+                         n_clusters=max(64, args.ncells // 2))
+    index = build_ivf(corpus.cls, ncells=args.ncells, iters=6)
+    layout = pack(corpus.cls, corpus.bow, dtype=np.float16)
+    mem_budget = layout.nbytes // 4 if args.mode in ("mmap", "swap") else None
+    tier = StorageTier(layout, stack="dram" if args.mode == "dram" else
+                       "mmap" if args.mode == "mmap" else
+                       "swap" if args.mode == "swap" else "espn",
+                       mem_budget_bytes=mem_budget)
+    cfg = ESPNConfig(mode=args.mode if args.mode in ("espn", "gds", "dram")
+                     else args.mode, nprobe=args.nprobe,
+                     k_candidates=args.k,
+                     prefetch_step=args.prefetch_step,
+                     rerank_count=args.rerank or None)
+    retriever = ESPNRetriever(index, tier, cfg)
+    server = RetrievalServer(retriever,
+                             policy=BatchPolicy(max_batch=args.max_batch))
+
+    print("serving ...", flush=True)
+    t0 = time.time()
+    reqs = [server.query_async(corpus.queries_cls[i], corpus.queries_bow[i],
+                               int(corpus.query_lens[i]))
+            for i in range(args.queries)]
+    ranked = []
+    for r in reqs:
+        r.done.wait(60)
+        ranked.append(r.result.doc_ids)
+    wall = time.time() - t0
+
+    print(f"wall={wall:.2f}s  stats={server.stats.summary()}")
+    print(f"MRR@10={mrr_at_k(ranked, corpus.qrels, 10):.4f}  "
+          f"R@100={recall_at_k(ranked, corpus.qrels, 100):.4f}")
+    server.shutdown()
+    tier.close()
+
+
+if __name__ == "__main__":
+    main()

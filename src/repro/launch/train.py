@@ -1,0 +1,87 @@
+"""Training launcher: ``python -m repro.launch.train --arch colberter
+--steps 200``. Runs on whatever devices exist (CPU here; the production mesh
+path is exercised by dryrun.py). Supports LM pretraining and ColBERTer
+contrastive retrieval training with checkpoint/resume."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="colberter")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.base import get_config
+    from repro.train.optimizer import AdamW
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    rng = jax.random.PRNGKey(0)
+
+    if cfg.family in ("lm-dense", "lm-moe"):
+        from repro.models import transformer as M
+        if args.smoke:
+            cfg = M.smoke_config(cfg)
+
+        params = M.init_params(cfg, rng)
+
+        def data_fn(step):
+            from repro.data.synthetic import make_lm_batch
+            b = make_lm_batch(step, args.batch, args.seq, cfg.vocab_size)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        def loss_fn(p, b):
+            return M.loss_fn(cfg, p, b)
+    elif cfg.family == "retrieval":
+        from repro.models import colberter as M
+        if args.smoke:
+            cfg = M.smoke_config(cfg)
+        params = M.init_params(cfg, rng)
+
+        def data_fn(step):
+            r = np.random.default_rng(step)
+            return {
+                "query_tokens": jnp.asarray(r.integers(
+                    0, cfg.vocab_size, (args.batch, cfg.max_query_len)), jnp.int32),
+                "pos_doc_tokens": jnp.asarray(r.integers(
+                    0, cfg.vocab_size, (args.batch, cfg.max_doc_len)), jnp.int32),
+            }
+
+        def loss_fn(p, b):
+            return M.contrastive_loss(cfg, p, b)
+    else:
+        raise SystemExit(f"train launcher supports LM/retrieval archs, "
+                         f"not {cfg.family}")
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={args.arch} params={n_params/1e6:.1f}M devices="
+          f"{len(jax.devices())}")
+    tr = Trainer(TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                               log_every=10, grad_accum=args.grad_accum,
+                               ckpt_dir=args.ckpt_dir,
+                               grad_compression=args.grad_compression),
+                 loss_fn, AdamW(lr=args.lr), data_fn, params)
+    if args.resume:
+        print("resumed at", tr.maybe_resume())
+    hist = tr.run()
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(start {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""GQA attention: RoPE, blockwise online-softmax (memory-efficient) attention
+for train/prefill, and KV-cache decode attention that tolerates a
+sequence-sharded cache (softmax over a sharded axis lowers to partial
+reductions + all-reduce — the flash-decoding pattern, XLA-native).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                            # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise causal attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k, n_rep: int):
+    """(B, S, KV, Dh) -> (B, S, KV*n_rep, Dh) by repeat (GQA share)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, dh)).reshape(
+        b, s, kv * n_rep, dh)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, chunk: int,
+                        q_positions=None, kv_positions=None,
+                        unroll: bool = False, causal_skip: bool = False,
+                        score_dtype=jnp.float32):
+    """Flash-style attention: running (m, l, o) over KV chunks.
+
+    q: (B, Sq, H, Dh); k/v: (B, Skv, KV, Dh). GQA handled by head grouping
+    (no KV materialized repeat: einsum over grouped heads).
+    Memory: one (Bq-chunk, H, Sq-chunk, chunk) score block live at a time.
+
+    unroll: python loop instead of lax.scan (loop-free HLO for roofline
+    probes — XLA cost analysis counts while bodies once).
+    causal_skip: additionally chunk the QUERY axis and visit only kv chunks
+    at or below the diagonal (halves causal-attention flops/bytes).
+    score_dtype: dtype of the materialized score/probability block (bf16
+    halves score traffic; m/l reductions stay fp32).
+    """
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = dh ** -0.5
+
+    if q_positions is None:
+        q_positions = jnp.arange(sq, dtype=jnp.int32)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv, dtype=jnp.int32)[None, :]
+
+    chunk = min(chunk, skv)
+    n_chunks = (skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=jnp.iinfo(jnp.int32).max)
+
+    kc = k.reshape(b, n_chunks, chunk, kv, dh)
+    vc = v.reshape(b, n_chunks, chunk, kv, dh)
+    pc = kv_positions.reshape(kv_positions.shape[0], n_chunks, chunk)
+
+    def make_step(qg, qp):
+        def step(carry, inp):
+            m, l, o = carry                 # (B,Sq',KV,G[,Dh]) fp32
+            kb, vb, pb = inp                # (B,C,KV,Dh), (B,C,KV,Dh), (B?,C)
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = pb[:, None, None, None, :] <= qp[:, :, None, None, None] \
+                if causal else \
+                (pb < jnp.iinfo(jnp.int32).max)[:, None, None, None, :]
+            s = jnp.where(mask, s, NEG_INF).astype(score_dtype)
+            m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+            p = jnp.exp(s - m_new[..., None].astype(score_dtype))
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1).astype(jnp.float32)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+        return step
+
+    def run_q_block(qg, qp, lo_chunk, hi_chunk):
+        """Accumulate kv chunks [lo, hi) for one query block."""
+        sq_blk = qg.shape[1]
+        m0 = jnp.full((b, sq_blk, kv, group), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, sq_blk, kv, group), jnp.float32)
+        o0 = jnp.zeros((b, sq_blk, kv, group, dh), jnp.float32)
+        step = make_step(qg, qp)
+        n = hi_chunk - lo_chunk
+        if unroll or n == 1:
+            carry = (m0, l0, o0)
+            for i in range(lo_chunk, hi_chunk):
+                carry, _ = jax.checkpoint(step)(
+                    carry, (kc[:, i], vc[:, i], pc[:, i]))
+            m, l, o = carry
+        else:
+            sl = slice(lo_chunk, hi_chunk)
+            (m, l, o), _ = jax.lax.scan(
+                jax.checkpoint(step), (m0, l0, o0),
+                (jnp.moveaxis(kc[:, sl], 1, 0), jnp.moveaxis(vc[:, sl], 1, 0),
+                 jnp.moveaxis(pc[:, sl], 1, 0)))
+        return o / jnp.maximum(l[..., None], 1e-30)
+
+    qg_full = q.reshape(b, sq, kv, group, dh)
+    if not (causal_skip and causal and sq == skv and n_chunks > 1):
+        out = run_q_block(qg_full, q_positions, 0, n_chunks)
+        return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+    # causal_skip: query chunks only visit kv chunks <= their diagonal
+    outs = []
+    qcs = qg_full.reshape(b, n_chunks, chunk, kv, group, dh)
+    qps = q_positions.reshape(q_positions.shape[0], n_chunks, chunk)
+    for iq in range(n_chunks):
+        outs.append(run_q_block(qcs[:, iq], qps[:, iq], 0, iq + 1))
+    out = jnp.concatenate(outs, axis=1)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len_positions):
+    """Single-token decode over a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, H, Dh); k_cache/v_cache: (B, S, KV, Dh);
+    kv_len_positions: (B, S) int32 position of each cache slot, with invalid
+    slots marked >= INT32_MAX (masked out). Plain softmax — reductions over
+    the sharded S axis become partial-reduce + all-reduce under pjit.
+    """
+    b, _, h, dh = q.shape
+    kv = k_cache.shape[2]
+    group = h // kv
+    scale = dh ** -0.5
+    qg = q.reshape(b, kv, group, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (kv_len_positions < jnp.iinfo(jnp.int32).max)[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                   v_cache, preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# reference (naive) attention for tests
+# ---------------------------------------------------------------------------
+
+def reference_attention(q, k, v, *, causal: bool):
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    k = _expand_kv(k, h // kv)
+    v = _expand_kv(v, h // kv)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * dh ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

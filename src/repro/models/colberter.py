@@ -1,0 +1,165 @@
+"""ColBERTer-style late-interaction encoder: distilBERT-like backbone with a
+CLS head (128-d single vector, candidate generation) and a BOW head (32-d
+per-token vectors, MaxSim re-ranking), as used by ESPN.
+
+Bidirectional (encoder-only) attention, learned positional embeddings,
+GELU FFN, post-LN — matching distilBERT structure. Token vectors are
+L2-normalized so MaxSim dot products are cosine similarities.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+from repro.configs.base import ColberterConfig
+from repro.models.attention import blockwise_attention
+from repro.models.layers import dense_init, embed_init, gelu_mlp, layer_norm
+
+
+def _table(cfg: ColberterConfig):
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size
+    H = cfg.n_heads
+    Dh = D // H
+    t = {
+        "embed": ((V, D), "embed"),
+        "pos_embed": ((cfg.max_doc_len + 8, D), "embed"),
+        "embed_norm/scale": ((D,), "ones"),
+        "embed_norm/bias": ((D,), "zeros"),
+        "cls_head": ((D, cfg.d_cls), "dense"),
+        "bow_head": ((D, cfg.d_bow), "dense"),
+        "score_scale": ((), "ones"),           # learned CLS/BOW mixing weight
+    }
+    lyr = {
+        "wq": ((L, D, D), "dense"), "bq": ((L, D), "zeros"),
+        "wk": ((L, D, D), "dense"), "bk": ((L, D), "zeros"),
+        "wv": ((L, D, D), "dense"), "bv": ((L, D), "zeros"),
+        "wo": ((L, D, D), "dense"), "bo": ((L, D), "zeros"),
+        "ln1/scale": ((L, D), "ones"), "ln1/bias": ((L, D), "zeros"),
+        "w1": ((L, D, F), "dense"), "b1": ((L, F), "zeros"),
+        "w2": ((L, F, D), "dense"), "b2": ((L, D), "zeros"),
+        "ln2/scale": ((L, D), "ones"), "ln2/bias": ((L, D), "zeros"),
+    }
+    for k, v in lyr.items():
+        t[f"layers/{k}"] = v
+    return t
+
+
+def _nest(flat):
+    out: dict = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
+def param_shapes(cfg: ColberterConfig):
+    return _nest({k: ShapeDtypeStruct(s, cfg.param_dtype)
+                  for k, (s, _) in _table(cfg).items()})
+
+
+def init_params(cfg: ColberterConfig, rng):
+    tbl = _table(cfg)
+    keys = jax.random.split(rng, len(tbl))
+    flat = {}
+    for key, (name, (shape, kind)) in zip(keys, sorted(tbl.items())):
+        if kind == "ones":
+            flat[name] = jnp.ones(shape, cfg.param_dtype)
+        elif kind == "zeros":
+            flat[name] = jnp.zeros(shape, cfg.param_dtype)
+        elif kind == "embed":
+            flat[name] = embed_init(key, shape, cfg.param_dtype)
+        else:
+            flat[name] = dense_init(key, shape, in_axis=-2, dtype=cfg.param_dtype)
+    return _nest(flat)
+
+
+def encode(cfg: ColberterConfig, params, tokens, mask=None):
+    """tokens: (B, S) int32 (token 0 = [CLS], pad = -1 or mask given).
+
+    Returns (cls (B, d_cls) L2-normed, bow (B, S, d_bow) L2-normed, mask).
+    """
+    dt = cfg.dtype
+    B, S = tokens.shape
+    if mask is None:
+        mask = tokens >= 0
+    tok = jnp.maximum(tokens, 0)
+    x = (jnp.take(params["embed"], tok, axis=0)
+         + params["pos_embed"][None, :S, :]).astype(dt)
+    x = layer_norm(x, params["embed_norm"]["scale"], params["embed_norm"]["bias"],
+                   cfg.norm_eps)
+    H = cfg.n_heads
+    Dh = cfg.d_model // H
+    # mask as fake kv positions: valid slots get 0 (<= any q pos), invalid INT_MAX
+    kv_pos = jnp.where(mask, 0, jnp.iinfo(jnp.int32).max).astype(jnp.int32)
+    q_pos = jnp.zeros((B, S), jnp.int32)
+
+    def body(x, lp):
+        q = (jnp.einsum("bsd,dh->bsh", x, lp["wq"].astype(dt)) + lp["bq"].astype(dt))
+        k = (jnp.einsum("bsd,dh->bsh", x, lp["wk"].astype(dt)) + lp["bk"].astype(dt))
+        v = (jnp.einsum("bsd,dh->bsh", x, lp["wv"].astype(dt)) + lp["bv"].astype(dt))
+        q = q.reshape(B, S, H, Dh)
+        k = k.reshape(B, S, H, Dh)
+        v = v.reshape(B, S, H, Dh)
+        a = blockwise_attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                                q_positions=q_pos, kv_positions=kv_pos,
+                                unroll=cfg.attn_unroll)
+        a = a.reshape(B, S, cfg.d_model)
+        o = jnp.einsum("bsh,hd->bsd", a, lp["wo"].astype(dt)) + lp["bo"].astype(dt)
+        x = layer_norm(x + o, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+        f = gelu_mlp(x, lp["w1"].astype(dt), lp["b1"].astype(dt),
+                     lp["w2"].astype(dt), lp["b2"].astype(dt))
+        x = layer_norm(x + f, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:                              # unrolled (roofline probes)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, lp)
+
+    cls = jnp.einsum("bd,dc->bc", x[:, 0, :], params["cls_head"].astype(dt))
+    clsf = cls.astype(jnp.float32)
+    cls = clsf / jnp.maximum(jnp.linalg.norm(clsf, axis=-1, keepdims=True), 1e-6)
+    bow = jnp.einsum("bsd,dc->bsc", x, params["bow_head"].astype(dt))
+    bowf = bow.astype(jnp.float32)
+    bow = bowf / jnp.maximum(jnp.linalg.norm(bowf, axis=-1, keepdims=True), 1e-6)
+    bow = bow * mask[..., None]
+    return cls, bow.astype(dt), mask
+
+
+def contrastive_loss(cfg: ColberterConfig, params, batch):
+    """In-batch late-interaction contrastive loss (ColBERT-style training).
+
+    batch: query_tokens (B, Sq), pos_doc_tokens (B, Sd). Each query's positive
+    is its own doc; other in-batch docs are negatives. Score = alpha*CLS dot +
+    MaxSim(BOW).
+    """
+    q_cls, q_bow, q_mask = encode(cfg, params, batch["query_tokens"])
+    d_cls, d_bow, d_mask = encode(cfg, params, batch["pos_doc_tokens"])
+    from repro.core.maxsim import maxsim_scores
+    # all-pairs: queries x docs
+    sim_bow = maxsim_scores(q_bow, q_mask, d_bow[None].repeat(q_bow.shape[0], 0),
+                            d_mask[None].repeat(q_bow.shape[0], 0))
+    sim_cls = jnp.einsum("qc,dc->qd", q_cls, d_cls)
+    alpha = params["score_scale"].astype(jnp.float32)
+    # normalize by query length so logits stay O(1) at init (MaxSim sums
+    # over Lq tokens); a fixed temperature sharpens the in-batch softmax
+    n_q = jnp.maximum(q_mask.sum(-1, keepdims=True).astype(jnp.float32), 1.0)
+    logits = (sim_bow / n_q + alpha * sim_cls) * 8.0
+    labels = jnp.arange(logits.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    loss = (lse - jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]).mean()
+    return loss, {"ce": loss, "alpha": alpha}
+
+
+def smoke_config(cfg: ColberterConfig) -> ColberterConfig:
+    return cfg.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=512, d_cls=16, d_bow=8, max_doc_len=24,
+                      max_query_len=8, attn_chunk=16)

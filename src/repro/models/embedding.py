@@ -1,0 +1,90 @@
+"""Sharded embedding tables + EmbeddingBag for recsys / retrieval.
+
+JAX has no native EmbeddingBag or CSR sparse; per the brief we build it:
+``lookup`` = jnp.take from a (row-sharded) table; ``embedding_bag`` = take +
+``jax.ops.segment_sum`` over ragged multi-hot bags. Tables large enough to
+shard get rows partitioned over the full mesh (the recsys analogue of ESPN's
+"the table is the thing that doesn't fit"); tiny tables stay replicated.
+
+An optional ESPN storage backend (``repro.core.espn``) can serve lookups from
+the simulated storage tier with prefetching — see storage/espn_embedding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+# tables with fewer rows than this stay replicated (sharding a 3-row table
+# over 256 devices is pure padding waste)
+SHARD_MIN_ROWS = 65_536
+# sharded dims must divide the mesh (512 devices max) -> stored row counts
+# round up; the config's logical sizes are unchanged and ids never touch pads
+PAD_MULTIPLE = 512
+
+
+def padded_rows(r: int) -> int:
+    return -(-r // PAD_MULTIPLE) * PAD_MULTIPLE if r >= SHARD_MIN_ROWS else r
+
+
+def table_shapes(table_sizes, embed_dim, dtype=jnp.float32):
+    return {f"table_{i}": ShapeDtypeStruct((padded_rows(r), embed_dim), dtype)
+            for i, r in enumerate(table_sizes)}
+
+
+def table_logical_axes(table_sizes):
+    return {f"table_{i}": (("rows", None) if r >= SHARD_MIN_ROWS else (None, None))
+            for i, r in enumerate(table_sizes)}
+
+
+def init_tables(rng, table_sizes, embed_dim, dtype=jnp.float32, scale=None):
+    out = {}
+    keys = jax.random.split(rng, len(table_sizes))
+    for i, (key, rows) in enumerate(zip(keys, table_sizes)):
+        s = scale if scale is not None else rows ** -0.25 * 0.1
+        out[f"table_{i}"] = (jax.random.normal(
+            key, (padded_rows(rows), embed_dim)) * s).astype(dtype)
+    return out
+
+
+def lookup(tables: dict, ids, compute_dtype=jnp.bfloat16):
+    """ids: (B, n_fields) single-valued categorical -> (B, n_fields, D)."""
+    cols = [jnp.take(tables[f"table_{i}"], ids[:, i], axis=0)
+            for i in range(ids.shape[1])]
+    return jnp.stack(cols, axis=1).astype(compute_dtype)
+
+
+def embedding_bag(table, ids, offsets, *, combiner="sum",
+                  compute_dtype=jnp.bfloat16):
+    """EmbeddingBag: ragged multi-hot lookup-and-reduce.
+
+    table: (R, D); ids: (total_ids,) flat indices; offsets: (B+1,) CSR-style
+    bag boundaries. Returns (B, D). combiner in {sum, mean}.
+    """
+    n_bags = offsets.shape[0] - 1
+    rows = jnp.take(table, ids, axis=0).astype(jnp.float32)       # (T, D)
+    bag_ids = jnp.searchsorted(offsets, jnp.arange(ids.shape[0]),
+                               side="right") - 1                   # (T,)
+    summed = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if combiner == "mean":
+        cnt = (offsets[1:] - offsets[:-1]).astype(jnp.float32)
+        summed = summed / jnp.maximum(cnt[:, None], 1.0)
+    return summed.astype(compute_dtype)
+
+
+def embedding_bag_ref(table, ids, offsets, *, combiner="sum"):
+    """Pure-python oracle for tests."""
+    import numpy as np
+    table = np.asarray(table, np.float32)
+    ids = np.asarray(ids)
+    offsets = np.asarray(offsets)
+    out = []
+    for b in range(len(offsets) - 1):
+        rows = table[ids[offsets[b]:offsets[b + 1]]]
+        if rows.shape[0] == 0:
+            out.append(np.zeros(table.shape[1], np.float32))
+        elif combiner == "mean":
+            out.append(rows.mean(0))
+        else:
+            out.append(rows.sum(0))
+    return np.stack(out)

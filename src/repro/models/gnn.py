@@ -1,0 +1,134 @@
+"""GatedGCN (edge-gated message passing, arXiv:2003.00982) via segment ops.
+
+JAX has no CSR SpMM; message passing is implemented the idiomatic TPU way:
+gather node states along an edge list, compute per-edge messages, and
+``jax.ops.segment_sum`` them back to destination nodes (this IS the system,
+per the brief). Edge arrays shard over the whole mesh; node states stay
+replicated (<=1 GB for the largest assigned shape) so the scatter lowers to
+local segment-sum + all-reduce.
+
+Deviation from the paper: BatchNorm -> LayerNorm (batch-size independent,
+standard for full-graph training in JAX ports).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+from repro.configs.base import GNNConfig
+from repro.models.layers import dense_init, layer_norm
+
+
+def _table(cfg: GNNConfig, d_in: int):
+    L, D = cfg.n_layers, cfg.d_hidden
+    t = {
+        "embed_h/w": ((d_in, D), "dense"),
+        "embed_h/b": ((D,), "zeros"),
+        "embed_e_src": ((D, D), "dense"),
+        "embed_e_dst": ((D, D), "dense"),
+        "out/w": ((D, cfg.n_classes), "dense"),
+        "out/b": ((cfg.n_classes,), "zeros"),
+    }
+    for n in ("A", "B", "C", "Dm", "E"):
+        t[f"layers/{n}"] = ((L, D, D), "dense")
+    for n in ("h_scale", "e_scale"):
+        t[f"layers/{n}"] = ((L, D), "ones")
+    for n in ("h_bias", "e_bias"):
+        t[f"layers/{n}"] = ((L, D), "zeros")
+    return t
+
+
+def _nest(flat):
+    out = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
+def param_shapes(cfg: GNNConfig, d_in: int):
+    return _nest({k: ShapeDtypeStruct(s, cfg.param_dtype)
+                  for k, (s, _) in _table(cfg, d_in).items()})
+
+
+def init_params(cfg: GNNConfig, rng, d_in: int):
+    flat = {}
+    tbl = _table(cfg, d_in)
+    keys = jax.random.split(rng, len(tbl))
+    for key, (name, (shape, kind)) in zip(keys, sorted(tbl.items())):
+        if kind == "ones":
+            flat[name] = jnp.ones(shape, cfg.param_dtype)
+        elif kind == "zeros":
+            flat[name] = jnp.zeros(shape, cfg.param_dtype)
+        else:
+            flat[name] = dense_init(key, shape, in_axis=-2, dtype=cfg.param_dtype)
+    return _nest(flat)
+
+
+def forward(cfg: GNNConfig, params, node_feats, edge_src, edge_dst):
+    """Returns per-node logits (N, n_classes)."""
+    dt = cfg.dtype
+    n_nodes = node_feats.shape[0]
+    h = jnp.einsum("nf,fd->nd", node_feats.astype(dt),
+                   params["embed_h"]["w"].astype(dt)) + params["embed_h"]["b"].astype(dt)
+    e = (jnp.take(h, edge_src, axis=0) @ params["embed_e_src"].astype(dt)
+         + jnp.take(h, edge_dst, axis=0) @ params["embed_e_dst"].astype(dt))
+
+    def body(carry, lp):
+        h, e = carry
+        hs = jnp.take(h, edge_src, axis=0)                  # (E, D)
+        hd = jnp.take(h, edge_dst, axis=0)
+        e_pre = (e @ lp["C"].astype(dt) + hd @ lp["Dm"].astype(dt)
+                 + hs @ lp["E"].astype(dt))
+        e_new = e + jax.nn.relu(
+            layer_norm(e_pre, lp["e_scale"], lp["e_bias"]))
+        gate = jax.nn.sigmoid(e_new.astype(jnp.float32))
+        msg = gate * (hs @ lp["B"].astype(dt)).astype(jnp.float32)
+        agg = jax.ops.segment_sum(msg, edge_dst, num_segments=n_nodes)
+        norm = jax.ops.segment_sum(gate, edge_dst, num_segments=n_nodes)
+        agg = (agg / (norm + 1e-6)).astype(dt)
+        h_pre = h @ lp["A"].astype(dt) + agg
+        h_new = h + jax.nn.relu(
+            layer_norm(h_pre, lp["h_scale"], lp["h_bias"]))
+        return (h_new, e_new), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    else:                              # unrolled (roofline probes)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            (h, e), _ = body((h, e), lp)
+    return jnp.einsum("nd,dc->nc", h, params["out"]["w"].astype(dt)) \
+        + params["out"]["b"].astype(dt)
+
+
+def loss_fn(cfg: GNNConfig, params, batch):
+    """Node classification (full graph / sampled block) or graph
+    classification (molecule batches, via graph_ids mean-readout)."""
+    logits = forward(cfg, params, batch["node_feats"], batch["edge_src"],
+                     batch["edge_dst"])
+    if "graph_ids" in batch:                       # graph-level readout
+        n_graphs = batch["labels"].shape[0]
+        pooled = jax.ops.segment_sum(logits.astype(jnp.float32),
+                                     batch["graph_ids"], num_segments=n_graphs)
+        cnt = jax.ops.segment_sum(jnp.ones((logits.shape[0],), jnp.float32),
+                                  batch["graph_ids"], num_segments=n_graphs)
+        logits = pooled / jnp.maximum(cnt[:, None], 1.0)
+    elif "label_nodes" in batch:                   # minibatch: seed nodes only
+        logits = jnp.take(logits, batch["label_nodes"], axis=0)
+    lf = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    loss = (lse - gold).mean()
+    return loss, {"ce": loss}
+
+
+def smoke_config(cfg: GNNConfig) -> GNNConfig:
+    return cfg.scaled(n_layers=3, d_hidden=16, n_classes=5)

@@ -1,0 +1,123 @@
+"""Shared pure-function layers: norms, MLPs, initializers, dtype discipline.
+
+Params are nested dicts of jnp arrays (fp32 masters); compute casts to the
+config activation dtype (bf16 by default). All functions are pure and
+pjit-friendly; sharding comes from in_shardings/with_sharding_constraint at
+the step level, never inside layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(rng, shape) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype=jnp.float32, scale=0.02):
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def split_rngs(rng, names):
+    keys = jax.random.split(rng, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """Only the variance REDUCTION runs in fp32; all (B,S,D)-sized products
+    stay in the compute dtype (MaxText-style — avoids materializing fp32
+    copies of the residual stream)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return (x * inv) * scale.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-12):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# mlps
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x, w_gate, w_up, w_down):
+    """LLaMA-style gated MLP. x: (..., D); weights already in compute dtype."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    h = jnp.einsum("...d,df->...f", x, w1) + b1
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, w2) + b2
+
+
+def mlp_stack(x, weights: list[tuple[Any, Any]], act=jax.nn.relu, act_last=False):
+    """Plain MLP from [(w, b), ...]; relu between layers."""
+    for i, (w, b) in enumerate(weights):
+        x = jnp.einsum("...d,df->...f", x, w.astype(x.dtype)) + b.astype(x.dtype)
+        if act_last or i < len(weights) - 1:
+            x = act(x)
+    return x
+
+
+def mlp_params(rng, dims: tuple[int, ...], dtype=jnp.float32):
+    """Init an MLP dims[0] -> dims[1] -> ... ; returns {'w0','b0',...}."""
+    out = {}
+    keys = jax.random.split(rng, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        out[f"w{i}"] = dense_init(keys[i], (dims[i], dims[i + 1]), dtype=dtype)
+        out[f"b{i}"] = jnp.zeros((dims[i + 1],), dtype)
+    return out
+
+
+def mlp_shapes(dims: tuple[int, ...], dtype=jnp.float32):
+    out = {}
+    for i in range(len(dims) - 1):
+        out[f"w{i}"] = ShapeDtypeStruct((dims[i], dims[i + 1]), dtype)
+        out[f"b{i}"] = ShapeDtypeStruct((dims[i + 1],), dtype)
+    return out
+
+
+def mlp_apply(params, x, act=jax.nn.relu, act_last=False):
+    n = len(params) // 2
+    ws = [(params[f"w{i}"], params[f"b{i}"]) for i in range(n)]
+    return mlp_stack(x, ws, act=act, act_last=act_last)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def cross_entropy_logits(logits, targets, z_loss: float = 0.0):
+    """Token CE with fp32 logsumexp; logits (..., V) any float dtype."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    return loss

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN with GShard-style GROUPED capacity dispatch.
+
+Tokens are dispatched within groups (= the batch dim under pjit, so each
+data shard dispatches locally): position-in-expert is a per-group cumsum,
+the (G, E, C, D) expert buffer shards as (batch, tp, -, -), and the
+token->expert movement lowers to an all-to-all on the batch x expert axes —
+no global prefix sums, no replicated buffers.
+
+Dense per-expert compute is a batched matmul (G*C tokens per expert tile)
+that maps straight onto the MXU; capacity overflow drops (standard); router
+is softmax-then-topk with a Switch-style load-balance aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+def capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def route(x, router_w, cfg: MoEConfig):
+    """x: (G, T, D) -> (weights (G,T,k), experts (G,T,k), aux scalar)."""
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing aux loss (per group, then averaged)
+    me = probs.mean(axis=1)                                   # (G, E)
+    ce = jax.vmap(lambda e: jnp.zeros((cfg.n_experts,), jnp.float32)
+                  .at[e.reshape(-1)].add(1.0 / e.size))(experts)
+    aux = cfg.n_experts * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return weights.astype(x.dtype), experts, aux
+
+
+def _wsc(x, spec):
+    if spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def moe_ffn(x, params, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
+            *, batch_axes=None, ep_axis=None):
+    """x: (G, T, D) or (T, D) (treated as one group).
+
+    params: router (D,E), w_gate/w_up (E,D,F), w_down (E,F,D), optional
+    shared-expert w_gate_s/w_up_s (D,Fs) + w_down_s (Fs,D).
+    Returns (y like x, aux_loss). batch_axes/ep_axis: sharding-constraint
+    axes for the expert buffer (set by the launcher, None on CPU tests).
+    """
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    g, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, cfg)
+    xc = x.astype(compute_dtype)
+
+    weights, experts, aux = route(xc, params["router"], cfg)
+
+    # --- dispatch: per-group position-in-expert via one-hot cumsum ---
+    flat_e = experts.reshape(g, t * k)                         # (G, T*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (G, T*k, E)
+    pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1    # (G, T*k)
+    keep = pos < c
+    dest = jnp.where(keep, flat_e * c + pos, e * c)            # overflow row
+    x_rep = jnp.repeat(xc, k, axis=1)                          # (G, T*k, D)
+    x_rep = x_rep * keep[..., None].astype(compute_dtype)
+    buf = jax.vmap(
+        lambda xr, dr: jnp.zeros((e * c + 1, d), compute_dtype).at[dr].add(xr)
+    )(x_rep, dest)                                             # (G, E*C+1, D)
+    buf = buf[:, :-1].reshape(g, e, c, d)
+    spec = ((batch_axes, ep_axis, None, None)
+            if batch_axes is not None or ep_axis is not None else None)
+    buf = _wsc(buf, spec)
+
+    # --- expert compute: batched SwiGLU over the expert dim ---
+    gate = jnp.einsum("gecd,edf->gecf", buf,
+                      params["w_gate"].astype(compute_dtype))
+    up = jnp.einsum("gecd,edf->gecf", buf,
+                    params["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("gecf,efd->gecd", h,
+                     params["w_down"].astype(compute_dtype))
+    out = _wsc(out, spec)
+
+    # --- combine: gather back + weighted sum over k ---
+    flat_out = jnp.concatenate(
+        [out.reshape(g, e * c, d),
+         jnp.zeros((g, 1, d), compute_dtype)], axis=1)         # (G, E*C+1, D)
+    y = jnp.take_along_axis(flat_out, dest[..., None], axis=1)
+    y = y * (weights.reshape(g, t * k, 1)
+             * keep[..., None].astype(compute_dtype))
+    y = y.reshape(g, t, k, d).sum(axis=2)
+
+    if "w_gate_s" in params:
+        from repro.models.layers import swiglu_mlp
+        y = y + swiglu_mlp(xc, params["w_gate_s"].astype(compute_dtype),
+                           params["w_up_s"].astype(compute_dtype),
+                           params["w_down_s"].astype(compute_dtype))
+    y = y.astype(x.dtype)
+    return (y[0] if squeeze else y), aux
+
+
+def moe_ffn_dense_reference(x, params, cfg: MoEConfig):
+    """O(T*E) oracle: every expert on every token, masked combine. Tests only."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    xf = x.astype(jnp.float32)
+    weights, experts, aux = route(xf, params["router"], cfg)
+    g = jnp.einsum("gtd,edf->gtef", xf, params["w_gate"].astype(jnp.float32))
+    u = jnp.einsum("gtd,edf->gtef", xf, params["w_up"].astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("gtef,efd->gted", h,
+                     params["w_down"].astype(jnp.float32))
+    mask = jax.nn.one_hot(experts, cfg.n_experts, dtype=jnp.float32)
+    comb = jnp.einsum("gtke,gtk->gte", mask, weights.astype(jnp.float32))
+    y = jnp.einsum("gte,gted->gtd", comb, out)
+    if "w_gate_s" in params:
+        from repro.models.layers import swiglu_mlp
+        y = y + swiglu_mlp(xf, params["w_gate_s"].astype(jnp.float32),
+                           params["w_up_s"].astype(jnp.float32),
+                           params["w_down_s"].astype(jnp.float32))
+    y = y.astype(x.dtype)
+    return (y[0] if squeeze else y), aux

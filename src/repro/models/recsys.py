@@ -1,0 +1,194 @@
+"""RecSys architectures: FM, DLRM (MLPerf), AutoInt, two-tower retrieval.
+
+All share the sharded embedding substrate (models/embedding.py). The hot path
+is the embedding lookup — the direct analogue of ESPN's BOW-table access — so
+these archs are where the paper's storage-offload technique plugs in
+(DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+from repro.configs.base import RecsysConfig
+from repro.models import embedding as emb
+from repro.models.layers import dense_init, mlp_apply, mlp_params, mlp_shapes
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: RecsysConfig):
+    p: dict = {"tables": emb.table_shapes(cfg.table_sizes, cfg.embed_dim,
+                                          cfg.param_dtype)}
+    if cfg.variant == "fm":
+        p["linear"] = emb.table_shapes(cfg.table_sizes, 1, cfg.param_dtype)
+        p["bias"] = ShapeDtypeStruct((), cfg.param_dtype)
+    elif cfg.variant == "dlrm":
+        p["bot"] = mlp_shapes((cfg.n_dense,) + cfg.bot_mlp, cfg.param_dtype)
+        n_int = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+        p["top"] = mlp_shapes((n_int + cfg.bot_mlp[-1],) + cfg.top_mlp,
+                              cfg.param_dtype)
+    elif cfg.variant == "autoint":
+        d, dh, nh = cfg.embed_dim, cfg.d_attn, cfg.n_attn_heads
+        for l in range(cfg.n_attn_layers):
+            d_in = d if l == 0 else dh * nh
+            p[f"attn_{l}"] = {
+                "wq": ShapeDtypeStruct((d_in, nh * dh), cfg.param_dtype),
+                "wk": ShapeDtypeStruct((d_in, nh * dh), cfg.param_dtype),
+                "wv": ShapeDtypeStruct((d_in, nh * dh), cfg.param_dtype),
+                "wres": ShapeDtypeStruct((d_in, nh * dh), cfg.param_dtype),
+            }
+        p["out"] = mlp_shapes((cfg.n_sparse * cfg.d_attn * cfg.n_attn_heads, 1),
+                              cfg.param_dtype)
+    elif cfg.variant == "two-tower":
+        d_in = cfg.n_query_fields * cfg.embed_dim
+        p["q_tower"] = mlp_shapes((d_in,) + cfg.tower_mlp, cfg.param_dtype)
+        d_in = cfg.n_item_fields * cfg.embed_dim
+        p["i_tower"] = mlp_shapes((d_in,) + cfg.tower_mlp, cfg.param_dtype)
+    return p
+
+
+def init_params(cfg: RecsysConfig, rng):
+    import numpy as np
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(rng, len(flat))
+    leaves = []
+    for key, sds in zip(keys, flat):
+        if len(sds.shape) >= 2:
+            leaves.append(dense_init(key, sds.shape, in_axis=-2, dtype=sds.dtype))
+        else:
+            leaves.append(jnp.zeros(sds.shape, sds.dtype))
+    params = jax.tree.unflatten(treedef, leaves)
+    # embedding tables want row-count-aware scale
+    params["tables"] = emb.init_tables(rng, cfg.table_sizes, cfg.embed_dim,
+                                       cfg.param_dtype)
+    return params
+
+
+def param_logical_axes(cfg: RecsysConfig):
+    shapes = param_shapes(cfg)
+    axes = jax.tree.map(lambda s: tuple([None] * len(s.shape)), shapes)
+    axes["tables"] = emb.table_logical_axes(cfg.table_sizes)
+    if cfg.variant == "fm":
+        axes["linear"] = emb.table_logical_axes(cfg.table_sizes)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# forwards
+# ---------------------------------------------------------------------------
+
+def _fm_forward(cfg, params, batch):
+    dt = cfg.dtype
+    v = emb.lookup(params["tables"], batch["sparse_ids"], dt)     # (B, F, D)
+    w = emb.lookup(params["linear"], batch["sparse_ids"], dt)     # (B, F, 1)
+    vf = v.astype(jnp.float32)
+    # pairwise sum via the O(nk) identity: 1/2 ((sum v)^2 - sum v^2)
+    s = vf.sum(axis=1)
+    inter = 0.5 * (s * s - (vf * vf).sum(axis=1)).sum(axis=-1)
+    logit = params["bias"].astype(jnp.float32) + w.astype(jnp.float32).sum(
+        axis=(1, 2)) + inter
+    return logit
+
+
+def _dlrm_forward(cfg, params, batch):
+    dt = cfg.dtype
+    dense = mlp_apply(params["bot"], batch["dense"].astype(dt), act_last=True)
+    sparse = emb.lookup(params["tables"], batch["sparse_ids"], dt)  # (B,26,D)
+    feats = jnp.concatenate([dense[:, None, :], sparse], axis=1)    # (B,27,D)
+    ff = feats.astype(jnp.float32)
+    inter = jnp.einsum("bnd,bmd->bnm", ff, ff)                      # (B,27,27)
+    n = feats.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    inter_flat = inter[:, iu, ju]                                   # (B, 351)
+    top_in = jnp.concatenate([dense.astype(jnp.float32), inter_flat], axis=-1)
+    logit = mlp_apply(params["top"], top_in.astype(dt))[:, 0]
+    return logit.astype(jnp.float32)
+
+
+def _autoint_forward(cfg, params, batch):
+    dt = cfg.dtype
+    x = emb.lookup(params["tables"], batch["sparse_ids"], dt)      # (B,F,D)
+    nh, dh = cfg.n_attn_heads, cfg.d_attn
+    for l in range(cfg.n_attn_layers):
+        p = params[f"attn_{l}"]
+        q = jnp.einsum("bfd,dh->bfh", x, p["wq"].astype(dt))
+        k = jnp.einsum("bfd,dh->bfh", x, p["wk"].astype(dt))
+        v = jnp.einsum("bfd,dh->bfh", x, p["wv"].astype(dt))
+        B, F = x.shape[:2]
+        q = q.reshape(B, F, nh, dh)
+        k = k.reshape(B, F, nh, dh)
+        v = v.reshape(B, F, nh, dh)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k,
+                       preferred_element_type=jnp.float32) * dh ** -0.5
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", a.astype(dt), v).reshape(B, F, nh * dh)
+        res = jnp.einsum("bfd,dh->bfh", x, p["wres"].astype(dt))
+        x = jax.nn.relu(o + res)
+    logit = mlp_apply(params["out"], x.reshape(x.shape[0], -1))[:, 0]
+    return logit.astype(jnp.float32)
+
+
+def _tower(params_mlp, tables, ids, n_fields, dt):
+    e = emb.lookup(tables, ids, dt)                                # (B,F,D)
+    h = e.reshape(e.shape[0], -1)
+    h = mlp_apply(params_mlp, h)
+    hf = h.astype(jnp.float32)
+    return hf / jnp.maximum(jnp.linalg.norm(hf, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_embed(cfg, params, batch):
+    nq, ni = cfg.n_query_fields, cfg.n_item_fields
+    q = _tower(params["q_tower"], params["tables"], batch["query_ids"], nq,
+               cfg.dtype)
+    key = "candidate_ids" if "candidate_ids" in batch else "item_ids"
+    # item tower tables live after the query tables: shift field index
+    item_tables = {f"table_{i}": params["tables"][f"table_{i + nq}"]
+                   for i in range(ni)}
+    i = _tower(params["i_tower"], item_tables, batch[key], ni, cfg.dtype)
+    return q, i
+
+
+def forward(cfg: RecsysConfig, params, batch):
+    if cfg.variant == "fm":
+        return _fm_forward(cfg, params, batch)
+    if cfg.variant == "dlrm":
+        return _dlrm_forward(cfg, params, batch)
+    if cfg.variant == "autoint":
+        return _autoint_forward(cfg, params, batch)
+    if cfg.variant == "two-tower":
+        q, i = two_tower_embed(cfg, params, batch)
+        if "candidate_ids" in batch:                # retrieval: score all cands
+            scores = jnp.einsum("bd,nd->bn", q, i)  # (B, n_candidates)
+            return scores
+        return jnp.einsum("bd,bd->b", q, i)
+    raise ValueError(cfg.variant)
+
+
+def retrieval_topk(cfg, params, batch, k=100):
+    scores = forward(cfg, params, batch)            # (B, N)
+    return jax.lax.top_k(scores, k)
+
+
+def loss_fn(cfg: RecsysConfig, params, batch):
+    if cfg.variant == "two-tower":
+        q, i = two_tower_embed(cfg, params, batch)
+        logits = jnp.einsum("bd,cd->bc", q, i) * 20.0   # in-batch sampled softmax
+        labels = jnp.arange(q.shape[0])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        loss = (lse - jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]).mean()
+        return loss, {"ce": loss}
+    logit = forward(cfg, params, batch)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))       # stable BCE
+    return loss, {"bce": loss}
+
+
+def smoke_config(cfg: RecsysConfig) -> RecsysConfig:
+    n = cfg.n_sparse
+    return cfg.scaled(table_sizes=tuple([997] * n))

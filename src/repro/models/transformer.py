@@ -1,0 +1,366 @@
+"""Dense + MoE GQA transformer LM: param specs, init, train/prefill/decode.
+
+Layer params are stacked along a leading L axis and the block runs under
+``jax.lax.scan`` (+ optional ``jax.checkpoint``) so the HLO stays small even
+for 80-layer models — essential for 512-device dry-run compiles.
+
+Sharding is table-driven via *logical axes*:
+  "fsdp"  -> the data axis (ZeRO-3 parameter sharding)
+  "tp"    -> the model axis (heads / d_ff / vocab / experts)
+  "batch" -> ("pod","data") on the multi-pod mesh
+Physical PartitionSpecs are resolved by ``partitioning.resolve``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+
+from repro.configs.base import TransformerConfig
+from repro.models import moe as moe_lib
+from repro.models.attention import apply_rope, blockwise_attention, decode_attention
+from repro.models.layers import (cross_entropy_logits, dense_init, embed_init,
+                                 rms_norm, swiglu_mlp)
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _wsc(cfg: TransformerConfig, x, *spec):
+    """Activation sharding constraint (no-op when the launcher didn't set
+    batch_axes — smoke tests / single-device)."""
+    if cfg.batch_axes is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    resolved = tuple(cfg.tp_axis if a == "TP" else a for a in spec)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+# ---------------------------------------------------------------------------
+# parameter table: name -> (shape, logical axes, init kind)
+# ---------------------------------------------------------------------------
+
+def padded_vocab(v: int) -> int:
+    """Stored vocab rows round up to 512 (sharding divisibility + lane
+    alignment); targets/tokens always index below the true vocab."""
+    return -(-v // 512) * 512
+
+
+def _table(cfg: TransformerConfig):
+    L, D, H, KV, Dh, F = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                          cfg.n_kv_heads, cfg.head_dim, cfg.d_ff)
+    V = padded_vocab(cfg.vocab_size)
+    t: dict[str, tuple[tuple[int, ...], tuple[str | None, ...], str]] = {}
+    t["embed"] = ((V, D), ("tp", "fsdp"), "embed")
+    t["final_norm"] = ((D,), (None,), "ones")
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ((D, V), ("fsdp", "tp"), "dense")
+    lyr = {
+        "attn_norm": ((L, D), (None, None), "ones"),
+        "wq": ((L, D, H * Dh), (None, "fsdp", "tp"), "dense"),
+        "wk": ((L, D, KV * Dh), (None, "fsdp", "tp"), "dense"),
+        "wv": ((L, D, KV * Dh), (None, "fsdp", "tp"), "dense"),
+        "wo": ((L, H * Dh, D), (None, "tp", "fsdp"), "dense"),
+        "mlp_norm": ((L, D), (None, None), "ones"),
+    }
+    if cfg.qkv_bias:
+        lyr["bq"] = ((L, H * Dh), (None, "tp"), "zeros")
+        lyr["bk"] = ((L, KV * Dh), (None, "tp"), "zeros")
+        lyr["bv"] = ((L, KV * Dh), (None, "tp"), "zeros")
+    if cfg.moe is None:
+        lyr["w_gate"] = ((L, D, F), (None, "fsdp", "tp"), "dense")
+        lyr["w_up"] = ((L, D, F), (None, "fsdp", "tp"), "dense")
+        lyr["w_down"] = ((L, F, D), (None, "tp", "fsdp"), "dense")
+    else:
+        m = cfg.moe
+        E, Fe = m.n_experts, m.d_ff_expert
+        lyr["router"] = ((L, D, E), (None, "fsdp", None), "dense")
+        lyr["w_gate"] = ((L, E, D, Fe), (None, "tp", "fsdp", None), "dense")
+        lyr["w_up"] = ((L, E, D, Fe), (None, "tp", "fsdp", None), "dense")
+        lyr["w_down"] = ((L, E, Fe, D), (None, "tp", None, "fsdp"), "dense")
+        if m.n_shared_experts:
+            Fs = Fe * m.n_shared_experts
+            lyr["w_gate_s"] = ((L, D, Fs), (None, "fsdp", "tp"), "dense")
+            lyr["w_up_s"] = ((L, D, Fs), (None, "fsdp", "tp"), "dense")
+            lyr["w_down_s"] = ((L, Fs, D), (None, "tp", "fsdp"), "dense")
+    for k, v in lyr.items():
+        t[f"layers/{k}"] = v
+    return t
+
+
+def _nest(flat: dict[str, Any]) -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for k, v in flat.items():
+        if "/" in k:
+            a, b = k.split("/", 1)
+            out.setdefault(a, {})[b] = v
+        else:
+            out[k] = v
+    return out
+
+
+def param_shapes(cfg: TransformerConfig):
+    return _nest({k: ShapeDtypeStruct(s, cfg.param_dtype)
+                  for k, (s, _, _) in _table(cfg).items()})
+
+
+def param_logical_axes(cfg: TransformerConfig):
+    return _nest({k: axes for k, (_, axes, _) in _table(cfg).items()})
+
+
+def init_params(cfg: TransformerConfig, rng):
+    flat = {}
+    names = sorted(_table(cfg))
+    keys = jax.random.split(rng, len(names))
+    for key, name in zip(keys, names):
+        shape, _, kind = _table(cfg)[name]
+        if kind == "ones":
+            flat[name] = jnp.ones(shape, cfg.param_dtype)
+        elif kind == "zeros":
+            flat[name] = jnp.zeros(shape, cfg.param_dtype)
+        elif kind == "embed":
+            flat[name] = embed_init(key, shape, cfg.param_dtype)
+        else:
+            flat[name] = dense_init(key, shape, in_axis=-2, dtype=cfg.param_dtype)
+    return _nest(flat)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer(cfg: TransformerConfig, x, lp, positions, *, cache=None,
+           cache_slot_pos=None, write_pos=None):
+    """One transformer block. x: (B, S, D).
+
+    Train/prefill: cache is None -> blockwise causal self-attention; returns
+    (y, aux, (k, v)). Decode: cache=(k_cache, v_cache) -> returns
+    (y, aux, (k_new, v_new)) with the caller owning the cache insert.
+    """
+    dt = cfg.dtype
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    # seq_shard_acts: save the remat residual sequence-sharded over TP
+    # (Megatron-SP style); the gather back is recomputed in the backward.
+    if cfg.seq_shard_acts and S > 1:
+        x = _wsc(cfg, x, cfg.batch_axes, "TP", None)
+    x = _wsc(cfg, x, cfg.batch_axes, None, None)
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(dt))
+    q = _wsc(cfg, q, cfg.batch_axes, None, "TP")
+    k = _wsc(cfg, k, cfg.batch_axes, None, "TP")
+    v = _wsc(cfg, v, cfg.batch_axes, None, "TP")
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(dt)
+        k = k + lp["bk"].astype(dt)
+        v = v + lp["bv"].astype(dt)
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KV, Dh)
+    v = v.reshape(B, S, KV, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        attn = blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                                   q_positions=positions,
+                                   kv_positions=positions,
+                                   unroll=cfg.attn_unroll,
+                                   causal_skip=cfg.causal_skip,
+                                   score_dtype=cfg.score_dtype)
+        # pin the cache-bound copy to the cache layout (S sequence-sharded
+        # over TP) so prefill lowers the k/v reshard identically per layer
+        kv_out = (_wsc(cfg, k, cfg.batch_axes, "TP", None, None),
+                  _wsc(cfg, v, cfg.batch_axes, "TP", None, None))
+    else:
+        k_cache, v_cache = cache
+        if cfg.onehot_cache_update:
+            # SPMD-friendly masked write: elementwise over the (sequence-
+            # sharded) cache, no cross-shard dynamic-slice resharding
+            hot = (jnp.arange(k_cache.shape[1]) == write_pos)[None, :, None,
+                                                              None]
+            k_cache = jnp.where(hot, k.astype(k_cache.dtype), k_cache)
+            v_cache = jnp.where(hot, v.astype(v_cache.dtype), v_cache)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, write_pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, write_pos, 0, 0))
+        attn = decode_attention(q, k_cache, v_cache, cache_slot_pos)
+        kv_out = (k_cache, v_cache)
+
+    attn = attn.reshape(B, S, H * Dh)
+    attn = _wsc(cfg, attn, cfg.batch_axes, None, "TP")
+    x = x + jnp.einsum("bsh,hd->bsd", attn, lp["wo"].astype(dt))
+    x = _wsc(cfg, x, cfg.batch_axes, None, None)
+
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is None:
+        y = swiglu_mlp(h, lp["w_gate"].astype(dt), lp["w_up"].astype(dt),
+                       lp["w_down"].astype(dt))
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        ep = {n: lp[n] for n in
+              ("router", "w_gate", "w_up", "w_down", "w_gate_s", "w_up_s",
+               "w_down_s") if n in lp}
+        # groups = the batch dim -> dispatch is local per data shard
+        y, aux = moe_lib.moe_ffn(h, ep, cfg.moe, dt,
+                                 batch_axes=cfg.batch_axes,
+                                 ep_axis=cfg.tp_axis
+                                 if cfg.batch_axes is not None else None)
+    return x + y, aux, kv_out
+
+
+def forward(cfg: TransformerConfig, params, tokens, positions=None,
+            *, collect_kv: bool = False):
+    """Token ids -> final hidden states (B, S, D) [+ stacked (L,...) kv].
+
+    Runs layers under lax.scan over the stacked (L, ...) params.
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = _wsc(cfg, x, cfg.batch_axes, None, None)
+
+    def body(x, lp):
+        y, aux, kv = _layer(cfg, x, lp, positions)
+        return y, (aux, kv if collect_kv else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, (auxes, kvs) = jax.lax.scan(body, x, params["layers"])
+        aux_total = auxes.sum()
+    else:                              # unrolled (roofline probes)
+        auxes, kvs_list = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (aux, kv) = body(x, lp)
+            auxes.append(aux)
+            kvs_list.append(kv)
+        aux_total = jnp.stack(auxes).sum()
+        kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *kvs_list)
+               if collect_kv else None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total, kvs
+
+
+def logits_from_hidden(cfg: TransformerConfig, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, head.astype(cfg.dtype))
+    spec = (cfg.batch_axes,) + (None,) * (logits.ndim - 2) + ("TP",)
+    return _wsc(cfg, logits, *spec)
+
+
+def loss_fn(cfg: TransformerConfig, params, batch, aux_weight: float = 0.01):
+    x, aux, _ = forward(cfg, params, batch["tokens"])
+    logits = logits_from_hidden(cfg, params, x)
+    mask = (batch["targets"] >= 0)
+    tgt = jnp.maximum(batch["targets"], 0)
+    ce = cross_entropy_logits(logits, tgt)
+    loss = (ce * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: TransformerConfig, batch: int, max_len: int):
+    L, KV, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": ShapeDtypeStruct((L, batch, max_len, KV, Dh), cfg.dtype),
+        "v": ShapeDtypeStruct((L, batch, max_len, KV, Dh), cfg.dtype),
+        "slot_pos": ShapeDtypeStruct((batch, max_len), jnp.int32),
+        "length": ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    L, KV, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, KV, Dh), cfg.dtype),
+        "v": jnp.zeros((L, batch, max_len, KV, Dh), cfg.dtype),
+        "slot_pos": jnp.full((batch, max_len), INT32_MAX, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: TransformerConfig, params, tokens, cache):
+    """Encode a prompt batch; fill cache[:, :, :S]; return next-token logits."""
+    B, S = tokens.shape
+    x, _, kvs = forward(cfg, params, tokens, collect_kv=True)
+    k_new, v_new = kvs                                   # (L, B, S, KV, Dh)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache["slot_pos"] = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos, (0, 0))
+    cache["length"] = jnp.asarray(S, jnp.int32)
+    logits = logits_from_hidden(cfg, params, x[:, -1, :])
+    return logits, cache
+
+
+def decode_step(cfg: TransformerConfig, params, tokens, positions, cache):
+    """One decode step. tokens: (B, 1); positions: (B,). Returns (logits, cache)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    pos2d = positions[:, None]
+    write_pos = cache["length"]
+    if cfg.onehot_cache_update:
+        hot = (jnp.arange(cache["slot_pos"].shape[1]) == write_pos)[None, :]
+        slot_pos = jnp.where(hot, pos2d, cache["slot_pos"])
+    else:
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], pos2d, (0, write_pos))
+
+    def body(x, inp):
+        lp, k_l, v_l = inp
+        y, _, (k_l, v_l) = _layer(cfg, x, lp, pos2d, cache=(k_l, v_l),
+                                  cache_slot_pos=slot_pos, write_pos=write_pos)
+        return y, (k_l, v_l)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"],
+                                                   cache["k"], cache["v"]))
+    else:                              # unrolled (roofline probes)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            inp = jax.tree.map(lambda a: a[i],
+                               (params["layers"], cache["k"], cache["v"]))
+            x, (k_l, v_l) = body(x, inp)
+            ks.append(k_l)
+            vs.append(v_l)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, -1, :])
+    new_cache = {"k": k_new, "v": v_new, "slot_pos": slot_pos,
+                 "length": write_pos + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# tiny smoke-scale config helper
+# ---------------------------------------------------------------------------
+
+def smoke_config(cfg: TransformerConfig) -> TransformerConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=max(1, cfg.n_kv_heads
+              * 4 // cfg.n_heads), d_head=16, d_ff=128, vocab_size=512,
+              attn_chunk=32, remat=False, max_seq_len=256)
+    if cfg.moe is not None:
+        import dataclasses
+        kw["moe"] = dataclasses.replace(cfg.moe, n_experts=4,
+                                        top_k=min(2, cfg.moe.top_k),
+                                        d_ff_expert=64)
+    return cfg.scaled(**kw)

@@ -1,0 +1,84 @@
+"""ESPN retrieval serving engine: continuous batching in front of the
+ESPNRetriever pipeline, with per-request latency accounting that combines the
+real wall clock (queueing, host work) and the calibrated device clock
+(SSD + accelerator, DESIGN §5).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.espn import ESPNConfig, ESPNRetriever
+from repro.serve.scheduler import BatchPolicy, ContinuousBatcher, Request
+
+
+@dataclass
+class ServeStats:
+    n_requests: int = 0
+    latencies_ms: list = field(default_factory=list)
+    sim_latencies_ms: list = field(default_factory=list)
+    batch_sizes: list = field(default_factory=list)
+    hit_rates: list = field(default_factory=list)
+
+    def percentile(self, p: float, sim: bool = True) -> float:
+        xs = self.sim_latencies_ms if sim else self.latencies_ms
+        return float(np.percentile(xs, p)) if xs else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "n": self.n_requests,
+            "mean_ms": round(float(np.mean(self.sim_latencies_ms)), 2)
+            if self.sim_latencies_ms else 0,
+            "p50_ms": round(self.percentile(50), 2),
+            "p99_ms": round(self.percentile(99), 2),
+            "mean_batch": round(float(np.mean(self.batch_sizes)), 2)
+            if self.batch_sizes else 0,
+            "mean_hit_rate": round(float(np.mean(self.hit_rates)), 4)
+            if self.hit_rates else None,
+        }
+
+
+class RetrievalServer:
+    def __init__(self, retriever: ESPNRetriever, *, policy: BatchPolicy | None
+                 = None):
+        self.retriever = retriever
+        self.stats = ServeStats()
+        self.batcher = ContinuousBatcher(self._handle,
+                                         policy or BatchPolicy()).start()
+        self._rid = 0
+
+    def _handle(self, batch: list[Request]):
+        q_cls = np.stack([r.payload["cls"] for r in batch])
+        q_bow = np.stack([r.payload["bow"] for r in batch])
+        q_lens = np.array([r.payload["len"] for r in batch], np.int32)
+        resp = self.retriever.query_batch(q_cls, q_bow, q_lens)
+        per_query_sim = resp.breakdown.total_s / len(batch) \
+            + resp.breakdown.encode_s * (len(batch) - 1) / len(batch)
+        for r, ranked in zip(batch, resp.ranked):
+            r.result = ranked
+            self.stats.sim_latencies_ms.append(per_query_sim * 1e3)
+        self.stats.batch_sizes.append(len(batch))
+        self.stats.hit_rates.append(resp.breakdown.hit_rate)
+        self.stats.n_requests += len(batch)
+
+    def query(self, cls_vec, bow_vecs, q_len, timeout: float = 30.0):
+        self._rid += 1
+        req = Request(self._rid, {"cls": cls_vec, "bow": bow_vecs,
+                                  "len": q_len})
+        self.batcher.submit(req)
+        if not req.done.wait(timeout):
+            raise TimeoutError("query timed out")
+        self.stats.latencies_ms.append(req.latency_s * 1e3)
+        return req.result
+
+    def query_async(self, cls_vec, bow_vecs, q_len) -> Request:
+        self._rid += 1
+        req = Request(self._rid, {"cls": cls_vec, "bow": bow_vecs,
+                                  "len": q_len})
+        self.batcher.submit(req)
+        return req
+
+    def shutdown(self):
+        self.batcher.stop()

@@ -1,0 +1,102 @@
+"""Request scheduling for the retrieval server: deadline-aware continuous
+batching + hedged storage reads (straggler mitigation).
+
+Batching policy: dispatch when either `max_batch` requests are queued or the
+oldest request has waited `max_wait_s` (keeps p99 bounded at low load while
+reaching the SSD's batch-throughput regime at high load — the batch-threshold
+math of paper eq. 4 decides `max_batch`).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from queue import Empty, Queue
+from typing import Any, Callable
+
+
+@dataclass
+class Request:
+    rid: int
+    payload: Any
+    arrival_s: float = field(default_factory=time.monotonic)
+    done = None           # threading.Event, set post-init
+
+    def __post_init__(self):
+        self.done = threading.Event()
+        self.result = None
+        self.latency_s = 0.0
+
+
+@dataclass
+class BatchPolicy:
+    max_batch: int = 12           # ESPN batch threshold (paper eq. 4)
+    max_wait_s: float = 0.004
+
+
+class ContinuousBatcher:
+    """Collects requests into batches and runs `handler(list[Request])`."""
+
+    def __init__(self, handler: Callable, policy: BatchPolicy):
+        self.handler = handler
+        self.policy = policy
+        self.queue: Queue = Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self.batches: list[int] = []
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def submit(self, req: Request):
+        self.queue.put(req)
+
+    def _collect(self) -> list[Request]:
+        try:
+            first = self.queue.get(timeout=0.05)
+        except Empty:
+            return []
+        batch = [first]
+        deadline = first.arrival_s + self.policy.max_wait_s
+        while len(batch) < self.policy.max_batch:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self.queue.get(timeout=remaining))
+            except Empty:
+                break
+        return batch
+
+    def _loop(self):
+        while not self._stop.is_set():
+            batch = self._collect()
+            if not batch:
+                continue
+            self.batches.append(len(batch))
+            self.handler(batch)
+            for r in batch:
+                r.latency_s = time.monotonic() - r.arrival_s
+                r.done.set()
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=2)
+
+
+def hedged_read(read_fn: Callable, ids, *, hedge_after_s: float,
+                sampler: Callable[[], float]) -> tuple[Any, float, bool]:
+    """Straggler mitigation for storage reads: model the device latency as a
+    draw from `sampler`; if the first draw exceeds `hedge_after_s`, a
+    duplicate request goes to a replica and the faster one wins.
+
+    Returns (result, effective_latency_s, hedged?). The data path runs once
+    (reads are idempotent); only the simulated clock differs.
+    """
+    result = read_fn(ids)
+    t1 = sampler()
+    if t1 <= hedge_after_s:
+        return result, t1, False
+    t2 = hedge_after_s + sampler()
+    return result, min(t1, t2), True

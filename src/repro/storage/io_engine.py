@@ -1,0 +1,114 @@
+"""StorageTier: serves document embeddings through a device model + software
+stack. The GDS-analogue path ("espn") issues batched block reads at high
+queue depth directly into accelerator-bound buffers; "mmap"/"swap" model the
+conventional O/S paths the paper compares against; "dram" is the all-in-memory
+upper bound.
+
+Data movement is real (numpy gather from the disk-image blob, thread-pool
+async); the *clock* is the calibrated model in storage/ssd.py. Every read
+returns its simulated duration so the pipeline can account overlap exactly
+like the paper's prefetch-budget math.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.storage import ssd as ssd_lib
+from repro.storage.cache import PageCache
+from repro.storage.layout import EmbeddingLayout, gather_docs
+
+
+@dataclass
+class ReadResult:
+    cls: np.ndarray           # (n, d_cls) fp32
+    bow: np.ndarray           # (n, t_max, d_bow) fp32 padded
+    lens: np.ndarray          # (n,) int32
+    sim_seconds: float        # modeled device+software time
+    n_blocks: int
+
+
+class StorageTier:
+    def __init__(self, layout: EmbeddingLayout, *,
+                 spec: ssd_lib.StorageSpec = ssd_lib.PM983_PCIE3,
+                 stack: str = "espn", mem_budget_bytes: int | None = None,
+                 t_max: int = 180, qd: int = 64, include_h2d: bool = True,
+                 n_io_threads: int = 4):
+        assert stack in ("espn", "mmap", "swap", "dram")
+        self.layout = layout
+        self.spec = spec
+        self.stack = stack
+        self.t_max = t_max
+        self.qd = qd
+        self.include_h2d = include_h2d
+        self._pool = ThreadPoolExecutor(max_workers=n_io_threads,
+                                        thread_name_prefix="espn-io")
+        self._lock = threading.Lock()
+        budget = mem_budget_bytes if mem_budget_bytes is not None else 0
+        self.page_cache = PageCache(budget, layout.block)
+        if stack == "swap":
+            self.swap_capacity = (mem_budget_bytes or 0) + 32 * 2**30
+        self.stats = {"reads": 0, "docs": 0, "blocks": 0, "sim_seconds": 0.0}
+
+    # -- timing ------------------------------------------------------------
+    def _pages_of(self, ids) -> list[int]:
+        pages = []
+        offs = self.layout.offsets
+        for i in np.asarray(ids, np.int64):
+            s, nb = offs[i]
+            pages.extend(range(int(s), int(s + nb)))
+        return pages
+
+    def _sim_time(self, ids) -> tuple[float, int]:
+        n_blocks = self.layout.blocks_for(ids)
+        bytes_moved = n_blocks * self.layout.block
+        if self.stack == "dram":
+            t = ssd_lib.DRAM.read_time(n_blocks, qd=self.qd)
+        elif self.stack == "espn":
+            t = self.spec.read_time(n_blocks, qd=self.qd)
+        else:
+            pages = self._pages_of(ids)
+            with self._lock:
+                h, m = self.page_cache.access_many(pages)
+            hr = h / max(1, h + m)
+            if self.stack == "mmap":
+                t = ssd_lib.mmap_read_time(self.spec, len(pages), hr)
+            else:
+                if self.layout.nbytes > self.swap_capacity:
+                    raise MemoryError("OOM: index exceeds memory + swap space")
+                t = ssd_lib.swap_read_time(self.spec, len(pages), hr)
+        if self.include_h2d and self.stack != "dram":
+            t += ssd_lib.h2d_time(bytes_moved)
+        return t, n_blocks
+
+    # -- reads ---------------------------------------------------------------
+    def read(self, ids, t_max: int | None = None) -> ReadResult:
+        ids = np.asarray(ids, np.int64)
+        t_max = t_max or self.t_max
+        sim, n_blocks = self._sim_time(ids)
+        cls, bow, lens = gather_docs(self.layout, ids, t_max)
+        with self._lock:
+            self.stats["reads"] += 1
+            self.stats["docs"] += len(ids)
+            self.stats["blocks"] += n_blocks
+            self.stats["sim_seconds"] += sim
+        return ReadResult(cls, bow, lens, sim, n_blocks)
+
+    def read_async(self, ids, t_max: int | None = None) -> Future:
+        return self._pool.submit(self.read, ids, t_max)
+
+    # -- reporting -----------------------------------------------------------
+    def memory_resident_bytes(self) -> int:
+        """Host/device memory this tier requires (ESPN: offsets only)."""
+        meta = self.layout.offsets.nbytes + self.layout.n_tokens.nbytes
+        if self.stack == "dram":
+            return self.layout.nbytes + meta
+        if self.stack in ("mmap", "swap"):
+            return self.page_cache.capacity_pages * self.layout.block + meta
+        return meta
+
+    def close(self):
+        self._pool.shutdown(wait=False)

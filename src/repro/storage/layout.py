@@ -1,0 +1,106 @@
+"""Embedding binary layout: CLS + BOW co-located, block-aligned.
+
+Reproduces ESPN §4.1: the CLS vector and the BOW token matrix of a document
+are packed together and aligned so a typical compressed document costs ONE
+I/O block instead of two. The "disk image" is a single uint8 numpy array;
+an offsets table (kept in host memory, as in the paper) maps doc id ->
+(start_block, n_blocks, n_tokens).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class EmbeddingLayout:
+    blob: np.ndarray              # uint8 disk image (block-aligned)
+    offsets: np.ndarray           # (N, 2) int64: start_block, n_blocks
+    n_tokens: np.ndarray          # (N,) int32
+    d_cls: int
+    d_bow: int
+    dtype: np.dtype               # stored element dtype (e.g. float16/int8)
+    scales: np.ndarray | None     # (N,) fp32 dequant scales (int8/int4 modes)
+    block: int = 4096
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def nbytes(self) -> int:
+        return self.blob.nbytes
+
+    def doc_bytes(self, i: int) -> int:
+        elt = np.dtype(self.dtype).itemsize
+        return (self.d_cls + int(self.n_tokens[i]) * self.d_bow) * elt
+
+    def blocks_for(self, ids) -> int:
+        """Total blocks touched by a set of doc ids (the IO bill)."""
+        return int(self.offsets[np.asarray(ids, np.int64), 1].sum())
+
+
+def pack(cls_embs: np.ndarray, bow_embs: list[np.ndarray], *,
+         dtype=np.float16, scales: np.ndarray | None = None,
+         block: int = 4096) -> EmbeddingLayout:
+    """Build the block-aligned disk image.
+
+    cls_embs: (N, d_cls) fp32; bow_embs: list of (t_i, d_bow) fp32 arrays.
+    Stored as ``dtype`` (fp16 default, int8 with per-doc scale supported).
+    """
+    n = len(bow_embs)
+    d_cls, d_bow = cls_embs.shape[1], bow_embs[0].shape[1]
+    elt = np.dtype(dtype).itemsize
+    offsets = np.zeros((n, 2), np.int64)
+    n_tokens = np.array([b.shape[0] for b in bow_embs], np.int32)
+    sizes = (d_cls + n_tokens.astype(np.int64) * d_bow) * elt
+    n_blocks = (sizes + block - 1) // block
+    starts = np.zeros(n, np.int64)
+    np.cumsum(n_blocks[:-1], out=starts[1:])
+    offsets[:, 0] = starts
+    offsets[:, 1] = n_blocks
+    blob = np.zeros(int(n_blocks.sum()) * block, np.uint8)
+    for i in range(n):
+        rec = np.concatenate([cls_embs[i].ravel(), bow_embs[i].ravel()])
+        if scales is not None:
+            rec = rec / scales[i]
+        rec = rec.astype(dtype)
+        raw = rec.view(np.uint8)
+        s = starts[i] * block
+        blob[s:s + raw.nbytes] = raw
+    return EmbeddingLayout(blob=blob, offsets=offsets, n_tokens=n_tokens,
+                           d_cls=d_cls, d_bow=d_bow, dtype=np.dtype(dtype),
+                           scales=scales, block=block)
+
+
+def unpack_doc(layout: EmbeddingLayout, i: int):
+    """Read one doc back: returns (cls (d_cls,), bow (t_i, d_bow)) fp32."""
+    start, nb = layout.offsets[i]
+    t = int(layout.n_tokens[i])
+    elt = layout.dtype.itemsize
+    raw = layout.blob[start * layout.block:
+                      start * layout.block + (layout.d_cls + t * layout.d_bow) * elt]
+    vals = raw.view(layout.dtype).astype(np.float32)
+    if layout.scales is not None:
+        vals = vals * layout.scales[i]
+    return vals[:layout.d_cls], vals[layout.d_cls:].reshape(t, layout.d_bow)
+
+
+def gather_docs(layout: EmbeddingLayout, ids, t_max: int):
+    """Host-side ragged gather -> padded (len(ids), t_max, d_bow) + lengths.
+
+    This is the numpy fallback for the ``gather_pack`` Pallas kernel (the
+    paper's CUDA restructuring-kernel analogue).
+    """
+    ids = np.asarray(ids, np.int64)
+    out = np.zeros((len(ids), t_max, layout.d_bow), np.float32)
+    cls = np.zeros((len(ids), layout.d_cls), np.float32)
+    lens = np.zeros(len(ids), np.int32)
+    for j, i in enumerate(ids):
+        c, b = unpack_doc(layout, int(i))
+        t = min(b.shape[0], t_max)
+        out[j, :t] = b[:t]
+        cls[j] = c
+        lens[j] = t
+    return cls, out, lens

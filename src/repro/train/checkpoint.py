@@ -1,0 +1,128 @@
+"""Sharded checkpointing with elastic restore (fault tolerance substrate).
+
+Layout per step:  <dir>/step_<n>/
+    manifest.json        tree structure + shapes/dtypes (committed LAST ->
+                         a crashed save is never picked up by restore)
+    <leaf-path>.npy      one file per pytree leaf
+
+Restore accepts a *different* mesh/sharding than the save used (elastic
+resharding): leaves are loaded on host and device_put against the target
+NamedSharding. Saves can run async (background thread) so the train loop
+keeps stepping; `keep_last` old checkpoints are garbage-collected.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1] if prefix.endswith("/") else prefix] = tree
+    return out
+
+
+def _unflatten(flat):
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        d = tree
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_last: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: dict, block: bool = False):
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        if self.async_save and not block:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_state)
+
+    def _write(self, step: int, host_state: dict):
+        path = os.path.join(self.dir, f"step_{step}")
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_state)
+        manifest = {"step": step, "time": time.time(), "leaves": {}}
+        for name, arr in flat.items():
+            fn = name.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][name] = {"file": fn, "shape": list(arr.shape),
+                                        "dtype": str(arr.dtype)}
+        # commit marker: manifest written last, then atomic rename
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, *, shardings=None):
+        """shardings: optional pytree of NamedSharding (elastic reshard)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step}")
+        manifest = json.load(open(os.path.join(path, "manifest.json")))
+        flat = {}
+        for name, meta in manifest["leaves"].items():
+            flat[name] = np.load(os.path.join(path, meta["file"]))
+        state = _unflatten(flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+            state = _unflatten({
+                k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
+                for k, v in _flatten(state).items()})
+        return step, state

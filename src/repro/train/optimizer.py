@@ -1,0 +1,113 @@
+"""Sharded AdamW (+ SGD-momentum) as pure functions.
+
+Optimizer state mirrors the parameter pytree, so its sharding specs are the
+parameter specs (ZeRO-3: m/v shard exactly like the FSDP'd params). Global
+grad-norm clipping runs in fp32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+                        tree), g
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def init_shapes(self, param_shapes):
+        sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return {"m": jax.tree.map(sds, param_shapes),
+                "v": jax.tree.map(sds, param_shapes),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def schedule(self, step):
+        warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
+        return self.lr * warm
+
+    def update(self, grads, state, params):
+        if self.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        lr = self.schedule(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = self.b1 * m + (1 - self.b1) * gf
+            v_new = self.b2 * v + (1 - self.b2) * gf * gf
+            mh = m_new / b1c
+            vh = v_new / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (delta + self.weight_decay * pf)
+            return pf.astype(p.dtype), m_new, v_new
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+@dataclass(frozen=True)
+class SGDM:
+    lr: float = 1e-2
+    momentum: float = 0.9
+    grad_clip: float = 0.0
+
+    def init(self, params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def init_shapes(self, param_shapes):
+        return {"m": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape,
+                                                                 jnp.float32),
+                                  param_shapes),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        gnorm = global_norm(grads)
+        if self.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        new_m = jax.tree.map(lambda m, g: self.momentum * m
+                             + g.astype(jnp.float32), state["m"], grads)
+        new_p = jax.tree.map(lambda p, m: (p.astype(jnp.float32)
+                                           - self.lr * m).astype(p.dtype),
+                             params, new_m)
+        return new_p, {"m": new_m, "step": state["step"] + 1}, gnorm

@@ -1,0 +1,143 @@
+"""Training loop with gradient accumulation, periodic + on-signal
+checkpointing, deterministic resume, and optional gradient compression.
+
+Fault-tolerance posture (DESIGN §6): the data pipeline is step-indexed (the
+batch for step i is a pure function of (seed, i)), so restart-from-checkpoint
+replays identically; SIGTERM triggers an emergency checkpoint before exit
+(preemption handling); checkpoints restore onto a different mesh (elastic).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compress import EFCompressor
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    grad_accum: int = 1
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 3
+    grad_compression: bool = False
+
+
+def make_train_step(loss_fn: Callable, optimizer, *, grad_accum: int = 1,
+                    compressor: EFCompressor | None = None):
+    """loss_fn(params, batch) -> (loss, metrics). Returns jittable
+    step(params, opt_state, batch[, ef_state]) with microbatch accumulation
+    (batch's leading dim is split into `grad_accum` microbatches)."""
+
+    def step(params, opt_state, batch, ef_state=None):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = {}
+        if compressor is not None:
+            grads, ef_state = compressor.compress(grads, ef_state)
+        new_p, new_o, gnorm = optimizer.update(grads, opt_state, params)
+        out_metrics = {"loss": loss, "gnorm": gnorm, **metrics}
+        if compressor is not None:
+            return new_p, new_o, ef_state, out_metrics
+        return new_p, new_o, out_metrics
+
+    return step
+
+
+@dataclass
+class Trainer:
+    cfg: TrainerConfig
+    loss_fn: Callable                     # (params, batch) -> (loss, aux)
+    optimizer: object
+    data_fn: Callable                     # step -> batch  (deterministic)
+    params: dict
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self.ckpt = CheckpointManager(self.cfg.ckpt_dir,
+                                      keep_last=self.cfg.keep_last)
+        self.compressor = EFCompressor() if self.cfg.grad_compression else None
+        self.step_fn = jax.jit(make_train_step(
+            self.loss_fn, self.optimizer, grad_accum=self.cfg.grad_accum,
+            compressor=self.compressor))
+        self.opt_state = self.optimizer.init(self.params)
+        self.ef_state = (self.compressor.init(self.params)
+                         if self.compressor else None)
+        self.start_step = 0
+        self._interrupted = False
+
+    # -- fault tolerance -------------------------------------------------
+    def _emergency(self, signum, frame):
+        self._interrupted = True
+
+    def maybe_resume(self) -> int:
+        step, state = self.ckpt.restore()
+        if state is not None:
+            self.params = state["params"]
+            self.opt_state = state["opt_state"]
+            if self.compressor and "ef_state" in state:
+                self.ef_state = state["ef_state"]
+            self.start_step = step
+        return self.start_step
+
+    def _save(self, step: int, block: bool = False):
+        state = {"params": self.params, "opt_state": self.opt_state}
+        if self.compressor:
+            state["ef_state"] = self.ef_state
+        self.ckpt.save(step, state, block=block)
+
+    # -- loop --------------------------------------------------------------
+    def run(self, verbose: bool = True) -> list[dict]:
+        old = signal.signal(signal.SIGTERM, self._emergency)
+        try:
+            for step in range(self.start_step, self.cfg.total_steps):
+                batch = self.data_fn(step)
+                t0 = time.time()
+                if self.compressor:
+                    self.params, self.opt_state, self.ef_state, m = \
+                        self.step_fn(self.params, self.opt_state, batch,
+                                     self.ef_state)
+                else:
+                    self.params, self.opt_state, m = self.step_fn(
+                        self.params, self.opt_state, batch)
+                m = {k: float(v) for k, v in m.items()}
+                m["step"] = step
+                m["step_s"] = time.time() - t0
+                self.history.append(m)
+                if verbose and step % self.cfg.log_every == 0:
+                    print(f"step {step}: loss={m['loss']:.4f} "
+                          f"gnorm={m.get('gnorm', 0):.3f} "
+                          f"({m['step_s']*1e3:.0f}ms)", flush=True)
+                if (step + 1) % self.cfg.ckpt_every == 0:
+                    self._save(step + 1)
+                if self._interrupted:
+                    self._save(step + 1, block=True)   # preemption checkpoint
+                    break
+        finally:
+            signal.signal(signal.SIGTERM, old)
+        self.ckpt.wait()
+        return self.history

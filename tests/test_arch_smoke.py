@@ -1,0 +1,158 @@
+"""Per-assigned-architecture smoke tests: reduced same-family config, one
+forward/train step on CPU, asserting output shapes + no NaNs (the FULL
+configs are exercised compile-only by launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs
+
+LM_ARCHS = ["qwen2-0.5b", "qwen2-72b", "smollm-135m", "granite-moe-1b-a400m",
+            "llama4-scout-17b-a16e"]
+RECSYS_ARCHS = ["fm", "dlrm-mlperf", "autoint", "two-tower-retrieval"]
+
+
+def test_registry_has_all_assigned_archs():
+    expected = set(LM_ARCHS + RECSYS_ARCHS + ["gatedgcn", "colberter"])
+    assert expected.issubset(set(list_archs()))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    from repro.models import transformer as M
+    from repro.train.optimizer import AdamW
+    from repro.train.trainer import make_train_step
+
+    cfg = M.smoke_config(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    batch = {"tokens": toks, "targets": toks}
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(lambda p, b: M.loss_fn(cfg, p, b), opt))
+    new_p, _, m = step(params, opt.init(params), batch)
+    assert np.isfinite(m["loss"])
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_p)):
+        assert a.shape == b.shape
+        assert not np.isnan(np.asarray(b)).any()
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_prefill_decode(arch):
+    from repro.models import transformer as M
+    cfg = M.smoke_config(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    cache = M.init_cache(cfg, 2, 12)
+    logits, cache = M.prefill(cfg, params, toks, cache)
+    assert logits.shape == (2, M.padded_vocab(cfg.vocab_size))
+    assert not np.isnan(np.asarray(logits)).any()
+    lg, cache = M.decode_step(cfg, params, toks[:, :1],
+                              jnp.full((2,), 8, jnp.int32), cache)
+    assert lg.shape == logits.shape
+    assert int(cache["length"]) == 9
+    assert not np.isnan(np.asarray(lg)).any()
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke(arch):
+    from repro.models import recsys as R
+    from repro.train.optimizer import AdamW
+    from repro.train.trainer import make_train_step
+
+    cfg = R.smoke_config(get_config(arch))
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B = 16
+    if cfg.variant == "two-tower":
+        batch = {"query_ids": jnp.asarray(rng.integers(0, 900, (B, cfg.n_query_fields)), jnp.int32),
+                 "item_ids": jnp.asarray(rng.integers(0, 900, (B, cfg.n_item_fields)), jnp.int32),
+                 "labels": jnp.zeros((B,), jnp.int32)}
+    else:
+        batch = {"sparse_ids": jnp.asarray(rng.integers(0, 900, (B, cfg.n_sparse)), jnp.int32),
+                 "labels": jnp.ones((B,), jnp.float32)}
+        if cfg.n_dense:
+            batch["dense"] = jnp.asarray(rng.standard_normal((B, cfg.n_dense)), jnp.float32)
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(lambda p, b: R.loss_fn(cfg, p, b), opt))
+    _, _, m = step(params, opt.init(params), batch)
+    assert np.isfinite(m["loss"])
+    scores = R.forward(cfg, params, {k: v for k, v in batch.items()
+                                     if k != "labels"})
+    assert scores.shape == (B,)
+    assert not np.isnan(np.asarray(scores)).any()
+
+
+def test_gnn_smoke():
+    from repro.models import gnn as G
+    from repro.train.optimizer import AdamW
+    from repro.train.trainer import make_train_step
+
+    cfg = G.smoke_config(get_config("gatedgcn"))
+    params = G.init_params(cfg, jax.random.PRNGKey(0), d_in=12)
+    rng = np.random.default_rng(0)
+    n, e = 40, 120
+    batch = {"node_feats": jnp.asarray(rng.standard_normal((n, 12)), jnp.float32),
+             "edge_src": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+             "edge_dst": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.n_classes, n), jnp.int32)}
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(lambda p, b: G.loss_fn(cfg, p, b), opt))
+    _, _, m = step(params, opt.init(params), batch)
+    assert np.isfinite(m["loss"])
+    logits = G.forward(cfg, params, batch["node_feats"], batch["edge_src"],
+                       batch["edge_dst"])
+    assert logits.shape == (n, cfg.n_classes)
+    assert not np.isnan(np.asarray(logits)).any()
+
+
+def test_gnn_padded_edges_are_dropped():
+    """OOB dst (= n_nodes) must not change results (the pad512 contract)."""
+    from repro.models import gnn as G
+    cfg = G.smoke_config(get_config("gatedgcn"))
+    params = G.init_params(cfg, jax.random.PRNGKey(0), d_in=6)
+    rng = np.random.default_rng(1)
+    n, e = 20, 50
+    nf = jnp.asarray(rng.standard_normal((n, 6)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    base = G.forward(cfg, params, nf, src, dst)
+    src_p = jnp.concatenate([src, jnp.zeros(14, jnp.int32)])
+    dst_p = jnp.concatenate([dst, jnp.full(14, n, jnp.int32)])
+    padded = G.forward(cfg, params, nf, src_p, dst_p)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(padded),
+                               atol=1e-5)
+
+
+def test_colberter_smoke():
+    from repro.models import colberter as C
+    cfg = C.smoke_config(get_config("colberter"))
+    params = C.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 12)), jnp.int32)
+    toks = toks.at[:, 10:].set(-1)
+    cls, bow, mask = C.encode(cfg, params, toks)
+    assert cls.shape == (4, cfg.d_cls)
+    assert bow.shape == (4, 12, cfg.d_bow)
+    # normalized + masked
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(cls), axis=-1), 1.0,
+                               atol=1e-3)
+    assert np.abs(np.asarray(bow[:, 10:])).max() == 0.0
+    loss, m = C.contrastive_loss(cfg, params, {"query_tokens": toks[:, :6],
+                                               "pos_doc_tokens": toks})
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS[:2])
+def test_lm_scan_vs_unrolled(arch):
+    from repro.models import transformer as M
+    cfg = M.smoke_config(get_config(arch)).scaled(dtype=jnp.float32)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 10)), jnp.int32)
+    batch = {"tokens": toks, "targets": toks}
+    l1, _ = M.loss_fn(cfg, params, batch)
+    l2, _ = M.loss_fn(cfg.scaled(scan_layers=False), params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-5

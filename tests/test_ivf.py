@@ -1,0 +1,86 @@
+"""IVF index: exactness at full probe, recall monotonicity, quantization,
+two-phase snapshot semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ivf import (ANNCostModel, build_ivf, probe_cells, scan_cells,
+                            search, search_two_phase)
+
+
+@pytest.fixture(scope="module")
+def corpus_and_index(small_corpus):
+    index = build_ivf(small_corpus.cls, ncells=32, iters=6)
+    return small_corpus, index
+
+
+def test_full_probe_matches_brute_force(corpus_and_index):
+    c, index = corpus_and_index
+    q = jnp.asarray(c.queries_cls[:8])
+    scores, ids = search(index, q, nprobe=index.ncells, k=10)
+    brute = np.asarray(c.queries_cls[:8]) @ c.cls.T
+    for b in range(8):
+        top_brute = set(np.argsort(-brute[b])[:10].tolist())
+        got = set(np.asarray(ids[b]).tolist())
+        # max_cell clamping may drop a couple of docs from huge cells
+        assert len(top_brute & got) >= 8
+
+
+def test_recall_monotone_in_nprobe(corpus_and_index):
+    c, index = corpus_and_index
+    q = jnp.asarray(c.queries_cls)
+    prev = -1.0
+    for nprobe in (1, 4, 16, 32):
+        _, ids = search(index, q, nprobe, k=100)
+        ids = np.asarray(ids)
+        hit = np.mean([int(next(iter(c.qrels[i]))) in ids[i]
+                       for i in range(len(c.qrels))])
+        assert hit >= prev - 0.05        # allow small non-monotonic noise
+        prev = max(prev, hit)
+
+
+def test_two_phase_final_equals_single_phase(corpus_and_index):
+    c, index = corpus_and_index
+    q = jnp.asarray(c.queries_cls[:4])
+    s1, i1 = search(index, q, nprobe=8, k=50)
+    (sa, ia), (sf, if_), _ = search_two_phase(index, q, 8, 50, delta=2)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(if_))
+    # approx candidate set comes from a subset of probes
+    for b in range(4):
+        a = set(np.asarray(ia[b]).tolist()) - {-1}
+        f = set(np.asarray(if_[b]).tolist()) - {-1}
+        assert a  # non-empty
+
+
+def test_chunked_scan_matches_single_block(corpus_and_index):
+    c, index = corpus_and_index
+    q = jnp.asarray(c.queries_cls[:4])
+    probe = probe_cells(index.centroids, q, nprobe=16)
+    s1, i1 = scan_cells(index.cell_ids, index.cell_vecs, index.cell_scale,
+                        q, probe, k=20, probe_chunk=64)
+    s2, i2 = scan_cells(index.cell_ids, index.cell_vecs, index.cell_scale,
+                        q, probe, k=20, probe_chunk=3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_int8_index_score_error_bounded(small_corpus):
+    c = small_corpus
+    i32 = build_ivf(c.cls, ncells=16, iters=4, quant="fp32")
+    i8 = build_ivf(c.cls, ncells=16, iters=4, quant="int8")
+    q = jnp.asarray(c.queries_cls[:4])
+    s32, id32 = search(i32, q, nprobe=16, k=20)
+    s8, id8 = search(i8, q, nprobe=16, k=20)
+    np.testing.assert_allclose(np.asarray(s32), np.asarray(s8), atol=0.02)
+    assert i8.memory_bytes() < i32.memory_bytes() * 0.45
+
+
+def test_cost_model_budget_positive():
+    cm = ANNCostModel()
+
+    class FakeIdx:
+        ncells = 1000
+        cell_sizes = np.full(1000, 270)
+    budget = cm.prefetch_budget(FakeIdx(), nprobe=300, delta=30)
+    assert budget > 0
+    assert cm.time(FakeIdx(), 300) > cm.time(FakeIdx(), 30)

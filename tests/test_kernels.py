@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.gather_pack.gather_pack import gather_pack_pallas
+from repro.kernels.gather_pack.ref import gather_pack_ref
+from repro.kernels.ivf_scan.ivf_scan import ivf_scan_pallas
+from repro.kernels.ivf_scan.ref import ivf_scan_ref
+from repro.kernels.maxsim.maxsim import maxsim_pallas
+from repro.kernels.maxsim.ref import maxsim_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------- maxsim
+MAXSIM_SHAPES = [
+    (24, 37, 64, 32, 16), (32, 128, 180, 32, 16), (5, 9, 17, 128, 8),
+    (1, 1, 1, 32, 16), (8, 64, 96, 64, 32), (16, 50, 33, 48, 16),
+]
+
+
+@pytest.mark.parametrize("lq,k,t,d,bk", MAXSIM_SHAPES)
+def test_maxsim_shapes(lq, k, t, d, bk):
+    q = jnp.asarray(RNG.standard_normal((lq, d)), jnp.float32)
+    qm = jnp.asarray(RNG.random(lq) > 0.2, jnp.float32)
+    docs = jnp.asarray(RNG.standard_normal((k, t, d)), jnp.float32)
+    lens = jnp.asarray(RNG.integers(1, t + 1, k), jnp.int32)
+    out = maxsim_pallas(q, qm, docs, lens, block_docs=bk)
+    ref = maxsim_ref(q, qm, docs, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_maxsim_dtypes(dtype):
+    q = jnp.asarray(RNG.standard_normal((16, 32)), dtype)
+    qm = jnp.ones(16)
+    docs = jnp.asarray(RNG.standard_normal((32, 48, 32)), dtype)
+    lens = jnp.asarray(RNG.integers(1, 49, 32), jnp.int32)
+    out = maxsim_pallas(q, qm, docs, lens)
+    ref = maxsim_ref(q, qm, docs, lens)
+    scale = max(1.0, float(np.abs(np.asarray(ref)).max()))
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    assert float(np.abs(np.asarray(out) - np.asarray(ref)).max()) / scale < tol
+
+
+@settings(max_examples=20, deadline=None)
+@given(lq=st.integers(1, 40), k=st.integers(1, 50), t=st.integers(1, 64),
+       d=st.sampled_from([16, 32, 64]), seed=st.integers(0, 2**16))
+def test_maxsim_hypothesis(lq, k, t, d, seed):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((lq, d)), jnp.float32)
+    qm = jnp.asarray(r.random(lq) > 0.3, jnp.float32)
+    docs = jnp.asarray(r.standard_normal((k, t, d)), jnp.float32)
+    lens = jnp.asarray(r.integers(1, t + 1, k), jnp.int32)
+    out = maxsim_pallas(q, qm, docs, lens, block_docs=8)
+    ref = maxsim_ref(q, qm, docs, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+# -------------------------------------------------------------------- ivf_scan
+@pytest.mark.parametrize("b,n,d", [(4, 300, 128), (32, 1000, 64), (1, 37, 32),
+                                   (8, 128, 16), (3, 513, 128)])
+def test_ivf_scan_shapes(b, n, d):
+    q = jnp.asarray(RNG.standard_normal((b, d)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((n, d)), jnp.float32)
+    out = ivf_scan_pallas(q, c)
+    ref = ivf_scan_ref(q, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ivf_scan_padding_masked():
+    """Padded tail centroids must come back as NEG (never win top-k)."""
+    q = jnp.asarray(RNG.standard_normal((2, 32)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((100, 32)), jnp.float32)
+    out = np.asarray(ivf_scan_pallas(q, c, block_n=64))
+    assert out.shape == (2, 100)
+    assert np.isfinite(out).all()
+
+
+# ----------------------------------------------------------------- gather_pack
+@pytest.mark.parametrize("r,k,t,d", [(500, 8, 32, 32), (100, 3, 7, 16),
+                                     (64, 16, 8, 8)])
+def test_gather_pack_shapes(r, k, t, d):
+    pool = jnp.asarray(RNG.standard_normal((r, d)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(-1, r, (k, t)), jnp.int32)
+    out = gather_pack_pallas(pool, idx)
+    ref = gather_pack_ref(pool, idx)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(2, 200), k=st.integers(1, 12), t=st.integers(1, 24),
+       seed=st.integers(0, 2**16))
+def test_gather_pack_hypothesis(r, k, t, seed):
+    rr = np.random.default_rng(seed)
+    pool = jnp.asarray(rr.standard_normal((r, 8)), jnp.float32)
+    idx = jnp.asarray(rr.integers(-1, r, (k, t)), jnp.int32)
+    out = gather_pack_pallas(pool, idx)
+    ref = gather_pack_ref(pool, idx)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

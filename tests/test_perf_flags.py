@@ -1,0 +1,54 @@
+"""Perf-iteration flags must not change model semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import transformer as T
+from repro.models.attention import blockwise_attention, reference_attention
+
+
+@pytest.mark.parametrize("kw,tol", [
+    (dict(unroll=True), 1e-4),
+    (dict(causal_skip=True), 1e-4),
+    (dict(causal_skip=True, unroll=True), 1e-4),
+    (dict(score_dtype=jnp.bfloat16), 0.05),
+])
+def test_attention_flag_equivalence(kw, tol):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (2, 48, 6, 16))
+    k = jax.random.normal(k2, (2, 48, 3, 16))
+    v = jax.random.normal(k3, (2, 48, 3, 16))
+    ref = reference_attention(q, k, v, causal=True)
+    out = blockwise_attention(q, k, v, causal=True, chunk=12, **kw)
+    assert float(jnp.abs(out - ref).max()) < tol
+
+
+def test_transformer_causal_skip_loss_equal():
+    cfg = T.smoke_config(get_config("smollm-135m")).scaled(dtype=jnp.float32)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 64)), jnp.int32)
+    batch = {"tokens": toks, "targets": toks}
+    l0, _ = T.loss_fn(cfg, params, batch)
+    l1, _ = T.loss_fn(cfg.scaled(causal_skip=True), params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+
+
+def test_decode_onehot_update_equal():
+    cfg = T.smoke_config(get_config("qwen2-0.5b")).scaled(dtype=jnp.float32)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 6)), jnp.int32)
+    c0 = T.init_cache(cfg, 2, 8)
+    c1 = T.init_cache(cfg, 2, 8)
+    cfg1 = cfg.scaled(onehot_cache_update=True)
+    for i in range(4):
+        pos = jnp.full((2,), i, jnp.int32)
+        lg0, c0 = T.decode_step(cfg, params, toks[:, i:i+1], pos, c0)
+        lg1, c1 = T.decode_step(cfg1, params, toks[:, i:i+1], pos, c1)
+        np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(c0["k"]), np.asarray(c1["k"]),
+                                   atol=1e-6)

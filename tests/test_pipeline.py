@@ -1,0 +1,43 @@
+"""Step-indexed sharded data pipeline: determinism + prefetch."""
+import numpy as np
+
+from repro.data.pipeline import PipelineConfig, ShardedPipeline, lm_generator
+
+
+def test_deterministic_replay():
+    cfg = PipelineConfig(global_batch=8, seed=7)
+    p1 = ShardedPipeline(cfg, lm_generator(100, 16))
+    p2 = ShardedPipeline(cfg, lm_generator(100, 16))
+    for step in (0, 3, 11):
+        a = p1.batch_for(step)
+        b = p2.batch_for(step)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+
+def test_steps_are_distinct():
+    p = ShardedPipeline(PipelineConfig(global_batch=4), lm_generator(100, 8))
+    a = p.batch_for(0)
+    b = p.batch_for(1)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_prefetch_thread_order():
+    p = ShardedPipeline(PipelineConfig(global_batch=4, prefetch=3),
+                        lm_generator(50, 8)).start(first_step=5)
+    steps = [p.next()[0] for _ in range(4)]
+    p.stop()
+    assert steps == [5, 6, 7, 8]
+
+
+def test_resume_mid_stream_matches():
+    """Restarting the prefetcher at step k yields the same batch as a cold
+    pipeline asked for step k (checkpoint-restart determinism)."""
+    cfg = PipelineConfig(global_batch=4, seed=3)
+    cold = ShardedPipeline(cfg, lm_generator(60, 8)).batch_for(9)
+    warm = ShardedPipeline(cfg, lm_generator(60, 8)).start(first_step=9)
+    step, batch = warm.next()
+    warm.stop()
+    assert step == 9
+    np.testing.assert_array_equal(np.asarray(cold["tokens"]),
+                                  np.asarray(batch["tokens"]))

@@ -1,0 +1,63 @@
+"""ESPN prefetcher: hit-rate properties + paper equations (2)-(4)."""
+import numpy as np
+import pytest
+
+from repro.core.ivf import ANNCostModel, build_ivf
+from repro.core.prefetcher import ANNPrefetcher
+from repro.storage.io_engine import StorageTier
+from repro.storage.layout import pack
+
+
+@pytest.fixture(scope="module")
+def setup(small_corpus):
+    c = small_corpus
+    index = build_ivf(c.cls, ncells=32, iters=6)
+    layout = pack(c.cls, c.bow, dtype=np.float16)
+    tier = StorageTier(layout, stack="espn", t_max=64)
+    return c, index, layout, tier
+
+
+def test_hit_rate_increases_with_prefetch_step(setup):
+    c, index, layout, tier = setup
+    rates = []
+    for step in (0.1, 0.3, 0.6, 1.0):
+        pf = ANNPrefetcher(index, tier, prefetch_step=step)
+        res = pf.run_batch(c.queries_cls[:16], nprobe=16, k=100, fetch=False)
+        rates.append(np.mean([r.stats.hit_rate for r in res]))
+    assert rates[-1] == 1.0                     # delta = eta -> perfect
+    assert rates[2] >= rates[0] - 0.02          # monotone-ish
+
+
+def test_prefetched_union_misses_equals_final(setup):
+    c, index, layout, tier = setup
+    pf = ANNPrefetcher(index, tier, prefetch_step=0.25)
+    res = pf.run_batch(c.queries_cls[:8], nprobe=16, k=50)
+    for r in res:
+        hits = set(r.doc_ids[r.hit_mask].tolist())
+        misses = set(r.doc_ids[~r.hit_mask].tolist())
+        assert hits | misses == set(r.doc_ids.tolist())
+        assert hits.issubset(set(r.prefetched))
+        assert r.stats.n_hits + r.stats.n_misses == len(r.doc_ids)
+
+
+def test_budget_equation(setup):
+    """PrefetchBudget = ANNTime(eta) - ANNTime(delta)  (paper eq. 2)."""
+    c, index, layout, tier = setup
+    cm = ANNCostModel()
+    pf = ANNPrefetcher(index, tier, prefetch_step=0.25, cost_model=cm)
+    eta = 16
+    delta = pf.delta(eta)
+    assert delta == 4
+    res = pf.run_batch(c.queries_cls[:2], nprobe=eta, k=20, fetch=False)
+    expect = cm.time(index, eta) - cm.time(index, delta)
+    assert abs(res[0].stats.budget_s - expect) < 1e-12
+
+
+def test_batch_threshold_equation(setup):
+    """threshold = BW * budget / bytes_per_query  (paper eq. 4)."""
+    c, index, layout, tier = setup
+    pf = ANNPrefetcher(index, tier, prefetch_step=0.25)
+    bytes_per_query = 1000 * 4096
+    th = pf.batch_threshold(16, bytes_per_query)
+    budget = pf.cost.prefetch_budget(index, 16, pf.delta(16))
+    assert abs(th - tier.spec.seq_bw * budget / bytes_per_query) < 1e-9

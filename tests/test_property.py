@@ -1,0 +1,116 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.maxsim import maxsim_scores
+from repro.core.quantize import dequantize, quantize
+from repro.models.embedding import embedding_bag, embedding_bag_ref
+from repro.models.layers import cross_entropy_logits
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 60), d=st.integers(1, 16),
+       n_bags=st.integers(1, 8), seed=st.integers(0, 2**16),
+       combiner=st.sampled_from(["sum", "mean"]))
+def test_embedding_bag_matches_oracle(n, d, n_bags, seed, combiner):
+    r = np.random.default_rng(seed)
+    table = jnp.asarray(r.standard_normal((n, d)), jnp.float32)
+    total = int(r.integers(0, 30))
+    ids = jnp.asarray(r.integers(0, n, total), jnp.int32)
+    cuts = np.sort(r.integers(0, total + 1, n_bags - 1)) if n_bags > 1 else []
+    offsets = jnp.asarray(np.concatenate([[0], cuts, [total]]), jnp.int32)
+    got = embedding_bag(table, ids, offsets, combiner=combiner,
+                        compute_dtype=jnp.float32)
+    ref = embedding_bag_ref(table, ids, offsets, combiner=combiner)
+    np.testing.assert_allclose(np.asarray(got), ref, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 32), d=st.integers(2, 64),
+       mode=st.sampled_from(["fp16", "int8", "int4"]),
+       seed=st.integers(0, 2**16))
+def test_quantize_roundtrip_error_bound(rows, d, mode, seed):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((rows, d)).astype(np.float32)
+    stored, scales = quantize(x, mode)
+    back = dequantize(stored, scales, mode, d=d)[..., :d]
+    amax = np.abs(x).max(axis=-1, keepdims=True) + 1e-9
+    tol = {"fp16": 1e-3, "int8": 1.0 / 127, "int4": 1.0 / 7}[mode]
+    assert (np.abs(back - x) / amax).max() <= tol * 0.75 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), k=st.integers(1, 6), lq=st.integers(1, 8),
+       t=st.integers(1, 12), seed=st.integers(0, 2**16))
+def test_maxsim_permutation_invariance(b, k, lq, t, seed):
+    """MaxSim is invariant to doc-token order and query-token order changes
+    only reorder the sum (same total)."""
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((b, lq, 8)), jnp.float32)
+    qm = jnp.ones((b, lq), bool)
+    d = r.standard_normal((b, k, t, 8)).astype(np.float32)
+    dm = np.ones((b, k, t), bool)
+    s1 = maxsim_scores(q, qm, jnp.asarray(d), jnp.asarray(dm))
+    perm = r.permutation(t)
+    s2 = maxsim_scores(q, qm, jnp.asarray(d[:, :, perm]), jnp.asarray(dm))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+    qperm = r.permutation(lq)
+    s3 = maxsim_scores(q[:, qperm], qm, jnp.asarray(d), jnp.asarray(dm))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s3), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), v=st.integers(2, 50), seed=st.integers(0, 2**16))
+def test_cross_entropy_matches_manual(b, v, seed):
+    r = np.random.default_rng(seed)
+    logits = jnp.asarray(r.standard_normal((b, v)), jnp.float32)
+    targets = jnp.asarray(r.integers(0, v, b), jnp.int32)
+    got = cross_entropy_logits(logits, targets)
+    probs = jax.nn.log_softmax(logits, axis=-1)
+    ref = -np.asarray(probs)[np.arange(b), np.asarray(targets)]
+    np.testing.assert_allclose(np.asarray(got), ref, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 200), k=st.integers(1, 16), seed=st.integers(0, 2**16))
+def test_topk_merge_equals_direct(n, k, seed):
+    from repro.core.ivf import _merge_topk
+    r = np.random.default_rng(seed)
+    s = r.standard_normal((2, n)).astype(np.float32)
+    i = np.tile(np.arange(n), (2, 1)).astype(np.int32)
+    half = n // 2
+    k = min(k, half) if half else 1
+    import jax.numpy as jnp
+    s1, i1 = jax.lax.top_k(jnp.asarray(s[:, :half]), k) if half else (None, None)
+    s2, i2 = jax.lax.top_k(jnp.asarray(s[:, half:]), min(k, n - half))
+    if half:
+        idx1 = jnp.take_along_axis(jnp.asarray(i[:, :half]), i1, axis=1)
+        idx2 = jnp.take_along_axis(jnp.asarray(i[:, half:]) , i2, axis=1)
+        ms, mi = _merge_topk(s1, idx1, s2, idx2, k=k)
+        ds, di = jax.lax.top_k(jnp.asarray(s), k)
+        np.testing.assert_allclose(np.asarray(ms), np.asarray(ds), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), step=st.sampled_from([0.2, 0.5, 1.0]))
+def test_prefetch_delta_eta_subset_property(seed, step):
+    """Scanning a prefix of the probe order yields candidates whose scores
+    are a subset of (<=) the final scores per doc."""
+    from repro.core.ivf import build_ivf, search_two_phase
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((500, 16)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=-1, keepdims=True)
+    index = build_ivf(x, ncells=8, iters=3, seed=seed)
+    q = jnp.asarray(x[:2] + 0.1)
+    (sa, ia), (sf, if_), _ = search_two_phase(index, q, 8, 20,
+                                              delta=max(1, int(8 * step)))
+    # every approx candidate that survives to final keeps the same score
+    for b in range(2):
+        fin = {int(i): float(s) for i, s in zip(np.asarray(if_[b]),
+                                                np.asarray(sf[b])) if i >= 0}
+        for i, s in zip(np.asarray(ia[b]), np.asarray(sa[b])):
+            if int(i) in fin:
+                assert abs(fin[int(i)] - float(s)) < 1e-4

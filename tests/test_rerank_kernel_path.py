@@ -1,0 +1,27 @@
+"""The ESPN pipeline must produce identical rankings whether MaxSim runs on
+the XLA path or the Pallas kernel (interpret mode)."""
+import numpy as np
+
+from repro.core.espn import ESPNConfig, ESPNRetriever
+from repro.core.ivf import build_ivf
+from repro.storage.io_engine import StorageTier
+from repro.storage.layout import pack
+
+
+def test_pallas_rerank_matches_xla(small_corpus):
+    c = small_corpus
+    index = build_ivf(c.cls, ncells=16, iters=4)
+    layout = pack(c.cls, c.bow, dtype=np.float16)
+    tier = StorageTier(layout, stack="espn", t_max=64)
+    base = ESPNConfig(mode="espn", nprobe=8, k_candidates=50,
+                      prefetch_step=0.3)
+    r_xla = ESPNRetriever(index, tier, base)
+    r_pal = ESPNRetriever(index, tier,
+                          ESPNConfig(**{**base.__dict__, "use_pallas": True}))
+    q = (c.queries_cls[:6], c.queries_bow[:6], c.query_lens[:6])
+    a = r_xla.query_batch(*q)
+    b = r_pal.query_batch(*q)
+    for x, y in zip(a.ranked, b.ranked):
+        np.testing.assert_array_equal(x.doc_ids[:20], y.doc_ids[:20])
+        np.testing.assert_allclose(x.scores[:20], y.scores[:20], atol=1e-3)
+    tier.close()

@@ -1,0 +1,70 @@
+"""Serving engine: continuous batching, hedged reads, end-to-end threads."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import BatchPolicy, ContinuousBatcher, Request, hedged_read
+
+
+def test_continuous_batcher_batches_requests():
+    seen = []
+
+    def handler(batch):
+        seen.append(len(batch))
+        for r in batch:
+            r.result = r.payload * 2
+
+    b = ContinuousBatcher(handler, BatchPolicy(max_batch=4, max_wait_s=0.05)).start()
+    reqs = [Request(i, i) for i in range(8)]
+    for r in reqs:
+        b.submit(r)
+    for r in reqs:
+        assert r.done.wait(5)
+        assert r.result == r.payload * 2
+    b.stop()
+    assert sum(seen) == 8
+    assert max(seen) >= 2                        # actually batched
+
+
+def test_hedged_read_mitigates_straggler():
+    draws = iter([0.100, 0.002])                 # straggler then fast replica
+    res, lat, hedged = hedged_read(lambda ids: "data", [1],
+                                   hedge_after_s=0.005,
+                                   sampler=lambda: next(draws))
+    assert hedged
+    assert res == "data"
+    assert lat == pytest.approx(0.007)
+
+    res, lat, hedged = hedged_read(lambda ids: "data", [1],
+                                   hedge_after_s=0.005,
+                                   sampler=lambda: 0.001)
+    assert not hedged and lat == 0.001
+
+
+def test_retrieval_server_end_to_end(small_corpus):
+    from repro.core.espn import ESPNConfig, ESPNRetriever
+    from repro.core.ivf import build_ivf
+    from repro.serve.engine import RetrievalServer
+    from repro.storage.io_engine import StorageTier
+    from repro.storage.layout import pack
+
+    c = small_corpus
+    index = build_ivf(c.cls, ncells=32, iters=4)
+    layout = pack(c.cls, c.bow, dtype=np.float16)
+    tier = StorageTier(layout, stack="espn", t_max=64)
+    ret = ESPNRetriever(index, tier, ESPNConfig(mode="espn", nprobe=16,
+                                                k_candidates=50,
+                                                prefetch_step=0.3))
+    srv = RetrievalServer(ret, policy=BatchPolicy(max_batch=8,
+                                                  max_wait_s=0.02))
+    reqs = [srv.query_async(c.queries_cls[i], c.queries_bow[i],
+                            int(c.query_lens[i])) for i in range(12)]
+    for r in reqs:
+        assert r.done.wait(30)
+        assert len(r.result.doc_ids) > 0
+    s = srv.stats.summary()
+    assert s["n"] == 12
+    assert s["p99_ms"] > 0
+    srv.shutdown()
+    tier.close()

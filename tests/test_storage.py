@@ -1,0 +1,113 @@
+"""Storage tier: layout roundtrip, timing-model properties, cache emergence."""
+import numpy as np
+import pytest
+
+from repro.storage import ssd as S
+from repro.storage.cache import PageCache
+from repro.storage.io_engine import StorageTier
+from repro.storage.layout import gather_docs, pack, unpack_doc
+
+
+def _mini_layout(n=50, d_cls=16, d_bow=8, seed=0, dtype=np.float16):
+    rng = np.random.default_rng(seed)
+    cls = rng.standard_normal((n, d_cls)).astype(np.float32)
+    bow = [rng.standard_normal((int(t), d_bow)).astype(np.float32)
+           for t in rng.integers(4, 40, n)]
+    return cls, bow, pack(cls, bow, dtype=dtype)
+
+
+def test_pack_unpack_roundtrip():
+    cls, bow, layout = _mini_layout()
+    for i in (0, 7, 49):
+        c, b = unpack_doc(layout, i)
+        np.testing.assert_allclose(c, cls[i], atol=2e-3)
+        np.testing.assert_allclose(b, bow[i], atol=2e-3)
+
+
+def test_cls_bow_colocated_single_block():
+    """Small docs cost exactly ONE block (paper §4.1)."""
+    _, _, layout = _mini_layout()
+    small = [i for i in range(50) if layout.doc_bytes(i) <= 4096]
+    assert small
+    for i in small:
+        assert layout.offsets[i, 1] == 1
+
+
+def test_gather_docs_padding():
+    cls, bow, layout = _mini_layout()
+    ids = [3, 1, 4]
+    c, b, lens = gather_docs(layout, ids, t_max=16)
+    assert b.shape == (3, 16, 8)
+    for j, i in enumerate(ids):
+        t = min(16, bow[i].shape[0])
+        assert lens[j] == t
+        np.testing.assert_allclose(b[j, :t], bow[i][:t], atol=2e-3)
+        if t < 16:
+            assert np.abs(b[j, t:]).max() == 0
+
+
+def test_ssd_timing_monotone():
+    for spec in (S.PM983_PCIE3, S.PM9A3_PCIE4, S.DRAM):
+        ts = [spec.read_time(n) for n in (1, 10, 100, 1000, 10000)]
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+    # DRAM must beat SSD by a lot at every size
+    assert S.DRAM.read_time(1000) < S.PM983_PCIE3.read_time(1000) / 3
+
+
+def test_gds_vs_dram_ratio_calibration():
+    """Paper Fig 8: GDS ~7.2x DRAM access latency for ~1000-doc reads."""
+    n_blocks = 1000
+    gds = S.PM983_PCIE3.read_time(n_blocks) + S.h2d_time(n_blocks * 4096)
+    dram = S.DRAM.read_time(n_blocks)
+    assert 4.0 < gds / dram < 12.0
+
+
+def test_mmap_slower_than_batched_and_budget_sensitive():
+    cls, bow, layout = _mini_layout(n=400)
+    tight = StorageTier(layout, stack="mmap",
+                        mem_budget_bytes=layout.nbytes // 10)
+    roomy = StorageTier(layout, stack="mmap",
+                        mem_budget_bytes=layout.nbytes * 2)
+    ids = np.arange(300)
+    t_tight = tight.read(ids).sim_seconds
+    _ = roomy.read(ids)               # warm the cache
+    t_roomy = roomy.read(ids).sim_seconds
+    assert t_roomy < t_tight          # page cache emergence
+    espn = StorageTier(layout, stack="espn")
+    assert espn.read(ids).sim_seconds < t_tight
+
+
+def test_swap_oom_when_exceeding_capacity():
+    cls, bow, layout = _mini_layout(n=100)
+    tier = StorageTier(layout, stack="swap", mem_budget_bytes=1024)
+    tier.swap_capacity = layout.nbytes // 2
+    with pytest.raises(MemoryError):
+        tier.read(np.arange(10))
+
+
+def test_espn_resident_memory_is_metadata_only():
+    cls, bow, layout = _mini_layout(n=200)
+    espn = StorageTier(layout, stack="espn")
+    dram = StorageTier(layout, stack="dram", mem_budget_bytes=layout.nbytes)
+    assert espn.memory_resident_bytes() < dram.memory_resident_bytes() / 10
+
+
+def test_page_cache_lru():
+    pc = PageCache(capacity_bytes=3 * 4096)
+    for p in (1, 2, 3):
+        assert not pc.access(p)
+    assert pc.access(1)               # hit, moves to MRU
+    assert not pc.access(4)           # evicts 2
+    assert not pc.access(2)           # miss (was evicted)
+    assert pc.access(4)
+
+
+def test_async_read_matches_sync():
+    cls, bow, layout = _mini_layout()
+    tier = StorageTier(layout, stack="espn", t_max=32)
+    ids = [1, 5, 9]
+    sync = tier.read(ids)
+    fut = tier.read_async(ids)
+    async_r = fut.result(timeout=10)
+    np.testing.assert_array_equal(sync.bow, async_r.bow)
+    tier.close()
