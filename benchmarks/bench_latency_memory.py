@@ -7,15 +7,17 @@ which sets the prefetch budget; re-rank count K is chosen so K/N matches the
 paper's 1000/8.8M concentration (hit rates at true paper ratios are measured
 separately in bench_prefetcher on the 1M-doc corpus). The mmap/swap page
 cache is warmed to steady state before measuring.
+
+Every compared mode is a registered ``repro.pipeline`` backend assembled
+around the shared cached index/layout.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import row, scoring_corpus, scoring_index, scoring_layout
-from repro.core.espn import ESPNConfig, ESPNRetriever
 from repro.core.ivf import ANNCostModel
-from repro.storage.io_engine import StorageTier
+from repro.pipeline import Pipeline, PipelineConfig, RetrievalConfig, StorageConfig
 
 K_RERANK = 1000           # the paper re-ranks 1000 candidates/query
 WARM_QUERIES = 8
@@ -37,56 +39,58 @@ def main() -> list[str]:
     cost = paper_scale_cost(index, nprobe)
     out = []
 
-    def one(mode, stack, budget_frac, prefetch=0.1):
-        tier = StorageTier(layout, stack=stack, t_max=180,
-                           mem_budget_bytes=int(layout.nbytes * budget_frac))
-        cfg = ESPNConfig(mode=mode, nprobe=nprobe, k_candidates=K_RERANK,
-                         prefetch_step=prefetch)
-        r = ESPNRetriever(index, tier, cfg, cost_model=cost)
-        if stack in ("mmap", "swap"):
+    def one(mode, budget_frac, prefetch=0.1):
+        cfg = PipelineConfig(
+            storage=StorageConfig(t_max=180, mem_budget_frac=budget_frac),
+            retrieval=RetrievalConfig(mode=mode, nprobe=nprobe,
+                                      k_candidates=K_RERANK,
+                                      prefetch_step=prefetch))
+        pipe = Pipeline.from_artifacts(cfg, index=index, layout=layout,
+                                       corpus=c, cost_model=cost)
+        if pipe.backend.needs_mem_budget:
             # steady-state page cache: the whole index has been touched in
             # random order (hours of prior traffic); LRU keeps budget-worth
             total_pages = layout.nbytes // layout.block
             perm = np.random.default_rng(0).permutation(total_pages)
-            tier.page_cache.access_many(perm.tolist())
-            tier.page_cache.hits = tier.page_cache.misses = 0
+            pipe.tier.page_cache.access_many(perm.tolist())
+            pipe.tier.page_cache.hits = pipe.tier.page_cache.misses = 0
             for i in range(WARM_QUERIES):
-                r.query_batch(c.queries_cls[i:i+1], c.queries_bow[i:i+1],
-                              c.query_lens[i:i+1])
+                pipe.search(c.queries_cls[i:i+1], c.queries_bow[i:i+1],
+                            c.query_lens[i:i+1])
         tot, hr = 0.0, []
         for i in range(WARM_QUERIES, WARM_QUERIES + MEAS_QUERIES):
-            resp = r.query_batch(c.queries_cls[i:i+1], c.queries_bow[i:i+1],
-                                 c.query_lens[i:i+1])
+            resp = pipe.search(c.queries_cls[i:i+1], c.queries_bow[i:i+1],
+                               c.query_lens[i:i+1])
             tot += resp.breakdown.total_s
             hr.append(resp.breakdown.hit_rate)
-        tier.close()
+        pipe.close()
         return tot / MEAS_QUERIES * 1e3, float(np.mean(hr))
 
     for frac in (0.25, 0.5, 0.75, 1.0, 1.5):
         try:
-            ms, _ = one("mmap", "mmap", frac)
+            ms, _ = one("mmap", frac)
             out.append(row(f"latency/mmap/mem={frac:.2f}x", ms * 1e3,
                            f"ms={ms:.1f}"))
         except MemoryError:
             out.append(row(f"latency/mmap/mem={frac:.2f}x", 0.0, "OOM"))
         try:
-            ms, _ = one("swap", "swap", frac)
+            ms, _ = one("swap", frac)
             out.append(row(f"latency/swap/mem={frac:.2f}x", ms * 1e3,
                            f"ms={ms:.1f}"))
         except MemoryError:
             out.append(row(f"latency/swap/mem={frac:.2f}x", 0.0, "OOM"))
-    ms_gds, _ = one("gds", "espn", 0.0)
+    ms_gds, _ = one("gds", 0.0)
     out.append(row("latency/espn-gds-noprefetch", ms_gds * 1e3,
                    f"ms={ms_gds:.1f}"))
-    ms10, hr10 = one("espn", "espn", 0.0, prefetch=0.1)
+    ms10, hr10 = one("espn", 0.0, prefetch=0.1)
     out.append(row("latency/espn-prefetch@10%", ms10 * 1e3,
                    f"ms={ms10:.1f} hit_rate={hr10:.3f}"))
-    ms30, hr30 = one("espn", "espn", 0.0, prefetch=0.3)
+    ms30, hr30 = one("espn", 0.0, prefetch=0.3)
     out.append(row("latency/espn-prefetch@30%", ms30 * 1e3,
                    f"ms={ms30:.1f} hit_rate={hr30:.3f}"))
-    ms_dram, _ = one("dram", "dram", 1.0)
+    ms_dram, _ = one("dram", 1.0)
     out.append(row("latency/dram-cached", ms_dram * 1e3, f"ms={ms_dram:.1f}"))
-    mmap_tight, _ = one("mmap", "mmap", 0.25)
+    mmap_tight, _ = one("mmap", 0.25)
     out.append(row("latency/summary", 0.0,
                    f"espn/dram={ms30/ms_dram:.2f}x "
                    f"mmap/espn={mmap_tight/ms30:.2f}x"))

@@ -2,12 +2,9 @@
 re-ranking; the paper keeps 99.0-99.7% of MRR@10 at rerank 64-128)."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import row, scoring_corpus, scoring_index, scoring_layout
-from repro.core.espn import ESPNConfig, ESPNRetriever
 from repro.core.metrics import mrr_at_k
-from repro.storage.io_engine import StorageTier
+from repro.pipeline import Pipeline, PipelineConfig, RetrievalConfig, StorageConfig
 
 
 def main() -> list[str]:
@@ -15,15 +12,21 @@ def main() -> list[str]:
     index = scoring_index(c)
     layout = scoring_layout(c)
     out = []
-    tier = StorageTier(layout, stack="espn", t_max=180)
     nprobe = max(8, index.ncells // 10)
+    base = Pipeline.from_artifacts(
+        PipelineConfig(storage=StorageConfig(t_max=180),
+                       retrieval=RetrievalConfig(mode="espn", nprobe=nprobe,
+                                                 k_candidates=1000,
+                                                 prefetch_step=0.2)),
+        index=index, layout=layout, corpus=c)
 
     def run(rerank):
-        r = ESPNRetriever(index, tier, ESPNConfig(
-            mode="espn", nprobe=nprobe, k_candidates=1000,
-            prefetch_step=0.2, rerank_count=rerank))
-        resp = r.query_batch(c.queries_cls, c.queries_bow, c.query_lens)
+        pipe = base if rerank is None else base.with_mode(
+            "espn", rerank_count=rerank)
+        resp = pipe.search()
         ranked = [x.doc_ids for x in resp.ranked]
+        if pipe is not base:
+            pipe.close()
         return (mrr_at_k(ranked, c.qrels, 10),
                 resp.breakdown.bytes_read / len(ranked))
 
@@ -36,7 +39,7 @@ def main() -> list[str]:
             f"partial_rerank/top-{rr}", 0.0,
             f"norm_mrr={mrr/max(base_mrr,1e-9):.4f} "
             f"bytes/q={b/1024:.0f}KB bw_saving={base_bytes/max(b,1):.1f}x"))
-    tier.close()
+    base.close()
     return out
 
 

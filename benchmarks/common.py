@@ -2,12 +2,14 @@
 
 The Fig-7 (hit rate) benchmark needs paper-scale ratios (N >> K), i.e. a ~1M
 doc corpus; building it takes minutes, so artifacts are cached under
-``.bench_cache/``. Set REPRO_BENCH_FAST=1 to shrink everything (CI mode).
+``.bench_cache/`` as ``.npz`` files through ``repro.pipeline.persist`` (the
+same save/load path as ``Pipeline.save``) — no re-clustering, and no pickle
+that breaks whenever a dataclass changes shape. Set REPRO_BENCH_FAST=1 to
+shrink everything (CI mode).
 """
 from __future__ import annotations
 
 import os
-import pickle
 
 import numpy as np
 
@@ -15,23 +17,37 @@ CACHE = os.path.join(os.path.dirname(__file__), "..", ".bench_cache")
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 
 
-def cached(name: str, builder):
+def cached(name: str, builder, save, load):
+    """Build-once artifact cache: ``save(obj, path)`` / ``load(path)``."""
     os.makedirs(CACHE, exist_ok=True)
-    path = os.path.join(CACHE, name + (".fast" if FAST else "") + ".pkl")
+    path = os.path.join(CACHE, name + (".fast" if FAST else "") + ".npz")
     if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
+        return load(path)
     obj = builder()
-    with open(path, "wb") as f:
-        pickle.dump(obj, f)
+    save(obj, path)
     return obj
+
+
+def _cached_corpus(name: str, builder):
+    from repro.pipeline import persist
+    return cached(name, builder, persist.save_corpus, persist.load_corpus)
+
+
+def _cached_index(name: str, builder):
+    from repro.pipeline import persist
+    return cached(name, builder, persist.save_index, persist.load_index)
+
+
+def _cached_layout(name: str, builder):
+    from repro.pipeline import persist
+    return cached(name, builder, persist.save_layout, persist.load_layout)
 
 
 def v1_like_corpus():
     """MS-MARCO-v1-like ratios: docs/cell ~270, K=1000 << N."""
     from repro.data.synthetic import make_corpus
     n = 120_000 if FAST else 1_000_000
-    return cached(f"corpus_v1_{n}", lambda: make_corpus(
+    return _cached_corpus(f"corpus_v1_{n}", lambda: make_corpus(
         n_docs=n, n_queries=24, d_cls=64, n_clusters=1024, with_bow=False,
         mean_len=40, max_len=120, seed=0))
 
@@ -39,16 +55,16 @@ def v1_like_corpus():
 def v1_index(corpus):
     from repro.core.ivf import build_ivf
     ncells = max(64, corpus.n_docs // 270)
-    return cached(f"ivf_v1_{corpus.n_docs}_{ncells}",
-                  lambda: build_ivf(corpus.cls, ncells=ncells, iters=5,
-                                    train_sample=150_000))
+    return _cached_index(f"ivf_v1_{corpus.n_docs}_{ncells}",
+                         lambda: build_ivf(corpus.cls, ncells=ncells, iters=5,
+                                           train_sample=150_000))
 
 
 def scoring_corpus():
     """Smaller corpus WITH BOW tokens (rerank-quality + latency benches)."""
     from repro.data.synthetic import make_corpus
     n = 8_000 if FAST else 40_000
-    return cached(f"corpus_bow_{n}", lambda: make_corpus(
+    return _cached_corpus(f"corpus_bow_{n}", lambda: make_corpus(
         n_docs=n, n_queries=48, n_clusters=256, mean_len=55, max_len=180,
         seed=1))
 
@@ -56,14 +72,15 @@ def scoring_corpus():
 def scoring_index(corpus):
     from repro.core.ivf import build_ivf
     ncells = max(32, corpus.n_docs // 200)
-    return cached(f"ivf_bow_{corpus.n_docs}_{ncells}",
-                  lambda: build_ivf(corpus.cls, ncells=ncells, iters=6))
+    return _cached_index(f"ivf_bow_{corpus.n_docs}_{ncells}",
+                         lambda: build_ivf(corpus.cls, ncells=ncells, iters=6))
 
 
 def scoring_layout(corpus):
     from repro.storage.layout import pack
-    return cached(f"layout_{corpus.n_docs}",
-                  lambda: pack(corpus.cls, corpus.bow, dtype=np.float16))
+    return _cached_layout(f"layout_{corpus.n_docs}",
+                          lambda: pack(corpus.cls, corpus.bow,
+                                       dtype=np.float16))
 
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:

@@ -4,6 +4,9 @@ retrieval server batches concurrent requests, the ESPN pipeline serves
 embeddings from the storage tier with prefetching, and we compare
 mmap / GDS / ESPN latency like Tables 4/5.
 
+The stack is built once through ``repro.pipeline``; each compared mode is a
+registered backend swapped in with ``Pipeline.with_mode``.
+
     PYTHONPATH=src python examples/espn_serving.py
 """
 import time
@@ -13,46 +16,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core.espn import ESPNConfig, ESPNRetriever
-from repro.core.ivf import build_ivf
 from repro.core.metrics import mrr_at_k
-from repro.data.synthetic import make_corpus
 from repro.models import colberter as C
-from repro.serve.engine import RetrievalServer
-from repro.serve.scheduler import BatchPolicy
-from repro.storage.io_engine import StorageTier
-from repro.storage.layout import pack
+from repro.pipeline import (CorpusConfig, Pipeline, PipelineConfig,
+                            RetrievalConfig, ServeConfig, StorageConfig)
 
 
 def main():
-    corpus = make_corpus(n_docs=8_000, n_queries=64, n_clusters=128)
-    index = build_ivf(corpus.cls, ncells=64, iters=6)
-    layout = pack(corpus.cls, corpus.bow, dtype=np.float16)
+    cfg = PipelineConfig(
+        corpus=CorpusConfig(n_docs=8_000, n_queries=64, n_clusters=128),
+        storage=StorageConfig(t_max=64, mem_budget_frac=0.125),
+        retrieval=RetrievalConfig(mode="mmap", nprobe=16, k_candidates=200,
+                                  prefetch_step=0.3, rerank_count=64),
+        serve=ServeConfig(max_batch=12, max_wait_s=0.003))
+    cfg.index.ncells = 64
+    base = Pipeline.build(cfg)
+    corpus = base.corpus
 
     # a real (smoke-scale) encoder in the loop: queries arrive as token ids
-    cfg = C.smoke_config(get_config("colberter")).scaled(
+    ccfg = C.smoke_config(get_config("colberter")).scaled(
         d_cls=corpus.queries_cls.shape[-1],
         d_bow=corpus.queries_bow.shape[-1])
-    params = C.init_params(cfg, jax.random.PRNGKey(0))
-    encode = jax.jit(lambda toks: C.encode(cfg, params, toks))
+    params = C.init_params(ccfg, jax.random.PRNGKey(0))
+    encode = jax.jit(lambda toks: C.encode(ccfg, params, toks))
     _ = encode(jnp.zeros((4, 8), jnp.int32))     # warm up
     print(f"encoder: {sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M "
           f"params (smoke scale)")
 
-    for mode, stack in (("mmap", "mmap"), ("gds", "espn"), ("espn", "espn")):
-        tier = StorageTier(layout, stack=stack, t_max=64,
-                           mem_budget_bytes=layout.nbytes // 8)
-        ret = ESPNRetriever(index, tier, ESPNConfig(
-            mode=mode, nprobe=16, k_candidates=200, prefetch_step=0.3,
-            rerank_count=64))
-        srv = RetrievalServer(ret, policy=BatchPolicy(max_batch=12,
-                                                      max_wait_s=0.003))
+    for mode in ("mmap", "gds", "espn"):
+        pipe = base if mode == base.cfg.retrieval.mode else \
+            base.with_mode(mode)
+        srv = pipe.serve()
         t0 = time.time()
         reqs = []
         for i in range(64):
             # encode the "text" (synthetic ids) then submit to the server
             toks = jnp.asarray(np.random.default_rng(i).integers(
-                0, cfg.vocab_size, (1, 8)), jnp.int32)
+                0, ccfg.vocab_size, (1, 8)), jnp.int32)
             _cls, _bow, _ = encode(toks)         # encoder in the loop
             reqs.append(srv.query_async(corpus.queries_cls[i],
                                         corpus.queries_bow[i],
@@ -67,7 +67,7 @@ def main():
               f"p99={s['p99_ms']:7.2f}ms batch~{s['mean_batch']:.1f} "
               f"MRR@10={mrr_at_k(ranked, corpus.qrels, 10):.3f}")
         srv.shutdown()
-        tier.close()
+        pipe.close()
 
 
 if __name__ == "__main__":

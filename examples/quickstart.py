@@ -1,49 +1,43 @@
-"""Quickstart: build a corpus, offload embeddings to the (simulated) SSD,
-and run ESPN retrieval end to end in ~30 seconds on CPU.
+"""Quickstart: the ``repro.pipeline`` facade builds the whole ESPN stack —
+synthetic corpus, IVF candidate-generation index, SSD-offloaded BOW layout,
+and the prefetching retrieval backend — from one config, and runs retrieval
+end to end in ~30 seconds on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
-"""
-import numpy as np
 
-from repro.core.espn import ESPNConfig, ESPNRetriever
-from repro.core.ivf import build_ivf
-from repro.core.metrics import mrr_at_k, recall_at_k
+Retrieval modes (espn / gds / mmap / swap / dram) are pluggable backends;
+swap ``mode="espn"`` for any name in ``repro.pipeline.available_backends()``.
+"""
 from repro.core.quantize import memory_report
-from repro.data.synthetic import make_corpus
-from repro.storage.io_engine import StorageTier
-from repro.storage.layout import pack
+from repro.pipeline import (CorpusConfig, Pipeline, PipelineConfig,
+                            RetrievalConfig)
 
 
 def main():
-    # 1. a clustered corpus with CLS (candidate-gen) + BOW (re-rank) vectors
-    print("== 1. corpus")
-    corpus = make_corpus(n_docs=10_000, n_queries=32, n_clusters=128)
-    print(f"   {corpus.n_docs} docs, mean {corpus.mean_tokens:.0f} tokens/doc")
+    cfg = PipelineConfig(
+        corpus=CorpusConfig(n_docs=10_000, n_queries=32, n_clusters=128),
+        retrieval=RetrievalConfig(mode="espn", nprobe=24, k_candidates=500,
+                                  prefetch_step=0.3))
+    cfg.index.ncells = 64
 
-    # 2. IVF candidate-generation index (stays in memory)
-    print("== 2. IVF index (in memory)")
-    index = build_ivf(corpus.cls, ncells=64, iters=6)
-    print(f"   {index.ncells} cells, {index.memory_bytes()/2**20:.1f} MB")
-
-    # 3. BOW embeddings -> block-aligned layout on the storage tier
-    print("== 3. BOW table offloaded to SSD")
-    layout = pack(corpus.cls, corpus.bow, dtype=np.float16)
-    tier = StorageTier(layout, stack="espn", t_max=180)
-    rep = memory_report(corpus.n_docs, corpus.mean_tokens)
-    print(f"   blob {layout.nbytes/2**20:.1f} MB on SSD; "
+    # one facade call: corpus -> IVF -> packed layout -> storage tier -> backend
+    print("== 1. build (corpus + IVF index + SSD layout + espn backend)")
+    pipe = Pipeline.build(cfg)
+    print(f"   {pipe.corpus.n_docs} docs, "
+          f"mean {pipe.corpus.mean_tokens:.0f} tokens/doc")
+    print(f"   {pipe.index.ncells} cells, "
+          f"{pipe.index.memory_bytes()/2**20:.1f} MB in memory")
+    rep = memory_report(pipe.corpus.n_docs, pipe.corpus.mean_tokens)
+    print(f"   blob {pipe.layout.nbytes/2**20:.1f} MB on SSD; "
           f"memory factor at msmarco-scale: {rep.factor:.1f}x")
 
-    # 4. retrieve: two-phase ANN + prefetch + early re-rank
-    print("== 4. ESPN retrieval")
-    retriever = ESPNRetriever(index, tier, ESPNConfig(
-        mode="espn", nprobe=24, k_candidates=500, prefetch_step=0.3))
-    resp = retriever.query_batch(corpus.queries_cls, corpus.queries_bow,
-                                 corpus.query_lens)
-    ranked = [r.doc_ids for r in resp.ranked]
+    # retrieve: two-phase ANN + prefetch + early re-rank
+    print("== 2. ESPN retrieval")
+    resp = pipe.search()
+    ev = pipe.evaluate(response=resp)
     print(f"   breakdown (ms): {resp.breakdown.ms()}")
-    print(f"   MRR@10={mrr_at_k(ranked, corpus.qrels, 10):.3f} "
-          f"Recall@100={recall_at_k(ranked, corpus.qrels, 100):.3f}")
-    tier.close()
+    print(f"   MRR@10={ev['mrr@10']:.3f} Recall@100={ev['recall@100']:.3f}")
+    pipe.close()
 
 
 if __name__ == "__main__":

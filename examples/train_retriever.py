@@ -72,31 +72,29 @@ def main():
         cls = np.concatenate(cls_list)
         bows = list(np.concatenate(bow_list))
 
-        from repro.core.espn import ESPNConfig, ESPNRetriever
-        from repro.core.ivf import build_ivf
         from repro.core.metrics import mrr_at_k
-        from repro.storage.io_engine import StorageTier
-        from repro.storage.layout import pack
+        from repro.pipeline import (IndexConfig, Pipeline, PipelineConfig,
+                                    RetrievalConfig, StorageConfig)
 
-        index = build_ivf(cls, ncells=16, iters=5)
-        layout = pack(cls, bows, dtype=np.float16)
-        tier = StorageTier(layout, stack="espn", t_max=cfg.max_doc_len)
-        ret = ESPNRetriever(index, tier, ESPNConfig(mode="espn", nprobe=8,
-                                                    k_candidates=100,
-                                                    prefetch_step=0.3))
+        pcfg = PipelineConfig(
+            index=IndexConfig(ncells=16, iters=5),
+            storage=StorageConfig(t_max=cfg.max_doc_len),
+            retrieval=RetrievalConfig(mode="espn", nprobe=8,
+                                      k_candidates=100, prefetch_step=0.3))
+        pipe = Pipeline.from_embeddings(pcfg, cls, bows)
         # queries = noisy subsets of docs 0..31
         rq = np.random.default_rng(7)
         take = rq.integers(0, cfg.max_doc_len, (32, cfg.max_query_len))
         q_toks = np.take_along_axis(doc_toks[:32], take, axis=1)
         q_cls, q_bow, _ = encode(jnp.asarray(q_toks, jnp.int32))
-        resp = ret.query_batch(np.asarray(q_cls, np.float32),
-                               np.asarray(q_bow, np.float32),
-                               np.full(32, cfg.max_query_len, np.int32))
+        resp = pipe.search(np.asarray(q_cls, np.float32),
+                           np.asarray(q_bow, np.float32),
+                           np.full(32, cfg.max_query_len, np.int32))
         ranked = [x.doc_ids for x in resp.ranked]
         qrels = [{i} for i in range(32)]
         mrr = mrr_at_k(ranked, qrels, 10)
         print(f"self-retrieval MRR@10 ({label}): {mrr:.3f}")
-        tier.close()
+        pipe.close()
         return mrr
 
     m0 = build_and_eval(init_params, "untrained encoder")

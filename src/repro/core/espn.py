@@ -6,11 +6,16 @@ MaxSim re-rank + score aggregation. Every stage contributes to a per-query
 latency breakdown on the calibrated device clock, reproducing the paper's
 Tables 4/5 and Figures 8-10.
 
-Retrieval methods:
+Retrieval methods (each a registered ``repro.pipeline`` backend):
   "espn"  GDS-analogue batched reads + ANN-guided prefetcher (+ early rerank)
   "gds"   GDS-analogue reads, no prefetch (everything in the critical path)
   "mmap" / "swap"  conventional O/S paths under a memory budget
   "dram"  whole index resident (the paper's upper-bound baseline)
+
+This module holds the shared pipeline types (config, clock, latency
+breakdown, response); the per-mode query paths live in
+``repro.pipeline.backends`` behind the ``RetrievalBackend`` registry.
+``ESPNRetriever`` remains as the thin mode-dispatching entry point.
 """
 from __future__ import annotations
 
@@ -18,9 +23,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.ivf import ANNCostModel, IVFIndex, search
-from repro.core.prefetcher import ANNPrefetcher
-from repro.core.rerank import RerankOutput, rerank_query
+from repro.core.ivf import ANNCostModel, IVFIndex
+from repro.core.rerank import RerankOutput
 from repro.storage.io_engine import StorageTier
 
 
@@ -44,7 +48,7 @@ class ComputeModel:
 
 @dataclass(frozen=True)
 class ESPNConfig:
-    mode: str = "espn"                 # espn | gds | mmap | swap | dram
+    mode: str = "espn"                 # any registered backend name
     nprobe: int = 128
     k_candidates: int = 1000
     prefetch_step: float = 0.10
@@ -78,89 +82,44 @@ class RetrievalResponse:
 
 
 class ESPNRetriever:
+    """Mode-dispatching retriever: resolves ``cfg.mode`` against the backend
+    registry and delegates the query path to the backend instance."""
+
     def __init__(self, index: IVFIndex, tier: StorageTier, cfg: ESPNConfig,
                  *, cost_model: ANNCostModel | None = None,
                  compute: ComputeModel | None = None,
                  doc_bytes=None):
-        self.index = index
-        self.tier = tier
-        self.cfg = cfg
-        self.cost = cost_model or ANNCostModel()
-        self.compute = compute or ComputeModel()
-        self.prefetcher = ANNPrefetcher(index, tier,
-                                        prefetch_step=cfg.prefetch_step,
-                                        cost_model=self.cost)
-        self.doc_bytes = doc_bytes or (lambda i: tier.layout.doc_bytes(i))
+        # late import: repro.pipeline.backends imports this module's types
+        from repro.pipeline.backends import get_backend
+        self.backend = get_backend(cfg.mode)(
+            index, tier, cfg, cost_model=cost_model, compute=compute,
+            doc_bytes=doc_bytes)
+
+    @property
+    def index(self):
+        return self.backend.index
+
+    @property
+    def tier(self):
+        return self.backend.tier
+
+    @property
+    def cfg(self):
+        return self.backend.cfg
+
+    @property
+    def cost(self):
+        return self.backend.cost
+
+    @property
+    def compute(self):
+        return self.backend.compute
+
+    @property
+    def doc_bytes(self):
+        return self.backend.doc_bytes
 
     # ------------------------------------------------------------------
     def query_batch(self, q_cls: np.ndarray, q_bow: np.ndarray,
                     q_lens: np.ndarray) -> RetrievalResponse:
-        cfg = self.cfg
-        B = q_cls.shape[0]
-        bd = LatencyBreakdown()
-        bd.encode_s = self.compute.encode_time(B)
-        d_bow = self.tier.layout.d_bow
-        mean_t = float(self.tier.layout.n_tokens.mean())
-
-        ranked: list[RerankOutput] = []
-        if cfg.mode == "espn":
-            results = self.prefetcher.run_batch(q_cls, nprobe=cfg.nprobe,
-                                                k=cfg.k_candidates)
-            bd.ann_s = results[0].stats.ann_s
-            hit_rates, hidden, critical = [], 0.0, 0.0
-            for b, res in enumerate(results):
-                out = rerank_query(q_bow[b], int(q_lens[b]), res,
-                                   alpha=cfg.alpha,
-                                   rerank_count=cfg.rerank_count,
-                                   doc_bytes=self.doc_bytes,
-                                   use_pallas=cfg.use_pallas)
-                ranked.append(out)
-                early_t = self.compute.maxsim_time(res.stats.n_hits,
-                                                   int(q_lens[b]), mean_t, d_bow)
-                miss_t = self.compute.maxsim_time(res.stats.n_misses,
-                                                  int(q_lens[b]), mean_t, d_bow)
-                hidden_work = res.stats.prefetch_io_s + early_t
-                leaked = max(0.0, hidden_work - res.stats.budget_s)
-                hidden += min(hidden_work, res.stats.budget_s)
-                critical += leaked + res.stats.miss_io_s
-                bd.rerank_s += miss_t
-                hit_rates.append(res.stats.hit_rate)
-                bd.bytes_read += out.bow_bytes_read
-            bd.hidden_s = hidden
-            bd.critical_io_s = critical
-            bd.hit_rate = float(np.mean(hit_rates))
-        else:
-            scores, ids = search(self.index, q_cls, cfg.nprobe,
-                                 cfg.k_candidates)
-            scores, ids = np.asarray(scores), np.asarray(ids)
-            bd.ann_s = self.cost.time(self.index, cfg.nprobe)
-            for b in range(B):
-                fin = ids[b][ids[b] >= 0]
-                rr = len(fin) if cfg.rerank_count is None else min(
-                    cfg.rerank_count, len(fin))
-                read = self.tier.read(fin[:rr])
-                bd.critical_io_s += read.sim_seconds
-                from repro.core.prefetcher import PrefetchStats, QueryResult
-                res = QueryResult(
-                    doc_ids=fin, cand_scores=scores[b][:len(fin)],
-                    hit_mask=np.zeros(len(fin), bool),
-                    stats=PrefetchStats(0, 0, 0, len(fin), 0, 0, 0,
-                                        read.sim_seconds, bd.ann_s),
-                    prefetched={}, buffers=None,
-                    miss_buffers=(read.cls, read.bow, read.lens))
-                # miss map covers only the first rr docs (the ones read)
-                res.hit_mask = np.zeros(len(fin), bool)
-                res.doc_ids = fin
-                out = rerank_query(q_bow[b], int(q_lens[b]), res,
-                                   alpha=cfg.alpha, rerank_count=rr,
-                                   doc_bytes=self.doc_bytes,
-                                   use_pallas=cfg.use_pallas)
-                ranked.append(out)
-                bd.rerank_s += self.compute.maxsim_time(rr, int(q_lens[b]),
-                                                        mean_t, d_bow)
-                bd.bytes_read += out.bow_bytes_read
-            bd.hit_rate = 0.0
-
-        bd.total_s = (bd.encode_s + bd.ann_s + bd.critical_io_s + bd.rerank_s
-                      + 0.2e-3)
-        return RetrievalResponse(ranked=ranked, breakdown=bd)
+        return self.backend.query_batch(q_cls, q_bow, q_lens)

@@ -42,6 +42,21 @@ class QueryResult:
     buffers: tuple | None = None  # (cls, bow, lens) of prefetched docs
     miss_buffers: tuple | None = None
 
+    @classmethod
+    def from_read(cls, doc_ids: np.ndarray, cand_scores: np.ndarray, read,
+                  *, ann_s: float) -> "QueryResult":
+        """Result for a non-prefetching stack: every document was fetched in
+        the critical path, so the hit mask is empty and the (possibly
+        partial, rerank-count-truncated) read buffers are the miss buffers.
+        """
+        stats = PrefetchStats(hit_rate=0.0, n_prefetched=0, n_hits=0,
+                              n_misses=len(doc_ids), budget_s=0.0,
+                              prefetch_io_s=0.0, leaked_s=0.0,
+                              miss_io_s=read.sim_seconds, ann_s=ann_s)
+        return cls(doc_ids=doc_ids, cand_scores=cand_scores,
+                   hit_mask=np.zeros(len(doc_ids), bool), stats=stats,
+                   miss_buffers=(read.cls, read.bow, read.lens))
+
 
 class ANNPrefetcher:
     """Two-phase IVF search + overlapped storage prefetch."""

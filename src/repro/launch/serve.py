@@ -1,6 +1,7 @@
-"""Serving launcher: builds the full ESPN stack (synthetic corpus -> IVF ->
-SSD layout -> retrieval server) and replays a query stream through the
-continuous batcher.
+"""Serving launcher: builds the full ESPN stack through the
+``repro.pipeline`` facade and replays a query stream through the continuous
+batcher. The retrieval mode (and therefore the storage-tier software stack)
+comes from the backend registry — any registered backend name works.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 50000 --queries 128
 """
@@ -11,55 +12,32 @@ import time
 
 
 def main():
+    # config import is jax-free: --help / flag errors return instantly
+    from repro.pipeline.config import PipelineConfig
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--docs", type=int, default=20_000)
-    ap.add_argument("--queries", type=int, default=64)
-    ap.add_argument("--ncells", type=int, default=128)
-    ap.add_argument("--nprobe", type=int, default=24)
-    ap.add_argument("--k", type=int, default=200)
-    ap.add_argument("--mode", default="espn",
-                    choices=["espn", "gds", "mmap", "swap", "dram"])
-    ap.add_argument("--prefetch-step", type=float, default=0.2)
-    ap.add_argument("--rerank", type=int, default=0,
-                    help="partial re-rank count (0 = exact)")
-    ap.add_argument("--max-batch", type=int, default=12)
+    PipelineConfig.add_cli_args(ap)
+    ap.set_defaults(clusters=0)        # 0 = derive from the cell count below
     args = ap.parse_args()
+    cfg = PipelineConfig.from_cli(args)
+    if not cfg.corpus.n_clusters:
+        cfg.corpus.n_clusters = max(64, cfg.index.resolve_ncells(
+            cfg.corpus.n_docs) // 2)
 
-    import numpy as np
-
-    from repro.core.espn import ESPNConfig, ESPNRetriever
-    from repro.core.ivf import build_ivf
     from repro.core.metrics import mrr_at_k, recall_at_k
-    from repro.data.synthetic import make_corpus
-    from repro.serve.engine import RetrievalServer
-    from repro.serve.scheduler import BatchPolicy
-    from repro.storage.io_engine import StorageTier
-    from repro.storage.layout import pack
+    from repro.pipeline import Pipeline
 
-    print(f"building corpus ({args.docs} docs) ...", flush=True)
-    corpus = make_corpus(n_docs=args.docs, n_queries=args.queries,
-                         n_clusters=max(64, args.ncells // 2))
-    index = build_ivf(corpus.cls, ncells=args.ncells, iters=6)
-    layout = pack(corpus.cls, corpus.bow, dtype=np.float16)
-    mem_budget = layout.nbytes // 4 if args.mode in ("mmap", "swap") else None
-    tier = StorageTier(layout, stack="dram" if args.mode == "dram" else
-                       "mmap" if args.mode == "mmap" else
-                       "swap" if args.mode == "swap" else "espn",
-                       mem_budget_bytes=mem_budget)
-    cfg = ESPNConfig(mode=args.mode if args.mode in ("espn", "gds", "dram")
-                     else args.mode, nprobe=args.nprobe,
-                     k_candidates=args.k,
-                     prefetch_step=args.prefetch_step,
-                     rerank_count=args.rerank or None)
-    retriever = ESPNRetriever(index, tier, cfg)
-    server = RetrievalServer(retriever,
-                             policy=BatchPolicy(max_batch=args.max_batch))
+    print(f"building corpus ({cfg.corpus.n_docs} docs) ...", flush=True)
+    pipe = Pipeline.build(cfg)
+    server = pipe.serve()
+    c = pipe.corpus
 
-    print("serving ...", flush=True)
+    print(f"serving ({cfg.retrieval.mode} backend on "
+          f"{pipe.backend.storage_stack} tier) ...", flush=True)
     t0 = time.time()
-    reqs = [server.query_async(corpus.queries_cls[i], corpus.queries_bow[i],
-                               int(corpus.query_lens[i]))
-            for i in range(args.queries)]
+    reqs = [server.query_async(c.queries_cls[i], c.queries_bow[i],
+                               int(c.query_lens[i]))
+            for i in range(cfg.corpus.n_queries)]
     ranked = []
     for r in reqs:
         r.done.wait(60)
@@ -67,10 +45,10 @@ def main():
     wall = time.time() - t0
 
     print(f"wall={wall:.2f}s  stats={server.stats.summary()}")
-    print(f"MRR@10={mrr_at_k(ranked, corpus.qrels, 10):.4f}  "
-          f"R@100={recall_at_k(ranked, corpus.qrels, 100):.4f}")
+    print(f"MRR@10={mrr_at_k(ranked, c.qrels, 10):.4f}  "
+          f"R@100={recall_at_k(ranked, c.qrels, 100):.4f}")
     server.shutdown()
-    tier.close()
+    pipe.close()
 
 
 if __name__ == "__main__":

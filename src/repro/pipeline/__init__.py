@@ -1,0 +1,42 @@
+"""``repro.pipeline`` — the user-facing API for the ESPN retrieval stack.
+
+    from repro.pipeline import Pipeline, PipelineConfig
+
+    pipe = Pipeline.build(PipelineConfig())
+    print(pipe.evaluate())
+
+Retrieval modes are pluggable ``RetrievalBackend`` classes behind a
+string-keyed registry; see ``repro.pipeline.backends``.
+
+Config classes import eagerly (they are dependency-light, so CLIs can build
+an argparse parser before jax loads); ``Pipeline`` and the registry resolve
+lazily on first attribute access (PEP 562).
+"""
+from repro.pipeline.config import (CorpusConfig, IndexConfig, PipelineConfig,
+                                   RetrievalConfig, ServeConfig,
+                                   StorageConfig)
+
+_LAZY = {
+    "Pipeline": "repro.pipeline.pipeline",
+    "RetrievalBackend": "repro.pipeline.backends",
+    "register_backend": "repro.pipeline.backends",
+    "get_backend": "repro.pipeline.backends",
+    "available_backends": "repro.pipeline.backends",
+    "persist": "repro.pipeline",          # submodule
+}
+
+__all__ = [
+    "Pipeline", "PipelineConfig", "CorpusConfig", "IndexConfig",
+    "StorageConfig", "RetrievalConfig", "ServeConfig",
+    "RetrievalBackend", "register_backend", "get_backend",
+    "available_backends",
+]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        if _LAZY[name] == "repro.pipeline":           # submodule access
+            return importlib.import_module(f"repro.pipeline.{name}")
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.pipeline' has no attribute {name!r}")

@@ -1,0 +1,196 @@
+"""Pluggable retrieval backends behind a string-keyed registry.
+
+Each of the paper's five retrieval stacks (Tables 4/5) is a first-class
+``RetrievalBackend``: ESPN's prefetched GDS path, plain GDS, the mmap/swap
+O/S baselines, and the all-in-DRAM upper bound. New candidate-generation or
+re-rank strategies (bit-vector rerank, MUVERA-style FDE candidate gen, ...)
+plug in with ``@register_backend("name")`` and are immediately reachable from
+``Pipeline``, ``ESPNRetriever``, the serve launcher, and the CLI.
+
+A backend owns the full query path: candidate generation, storage reads,
+re-ranking, and the per-stage latency accounting on the calibrated device
+clock. All backends return the same ``RetrievalResponse``.
+"""
+from __future__ import annotations
+
+import abc
+from typing import ClassVar
+
+import numpy as np
+
+from repro.core.espn import (ComputeModel, ESPNConfig, LatencyBreakdown,
+                             RetrievalResponse)
+from repro.core.ivf import ANNCostModel, IVFIndex, search
+from repro.core.prefetcher import ANNPrefetcher, QueryResult
+from repro.core.rerank import RerankOutput, rerank_query
+from repro.storage.io_engine import StorageTier
+
+_REGISTRY: dict[str, type["RetrievalBackend"]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: ``@register_backend("espn")``."""
+    def deco(cls: type["RetrievalBackend"]) -> type["RetrievalBackend"]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_backend(name: str) -> type["RetrievalBackend"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown retrieval backend {name!r}; registered backends: "
+            f"{', '.join(available_backends())}") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+class RetrievalBackend(abc.ABC):
+    """One retrieval stack: ANN candidate gen -> storage reads -> re-rank.
+
+    Class attributes describe how the stack maps onto the storage tier so
+    callers (``Pipeline``, the serve launcher) can build the right
+    ``StorageTier`` without per-mode conditionals:
+
+      storage_stack       the ``StorageTier`` software stack to run on
+      needs_mem_budget    True for the O/S paths that operate under a page
+                          cache budget (mmap / swap)
+    """
+
+    name: ClassVar[str] = ""
+    storage_stack: ClassVar[str] = "espn"
+    needs_mem_budget: ClassVar[bool] = False
+
+    def __init__(self, index: IVFIndex, tier: StorageTier, cfg: ESPNConfig,
+                 *, cost_model: ANNCostModel | None = None,
+                 compute: ComputeModel | None = None, doc_bytes=None):
+        self.index = index
+        self.tier = tier
+        self.cfg = cfg
+        self.cost = cost_model or ANNCostModel()
+        self.compute = compute or ComputeModel()
+        self.doc_bytes = doc_bytes or (lambda i: tier.layout.doc_bytes(i))
+
+    # ------------------------------------------------------------------
+    def query_batch(self, q_cls: np.ndarray, q_bow: np.ndarray,
+                    q_lens: np.ndarray) -> RetrievalResponse:
+        bd = LatencyBreakdown()
+        bd.encode_s = self.compute.encode_time(q_cls.shape[0])
+        ranked = self._retrieve(q_cls, q_bow, q_lens, bd)
+        bd.total_s = (bd.encode_s + bd.ann_s + bd.critical_io_s + bd.rerank_s
+                      + 0.2e-3)
+        return RetrievalResponse(ranked=ranked, breakdown=bd)
+
+    @abc.abstractmethod
+    def _retrieve(self, q_cls, q_bow, q_lens,
+                  bd: LatencyBreakdown) -> list[RerankOutput]:
+        """Fill ``bd``'s ann/hidden/critical/rerank terms; return rankings."""
+
+    # -- shared helpers -----------------------------------------------
+    def _maxsim_time(self, n_docs: int, q_len: int) -> float:
+        layout = self.tier.layout
+        return self.compute.maxsim_time(n_docs, q_len,
+                                        float(layout.n_tokens.mean()),
+                                        layout.d_bow)
+
+
+@register_backend("espn")
+class ESPNBackend(RetrievalBackend):
+    """GDS-analogue batched reads + ANN-guided prefetcher + early re-rank
+    (the paper's contribution, §4.2-4.3)."""
+
+    storage_stack = "espn"
+
+    def __init__(self, index, tier, cfg, **kw):
+        super().__init__(index, tier, cfg, **kw)
+        self.prefetcher = ANNPrefetcher(index, tier,
+                                        prefetch_step=cfg.prefetch_step,
+                                        cost_model=self.cost)
+
+    def _retrieve(self, q_cls, q_bow, q_lens, bd):
+        cfg = self.cfg
+        results = self.prefetcher.run_batch(q_cls, nprobe=cfg.nprobe,
+                                            k=cfg.k_candidates)
+        bd.ann_s = results[0].stats.ann_s
+        ranked, hit_rates, hidden, critical = [], [], 0.0, 0.0
+        for b, res in enumerate(results):
+            out = rerank_query(q_bow[b], int(q_lens[b]), res,
+                               alpha=cfg.alpha, rerank_count=cfg.rerank_count,
+                               doc_bytes=self.doc_bytes,
+                               use_pallas=cfg.use_pallas)
+            ranked.append(out)
+            early_t = self._maxsim_time(res.stats.n_hits, int(q_lens[b]))
+            miss_t = self._maxsim_time(res.stats.n_misses, int(q_lens[b]))
+            hidden_work = res.stats.prefetch_io_s + early_t
+            leaked = max(0.0, hidden_work - res.stats.budget_s)
+            hidden += min(hidden_work, res.stats.budget_s)
+            critical += leaked + res.stats.miss_io_s
+            bd.rerank_s += miss_t
+            hit_rates.append(res.stats.hit_rate)
+            bd.bytes_read += out.bow_bytes_read
+        bd.hidden_s = hidden
+        bd.critical_io_s = critical
+        bd.hit_rate = float(np.mean(hit_rates))
+        return ranked
+
+
+class DirectBackend(RetrievalBackend):
+    """Shared path for the non-prefetching stacks: single-phase ANN, then
+    every candidate read sits in the critical path. Subclasses only choose
+    the storage stack (which sets the calibrated clock in io_engine)."""
+
+    def _retrieve(self, q_cls, q_bow, q_lens, bd):
+        cfg = self.cfg
+        scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
+        scores, ids = np.asarray(scores), np.asarray(ids)
+        bd.ann_s = self.cost.time(self.index, cfg.nprobe)
+        ranked = []
+        for b in range(q_cls.shape[0]):
+            fin = ids[b][ids[b] >= 0]
+            rr = len(fin) if cfg.rerank_count is None else min(
+                cfg.rerank_count, len(fin))
+            read = self.tier.read(fin[:rr])
+            bd.critical_io_s += read.sim_seconds
+            res = QueryResult.from_read(fin, scores[b][:len(fin)], read,
+                                        ann_s=bd.ann_s)
+            out = rerank_query(q_bow[b], int(q_lens[b]), res,
+                               alpha=cfg.alpha, rerank_count=rr,
+                               doc_bytes=self.doc_bytes,
+                               use_pallas=cfg.use_pallas)
+            ranked.append(out)
+            bd.rerank_s += self._maxsim_time(rr, int(q_lens[b]))
+            bd.bytes_read += out.bow_bytes_read
+        bd.hit_rate = 0.0
+        return ranked
+
+
+@register_backend("gds")
+class GDSBackend(DirectBackend):
+    """GDS-analogue batched reads, no prefetch: the paper's ablation where
+    all storage I/O lands in the critical path."""
+    storage_stack = "espn"
+
+
+@register_backend("mmap")
+class MmapBackend(DirectBackend):
+    """Conventional mmap'd index under a page-cache memory budget."""
+    storage_stack = "mmap"
+    needs_mem_budget = True
+
+
+@register_backend("swap")
+class SwapBackend(DirectBackend):
+    """Anonymous memory + kernel swap under a memory budget."""
+    storage_stack = "swap"
+    needs_mem_budget = True
+
+
+@register_backend("dram")
+class DRAMBackend(DirectBackend):
+    """Whole index resident in memory: the paper's upper-bound baseline."""
+    storage_stack = "dram"

@@ -1,0 +1,93 @@
+"""Artifact persistence for the pipeline: IVF index, packed embedding layout,
+and synthetic corpus round-trip through ``.npz`` files. Used by
+``Pipeline.save``/``Pipeline.load`` and by the benchmark fixture cache, so a
+1M-doc corpus is clustered and packed once and reloaded in seconds (the
+previous ad-hoc pickle cache kept whole Python objects and broke on any
+dataclass change).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ivf import IVFIndex
+from repro.data.synthetic import Corpus
+from repro.storage.layout import EmbeddingLayout
+
+_EMPTY = np.zeros(0, np.float32)
+
+
+# -- IVF index --------------------------------------------------------------
+
+def save_index(index: IVFIndex, path: str) -> None:
+    np.savez(path,
+             centroids=np.asarray(index.centroids),
+             cell_ids=np.asarray(index.cell_ids),
+             cell_vecs=np.asarray(index.cell_vecs),
+             cell_scale=(np.asarray(index.cell_scale)
+                         if index.cell_scale is not None else _EMPTY),
+             cell_sizes=index.cell_sizes,
+             n_docs=index.n_docs, quant=str(index.quant))
+
+
+def load_index(path: str) -> IVFIndex:
+    z = np.load(path, allow_pickle=False)
+    scale = z["cell_scale"]
+    return IVFIndex(centroids=jnp.asarray(z["centroids"]),
+                    cell_ids=jnp.asarray(z["cell_ids"]),
+                    cell_vecs=jnp.asarray(z["cell_vecs"]),
+                    cell_scale=jnp.asarray(scale) if scale.size else None,
+                    cell_sizes=z["cell_sizes"],
+                    n_docs=int(z["n_docs"]), quant=str(z["quant"]))
+
+
+# -- packed embedding layout ------------------------------------------------
+
+def save_layout(layout: EmbeddingLayout, path: str) -> None:
+    np.savez(path, blob=layout.blob, offsets=layout.offsets,
+             n_tokens=layout.n_tokens, d_cls=layout.d_cls,
+             d_bow=layout.d_bow, dtype=str(np.dtype(layout.dtype)),
+             scales=layout.scales if layout.scales is not None else _EMPTY,
+             block=layout.block)
+
+
+def load_layout(path: str) -> EmbeddingLayout:
+    z = np.load(path, allow_pickle=False)
+    scales = z["scales"]
+    return EmbeddingLayout(blob=z["blob"], offsets=z["offsets"],
+                           n_tokens=z["n_tokens"], d_cls=int(z["d_cls"]),
+                           d_bow=int(z["d_bow"]),
+                           dtype=np.dtype(str(z["dtype"])),
+                           scales=scales if scales.size else None,
+                           block=int(z["block"]))
+
+
+# -- corpus -----------------------------------------------------------------
+
+def save_corpus(corpus: Corpus, path: str) -> None:
+    """Ragged BOW lists and qrels sets are flattened with length tables."""
+    bow_flat = (np.concatenate([b.reshape(-1, b.shape[-1])
+                                for b in corpus.bow])
+                if corpus.bow else np.zeros((0, 0), np.float32))
+    qrel_lens = np.array([len(r) for r in corpus.qrels], np.int64)
+    qrel_flat = np.array([i for r in corpus.qrels for i in sorted(r)],
+                         np.int64)
+    np.savez(path, cls=corpus.cls, doc_lens=corpus.doc_lens,
+             bow_flat=bow_flat, has_bow=bool(corpus.bow),
+             queries_cls=corpus.queries_cls, queries_bow=corpus.queries_bow,
+             query_lens=corpus.query_lens,
+             qrel_lens=qrel_lens, qrel_flat=qrel_flat)
+
+
+def load_corpus(path: str) -> Corpus:
+    z = np.load(path, allow_pickle=False)
+    bow: list[np.ndarray] = []
+    if bool(z["has_bow"]):
+        splits = np.cumsum(z["doc_lens"])[:-1]
+        bow = [b for b in np.split(z["bow_flat"], splits)]
+    cuts = np.cumsum(z["qrel_lens"])[:-1]
+    qrels = [set(int(i) for i in chunk)
+             for chunk in np.split(z["qrel_flat"], cuts)]
+    return Corpus(cls=z["cls"], bow=bow, doc_lens=z["doc_lens"],
+                  queries_cls=z["queries_cls"], queries_bow=z["queries_bow"],
+                  query_lens=z["query_lens"], qrels=qrels)

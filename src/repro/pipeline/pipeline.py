@@ -1,0 +1,209 @@
+"""``Pipeline``: the single user-facing construction API for the ESPN stack.
+
+One call replaces the hand-wired ``make_corpus -> build_ivf -> pack ->
+StorageTier -> ESPNConfig -> ESPNRetriever`` sequence:
+
+    from repro.pipeline import Pipeline, PipelineConfig
+
+    pipe = Pipeline.build(PipelineConfig())
+    resp = pipe.search()                  # corpus queries by default
+    print(pipe.evaluate())                # MRR/recall + latency breakdown
+    pipe.save("artifacts/")               # index + layout + corpus + config
+    pipe2 = Pipeline.load("artifacts/")   # no re-clustering
+
+The retrieval mode is resolved against the backend registry
+(``repro.pipeline.backends``), which also decides the storage-tier software
+stack and whether a page-cache memory budget applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.espn import ComputeModel, RetrievalResponse
+from repro.core.ivf import ANNCostModel, IVFIndex, build_ivf
+from repro.core.metrics import mrr_at_k, recall_at_k
+from repro.data.synthetic import Corpus, make_corpus
+from repro.pipeline import persist
+from repro.pipeline.backends import RetrievalBackend, get_backend
+from repro.pipeline.config import PipelineConfig
+from repro.storage.io_engine import StorageTier
+from repro.storage.layout import EmbeddingLayout, pack
+
+
+class Pipeline:
+    """A built retrieval stack: corpus + index + storage tier + backend."""
+
+    def __init__(self, cfg: PipelineConfig, *, corpus: Corpus | None,
+                 index: IVFIndex, layout: EmbeddingLayout, tier: StorageTier,
+                 backend: RetrievalBackend):
+        self.cfg = cfg
+        self.corpus = corpus
+        self.index = index
+        self.layout = layout
+        self.tier = tier
+        self.backend = backend
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(cls, cfg: PipelineConfig | None = None, *,
+              corpus: Corpus | None = None,
+              cost_model: ANNCostModel | None = None,
+              compute: ComputeModel | None = None) -> "Pipeline":
+        """Build the full stack from config. Pass ``corpus`` to reuse an
+        existing one (tests/benchmarks); otherwise one is synthesized from
+        ``cfg.corpus``."""
+        cfg = cfg or PipelineConfig()
+        if corpus is None:
+            c = cfg.corpus
+            corpus = make_corpus(n_docs=c.n_docs, n_queries=c.n_queries,
+                                 d_cls=c.d_cls, d_bow=c.d_bow,
+                                 n_clusters=c.n_clusters, mean_len=c.mean_len,
+                                 max_len=c.max_len, with_bow=c.with_bow,
+                                 seed=c.seed)
+        index = build_ivf(corpus.cls,
+                          ncells=cfg.index.resolve_ncells(corpus.n_docs),
+                          iters=cfg.index.iters, quant=cfg.index.quant,
+                          train_sample=cfg.index.train_sample)
+        layout = pack(corpus.cls, corpus.bow,
+                      dtype=np.dtype(cfg.storage.dtype),
+                      block=cfg.storage.block)
+        return cls._assemble(cfg, corpus, index, layout,
+                             cost_model=cost_model, compute=compute)
+
+    @classmethod
+    def from_embeddings(cls, cfg: PipelineConfig, cls_embs: np.ndarray,
+                        bow_embs: list[np.ndarray], *,
+                        cost_model: ANNCostModel | None = None,
+                        compute: ComputeModel | None = None) -> "Pipeline":
+        """Index externally encoded embeddings (e.g. a trained encoder's
+        corpus pass): builds the IVF index + packed layout, no synthetic
+        corpus. Queries must then be passed to ``search`` explicitly."""
+        index = build_ivf(cls_embs,
+                          ncells=cfg.index.resolve_ncells(len(cls_embs)),
+                          iters=cfg.index.iters, quant=cfg.index.quant,
+                          train_sample=cfg.index.train_sample)
+        layout = pack(cls_embs, bow_embs, dtype=np.dtype(cfg.storage.dtype),
+                      block=cfg.storage.block)
+        return cls._assemble(cfg, None, index, layout,
+                             cost_model=cost_model, compute=compute)
+
+    @classmethod
+    def from_artifacts(cls, cfg: PipelineConfig, *, index: IVFIndex,
+                       layout: EmbeddingLayout, corpus: Corpus | None = None,
+                       cost_model: ANNCostModel | None = None,
+                       compute: ComputeModel | None = None) -> "Pipeline":
+        """Assemble a pipeline around prebuilt artifacts (benchmark caches,
+        externally built indexes) — no clustering, no packing."""
+        return cls._assemble(cfg, corpus, index, layout,
+                             cost_model=cost_model, compute=compute)
+
+    @classmethod
+    def _assemble(cls, cfg: PipelineConfig, corpus: Corpus | None,
+                  index: IVFIndex, layout: EmbeddingLayout, *,
+                  cost_model=None, compute=None) -> "Pipeline":
+        backend_cls = get_backend(cfg.retrieval.mode)
+        budget = (int(layout.nbytes * cfg.storage.mem_budget_frac)
+                  if backend_cls.needs_mem_budget else None)
+        tier = StorageTier(layout, stack=backend_cls.storage_stack,
+                           t_max=cfg.storage.t_max, mem_budget_bytes=budget)
+        backend = backend_cls(index, tier, cfg.retrieval.to_espn_config(),
+                              cost_model=cost_model, compute=compute)
+        return cls(cfg, corpus=corpus, index=index, layout=layout, tier=tier,
+                   backend=backend)
+
+    # -- queries ------------------------------------------------------------
+    def search(self, q_cls: np.ndarray | None = None,
+               q_bow: np.ndarray | None = None,
+               q_lens: np.ndarray | None = None) -> RetrievalResponse:
+        """Run the retrieval path. With no arguments, uses the corpus's
+        bundled query set."""
+        if q_cls is None:
+            if self.corpus is None:
+                raise ValueError("no corpus attached; pass explicit queries")
+            q_cls, q_bow, q_lens = (self.corpus.queries_cls,
+                                    self.corpus.queries_bow,
+                                    self.corpus.query_lens)
+        return self.backend.query_batch(q_cls, q_bow, q_lens)
+
+    def evaluate(self, qrels: list[set] | None = None, *,
+                 response: RetrievalResponse | None = None,
+                 mrr_k: int = 10, recall_k: int = 100) -> dict:
+        """Score against qrels; searches the corpus queries unless an
+        existing ``response`` (for those queries) is supplied."""
+        if qrels is None:
+            if self.corpus is None:
+                raise ValueError("no corpus attached; pass explicit qrels")
+            qrels = self.corpus.qrels
+        resp = response or self.search()
+        ranked = [r.doc_ids for r in resp.ranked]
+        return {f"mrr@{mrr_k}": mrr_at_k(ranked, qrels, mrr_k),
+                f"recall@{recall_k}": recall_at_k(ranked, qrels, recall_k),
+                "breakdown_ms": resp.breakdown.ms()}
+
+    def serve(self, policy=None):
+        """Start a continuous-batching ``RetrievalServer`` over this stack.
+        Caller owns shutdown()."""
+        from repro.serve.engine import RetrievalServer
+        from repro.serve.scheduler import BatchPolicy
+        policy = policy or BatchPolicy(max_batch=self.cfg.serve.max_batch,
+                                       max_wait_s=self.cfg.serve.max_wait_s)
+        return RetrievalServer(self.backend, policy=policy)
+
+    def with_mode(self, mode: str, **retrieval_overrides) -> "Pipeline":
+        """A new ``Pipeline`` sharing this one's corpus / index / layout but
+        running a different backend (the paper's mode comparisons). The new
+        pipeline owns its own storage tier; close both."""
+        cfg = PipelineConfig.from_dict(self.cfg.to_dict())
+        cfg.retrieval.mode = mode
+        valid = {f.name for f in dataclasses.fields(cfg.retrieval)}
+        for k, v in retrieval_overrides.items():
+            if k not in valid:
+                raise TypeError(f"unknown RetrievalConfig field {k!r}; "
+                                f"expected one of {sorted(valid)}")
+            setattr(cfg.retrieval, k, v)
+        return self._assemble(cfg, self.corpus, self.index, self.layout,
+                              cost_model=self.backend.cost,
+                              compute=self.backend.compute)
+
+    # -- persistence --------------------------------------------------------
+    def save(self, out_dir: str) -> str:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "config.json"), "w") as f:
+            json.dump(self.cfg.to_dict(), f, indent=1)
+        persist.save_index(self.index, os.path.join(out_dir, "index.npz"))
+        persist.save_layout(self.layout, os.path.join(out_dir, "layout.npz"))
+        if self.corpus is not None:
+            persist.save_corpus(self.corpus,
+                                os.path.join(out_dir, "corpus.npz"))
+        return out_dir
+
+    @classmethod
+    def load(cls, out_dir: str, *, mode: str | None = None,
+             cost_model=None, compute=None) -> "Pipeline":
+        """Rebuild a saved stack without re-clustering or re-packing.
+        ``mode`` overrides the saved retrieval backend."""
+        with open(os.path.join(out_dir, "config.json")) as f:
+            cfg = PipelineConfig.from_dict(json.load(f))
+        if mode is not None:
+            cfg.retrieval.mode = mode
+        index = persist.load_index(os.path.join(out_dir, "index.npz"))
+        layout = persist.load_layout(os.path.join(out_dir, "layout.npz"))
+        corpus_path = os.path.join(out_dir, "corpus.npz")
+        corpus = (persist.load_corpus(corpus_path)
+                  if os.path.exists(corpus_path) else None)
+        return cls._assemble(cfg, corpus, index, layout,
+                             cost_model=cost_model, compute=compute)
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self):
+        self.tier.close()
+
+    def __enter__(self) -> "Pipeline":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

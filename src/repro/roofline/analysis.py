@@ -132,6 +132,10 @@ class Roofline:
 def extract_raw(compiled) -> dict:
     """Per-device (flops, bytes, wire bytes, per-kind breakdown)."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        # older jax returns one properties dict per program; sum the totals
+        ca = {k: sum(float(prog.get(k, 0.0)) for prog in ca)
+              for k in ("flops", "bytes accessed")}
     coll = parse_collectives(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

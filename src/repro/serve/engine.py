@@ -10,7 +10,6 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.espn import ESPNConfig, ESPNRetriever
 from repro.serve.scheduler import BatchPolicy, ContinuousBatcher, Request
 
 
@@ -41,8 +40,10 @@ class ServeStats:
 
 
 class RetrievalServer:
-    def __init__(self, retriever: ESPNRetriever, *, policy: BatchPolicy | None
-                 = None):
+    """Continuous batching in front of anything with ``query_batch`` — an
+    ``ESPNRetriever`` or a ``repro.pipeline`` RetrievalBackend."""
+
+    def __init__(self, retriever, *, policy: BatchPolicy | None = None):
         self.retriever = retriever
         self.stats = ServeStats()
         self.batcher = ContinuousBatcher(self._handle,

@@ -1,0 +1,63 @@
+"""Hypothesis shim: use the real library when installed, otherwise fall back
+to a minimal fixed-seed sampler so the property/kernel test modules still
+collect and run (the container cannot pip-install hypothesis).
+
+The fallback covers exactly the strategy surface these tests use —
+``st.integers(lo, hi)`` and ``st.sampled_from(seq)`` — and replays each
+``@given`` test over a deterministic set of samples (capped well below
+hypothesis's max_examples to keep CI time bounded). No shrinking, no
+database; a failure prints the drawn kwargs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as np
+
+    _FALLBACK_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample          # fn(rng) -> drawn value
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            pool = list(seq)
+            return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+    def settings(max_examples: int | None = None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps): pytest must not mistake
+            # the drawn parameters for fixtures
+            def wrapper():
+                n = min(getattr(wrapper, "_max_examples", None)
+                        or _FALLBACK_EXAMPLES, _FALLBACK_EXAMPLES)
+                for i in range(n):
+                    rng = np.random.default_rng(0xE59A + i)
+                    drawn = {k: s.sample(rng)
+                             for k, s in strategies.items()}
+                    try:
+                        fn(**drawn)
+                    except Exception:
+                        print(f"falsifying example ({fn.__name__}): {drawn}")
+                        raise
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

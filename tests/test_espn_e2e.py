@@ -1,104 +1,91 @@
-"""End-to-end ESPN pipeline: exactness, quality, latency-model structure."""
+"""End-to-end ESPN pipeline through the ``repro.pipeline`` facade:
+exactness, quality, latency-model structure."""
 import numpy as np
 import pytest
 
-from repro.core.espn import ESPNConfig, ESPNRetriever
-from repro.core.ivf import build_ivf
 from repro.core.metrics import mrr_at_k, recall_at_k
 from repro.core.quantize import memory_report
-from repro.storage.io_engine import StorageTier
-from repro.storage.layout import pack
+from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                            StorageConfig)
+
+
+def _cfg(mode="espn", **kw):
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64, mem_budget_frac=1.0),
+        retrieval=RetrievalConfig(mode=mode, nprobe=16, k_candidates=100,
+                                  prefetch_step=0.3, **kw))
+    cfg.index.ncells = 32
+    return cfg
 
 
 @pytest.fixture(scope="module")
-def stack(small_corpus):
-    c = small_corpus
-    index = build_ivf(c.cls, ncells=32, iters=6)
-    layout = pack(c.cls, c.bow, dtype=np.float16)
-    return c, index, layout
+def base(small_corpus):
+    pipe = Pipeline.build(_cfg(), corpus=small_corpus)
+    yield pipe
+    pipe.close()
 
 
-def _retriever(index, layout, mode, **kw):
-    stacks = {"espn": "espn", "gds": "espn", "dram": "dram", "mmap": "mmap",
-              "swap": "swap"}
-    tier = StorageTier(layout, stack=stacks[mode], t_max=64,
-                       mem_budget_bytes=layout.nbytes)
-    return ESPNRetriever(index, tier,
-                         ESPNConfig(mode=mode, nprobe=16, k_candidates=100,
-                                    prefetch_step=0.3, **kw))
-
-
-def test_espn_ranking_identical_to_dram(stack):
+def test_espn_ranking_identical_to_dram(base):
     """Offloading must never change scores (exact mode)."""
-    c, index, layout = stack
-    r_espn = _retriever(index, layout, "espn")
-    r_dram = _retriever(index, layout, "dram")
-    a = r_espn.query_batch(c.queries_cls, c.queries_bow, c.query_lens)
-    b = r_dram.query_batch(c.queries_cls, c.queries_bow, c.query_lens)
+    r_dram = base.with_mode("dram")
+    a = base.search()
+    b = r_dram.search()
     for x, y in zip(a.ranked, b.ranked):
         np.testing.assert_array_equal(x.doc_ids[:20], y.doc_ids[:20])
         np.testing.assert_allclose(x.scores[:20], y.scores[:20], atol=1e-4)
+    r_dram.close()
 
 
-def test_partial_rerank_quality_retention(stack):
+def test_partial_rerank_quality_retention(base):
     """Fig 6: partial re-ranking keeps ~99% of MRR@10."""
-    c, index, layout = stack
-    full = _retriever(index, layout, "espn")
-    part = _retriever(index, layout, "espn", rerank_count=32)
-    mrr_full = mrr_at_k([r.doc_ids for r in full.query_batch(
-        c.queries_cls, c.queries_bow, c.query_lens).ranked], c.qrels, 10)
-    mrr_part = mrr_at_k([r.doc_ids for r in part.query_batch(
-        c.queries_cls, c.queries_bow, c.query_lens).ranked], c.qrels, 10)
+    c = base.corpus
+    part = base.with_mode("espn", rerank_count=32)
+    mrr_full = base.evaluate()["mrr@10"]
+    mrr_part = part.evaluate()["mrr@10"]
     assert mrr_part >= 0.93 * mrr_full
     # and the bandwidth bill must drop
-    r_full = full.query_batch(c.queries_cls[:4], c.queries_bow[:4],
-                              c.query_lens[:4])
-    r_part = part.query_batch(c.queries_cls[:4], c.queries_bow[:4],
-                              c.query_lens[:4])
+    q = (c.queries_cls[:4], c.queries_bow[:4], c.query_lens[:4])
+    r_full = base.search(*q)
+    r_part = part.search(*q)
     assert r_part.breakdown.bytes_read < r_full.breakdown.bytes_read / 2
+    part.close()
 
 
-def test_rerank_all_equals_rerank_none_count(stack):
-    c, index, layout = stack
-    r1 = _retriever(index, layout, "espn")
-    r2 = _retriever(index, layout, "espn", rerank_count=100)
-    a = r1.query_batch(c.queries_cls[:4], c.queries_bow[:4], c.query_lens[:4])
-    b = r2.query_batch(c.queries_cls[:4], c.queries_bow[:4], c.query_lens[:4])
+def test_rerank_all_equals_rerank_none_count(base):
+    c = base.corpus
+    r2 = base.with_mode("espn", rerank_count=100)
+    q = (c.queries_cls[:4], c.queries_bow[:4], c.query_lens[:4])
+    a = base.search(*q)
+    b = r2.search(*q)
     for x, y in zip(a.ranked, b.ranked):
         np.testing.assert_array_equal(x.doc_ids, y.doc_ids)
+    r2.close()
 
 
-def test_latency_ordering_mmap_vs_espn(stack):
+def test_latency_ordering_mmap_vs_espn(base):
     """Tables 4/5 structure: mmap under memory pressure >> espn ~ dram."""
-    c, index, layout = stack
-    tier_mmap = StorageTier(layout, stack="mmap",
-                            mem_budget_bytes=layout.nbytes // 8)
-    tier_espn = StorageTier(layout, stack="espn")
-    tier_dram = StorageTier(layout, stack="dram",
-                            mem_budget_bytes=layout.nbytes)
-    from repro.core.espn import ESPNConfig as C
-    r_mmap = ESPNRetriever(index, tier_mmap, C(mode="mmap", nprobe=16,
-                                               k_candidates=100))
-    r_espn = ESPNRetriever(index, tier_espn, C(mode="espn", nprobe=16,
-                                               k_candidates=100,
-                                               prefetch_step=0.3))
-    r_dram = ESPNRetriever(index, tier_dram, C(mode="dram", nprobe=16,
-                                               k_candidates=100))
+    c = base.corpus
+    tight = PipelineConfig.from_dict(base.cfg.to_dict())
+    tight.retrieval.mode = "mmap"
+    tight.storage.mem_budget_frac = 0.125
+    r_mmap = Pipeline.from_artifacts(tight, index=base.index,
+                                     layout=base.layout, corpus=c)
+    r_dram = base.with_mode("dram")
     q = (c.queries_cls[:1], c.queries_bow[:1], c.query_lens[:1])
-    t_mmap = r_mmap.query_batch(*q).breakdown.total_s
-    t_espn = r_espn.query_batch(*q).breakdown.total_s
-    t_dram = r_dram.query_batch(*q).breakdown.total_s
+    t_mmap = r_mmap.search(*q).breakdown.total_s
+    t_espn = base.search(*q).breakdown.total_s
+    t_dram = r_dram.search(*q).breakdown.total_s
     assert t_mmap > t_espn
     assert t_espn < 2.5 * t_dram      # "near-memory" latency
+    r_mmap.close()
+    r_dram.close()
 
 
-def test_quality_sane(stack):
-    c, index, layout = stack
-    r = _retriever(index, layout, "espn")
-    resp = r.query_batch(c.queries_cls, c.queries_bow, c.query_lens)
+def test_quality_sane(base):
+    resp = base.search()
     ranked = [x.doc_ids for x in resp.ranked]
-    assert mrr_at_k(ranked, c.qrels, 10) > 0.5
-    assert recall_at_k(ranked, c.qrels, 100) > 0.7
+    assert mrr_at_k(ranked, base.corpus.qrels, 10) > 0.5
+    assert recall_at_k(ranked, base.corpus.qrels, 100) > 0.7
 
 
 def test_memory_factor_5_to_16x():

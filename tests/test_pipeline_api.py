@@ -1,0 +1,149 @@
+"""The ``repro.pipeline`` facade: backend registry, config round-trips,
+save/load persistence, and the CLI smoke path."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                            StorageConfig, available_backends, get_backend)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MODES = ("espn", "gds", "mmap", "swap", "dram")
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_all_five_modes_registered():
+    assert set(MODES) <= set(available_backends())
+    for mode in MODES:
+        cls = get_backend(mode)
+        assert cls.name == mode
+        assert cls.storage_stack in ("espn", "mmap", "swap", "dram")
+
+
+def test_unknown_mode_error_lists_backends():
+    with pytest.raises(KeyError) as e:
+        get_backend("muvera")
+    msg = str(e.value)
+    assert "muvera" in msg
+    for mode in MODES:
+        assert mode in msg
+
+
+def test_espn_retriever_rejects_unknown_mode(small_corpus):
+    from repro.core.espn import ESPNConfig, ESPNRetriever
+    with pytest.raises(KeyError):
+        ESPNRetriever(None, None, ESPNConfig(mode="nope"))
+
+
+# -- config round-trips -----------------------------------------------------
+
+def test_config_dict_round_trip():
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64, mem_budget_frac=0.5),
+        retrieval=RetrievalConfig(mode="mmap", nprobe=8, rerank_count=32))
+    cfg.corpus.n_docs = 1234
+    d = cfg.to_dict()
+    assert PipelineConfig.from_dict(d) == cfg
+    # and survives JSON (what Pipeline.save writes)
+    assert PipelineConfig.from_dict(json.loads(json.dumps(d))) == cfg
+
+
+def test_config_from_dict_rejects_unknown_section():
+    with pytest.raises(KeyError):
+        PipelineConfig.from_dict({"corpsu": {}})
+
+
+def test_config_cli_round_trip():
+    import argparse
+    ap = PipelineConfig.add_cli_args(argparse.ArgumentParser())
+    args = ap.parse_args(["--docs", "777", "--mode", "swap", "--rerank",
+                          "64", "--nprobe", "9"])
+    cfg = PipelineConfig.from_cli(args)
+    assert cfg.corpus.n_docs == 777
+    assert cfg.retrieval.mode == "swap"
+    assert cfg.retrieval.rerank_count == 64
+    assert cfg.retrieval.nprobe == 9
+    # defaults flow through; the tree still dict-round-trips
+    assert PipelineConfig.from_dict(cfg.to_dict()) == cfg
+
+
+# -- build / modes / persistence -------------------------------------------
+
+@pytest.fixture(scope="module")
+def built(small_corpus):
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64),
+        retrieval=RetrievalConfig(mode="espn", nprobe=16, k_candidates=50,
+                                  prefetch_step=0.3))
+    cfg.index.ncells = 32
+    pipe = Pipeline.build(cfg, corpus=small_corpus)
+    yield pipe
+    pipe.close()
+
+
+def test_every_backend_runs_and_agrees_on_exact_ranking(built):
+    c = built.corpus
+    q = (c.queries_cls[:6], c.queries_bow[:6], c.query_lens[:6])
+    ref = built.search(*q)
+    for mode in MODES:
+        if mode == "espn":
+            continue
+        pipe = built.with_mode(mode)
+        resp = pipe.search(*q)
+        for x, y in zip(ref.ranked, resp.ranked):
+            np.testing.assert_array_equal(x.doc_ids[:10], y.doc_ids[:10])
+        assert resp.breakdown.total_s > 0
+        pipe.close()
+
+
+def test_save_load_identical_results(built, tmp_path):
+    out = built.search()
+    built.save(str(tmp_path / "art"))
+    loaded = Pipeline.load(str(tmp_path / "art"))
+    assert loaded.cfg == built.cfg
+    assert loaded.corpus.n_docs == built.corpus.n_docs
+    resp = loaded.search()
+    for x, y in zip(out.ranked, resp.ranked):
+        np.testing.assert_array_equal(x.doc_ids, y.doc_ids)
+        np.testing.assert_allclose(x.scores, y.scores, atol=1e-5)
+    # mode override on load goes through the registry
+    dram = Pipeline.load(str(tmp_path / "art"), mode="dram")
+    assert dram.tier.stack == "dram"
+    dram.close()
+    loaded.close()
+
+
+def test_from_embeddings_searches(built):
+    c = built.corpus
+    sub = list(range(200))
+    pipe = Pipeline.from_embeddings(
+        PipelineConfig(storage=StorageConfig(t_max=64),
+                       retrieval=RetrievalConfig(mode="espn", nprobe=4,
+                                                 k_candidates=20)),
+        c.cls[sub], [c.bow[i] for i in sub])
+    assert pipe.corpus is None
+    resp = pipe.search(c.queries_cls[:2], c.queries_bow[:2],
+                       c.query_lens[:2])
+    assert len(resp.ranked) == 2
+    with pytest.raises(ValueError):
+        pipe.search()                     # no corpus attached
+    pipe.close()
+
+
+# -- CLI smoke --------------------------------------------------------------
+
+def test_cli_smoke_espn():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.pipeline", "--docs", "2000",
+         "--queries", "8", "--mode", "espn"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "MRR@10=" in r.stdout
+    assert "breakdown" in r.stdout

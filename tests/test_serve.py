@@ -43,21 +43,18 @@ def test_hedged_read_mitigates_straggler():
 
 
 def test_retrieval_server_end_to_end(small_corpus):
-    from repro.core.espn import ESPNConfig, ESPNRetriever
-    from repro.core.ivf import build_ivf
-    from repro.serve.engine import RetrievalServer
-    from repro.storage.io_engine import StorageTier
-    from repro.storage.layout import pack
+    from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                                StorageConfig)
 
     c = small_corpus
-    index = build_ivf(c.cls, ncells=32, iters=4)
-    layout = pack(c.cls, c.bow, dtype=np.float16)
-    tier = StorageTier(layout, stack="espn", t_max=64)
-    ret = ESPNRetriever(index, tier, ESPNConfig(mode="espn", nprobe=16,
-                                                k_candidates=50,
-                                                prefetch_step=0.3))
-    srv = RetrievalServer(ret, policy=BatchPolicy(max_batch=8,
-                                                  max_wait_s=0.02))
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64),
+        retrieval=RetrievalConfig(mode="espn", nprobe=16, k_candidates=50,
+                                  prefetch_step=0.3))
+    cfg.index.ncells = 32
+    cfg.index.iters = 4
+    pipe = Pipeline.build(cfg, corpus=c)
+    srv = pipe.serve(policy=BatchPolicy(max_batch=8, max_wait_s=0.02))
     reqs = [srv.query_async(c.queries_cls[i], c.queries_bow[i],
                             int(c.query_lens[i])) for i in range(12)]
     for r in reqs:
@@ -67,4 +64,4 @@ def test_retrieval_server_end_to_end(small_corpus):
     assert s["n"] == 12
     assert s["p99_ms"] > 0
     srv.shutdown()
-    tier.close()
+    pipe.close()
