@@ -11,7 +11,6 @@ prefetch budget, hit-rate from the measured Fig-7 value.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import row
 from repro.storage import ssd as S

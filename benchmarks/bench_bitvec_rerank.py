@@ -1,0 +1,58 @@
+"""Bit-vector filtered re-rank (Nardini et al. 2024) vs the espn backend:
+BOW bytes read per query and MRR@10 retention at several filter widths R.
+The resident sign-bit table is ~1/16th of the fp16 BOW blob, and the SSD
+only serves the R survivors of the in-memory bit filter."""
+from __future__ import annotations
+
+from benchmarks.common import row, scoring_corpus, scoring_index, scoring_layout
+from repro.core.metrics import mrr_at_k
+from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                            StorageConfig)
+
+
+def main() -> list[str]:
+    c = scoring_corpus()
+    index = scoring_index(c)
+    layout = scoring_layout(c)
+    out = []
+    nprobe = max(8, index.ncells // 10)
+    base = Pipeline.from_artifacts(
+        PipelineConfig(storage=StorageConfig(t_max=180),
+                       retrieval=RetrievalConfig(mode="espn", nprobe=nprobe,
+                                                 k_candidates=1000,
+                                                 prefetch_step=0.2)),
+        index=index, layout=layout, corpus=c)
+
+    def run(pipe):
+        resp = pipe.search()
+        ranked = [x.doc_ids for x in resp.ranked]
+        return (mrr_at_k(ranked, c.qrels, 10),
+                resp.breakdown.bytes_read / len(ranked),
+                resp.breakdown.total_s * 1e3 / len(ranked))
+
+    espn_mrr, espn_bytes, espn_ms = run(base)
+    out.append(row("bitvec_rerank/espn-exact", 0.0,
+                   f"mrr=1.000 bytes/q={espn_bytes/1024:.0f}KB "
+                   f"ms/q={espn_ms:.2f}"))
+    widths = (32, 64, 128, 256)
+    # first with_mode packs the bit table; later ones share it via tier.bits
+    bv0 = base.with_mode("bitvec", bit_filter=widths[0])
+    for rr in widths:
+        pipe = bv0 if rr == widths[0] else bv0.with_mode("bitvec",
+                                                         bit_filter=rr)
+        mrr, b, ms = run(pipe)
+        resident = pipe.tier.bits.nbytes
+        if pipe is not bv0:
+            pipe.close()
+        out.append(row(
+            f"bitvec_rerank/R-{rr}", 0.0,
+            f"norm_mrr={mrr/max(espn_mrr,1e-9):.4f} "
+            f"bytes/q={b/1024:.0f}KB bw_saving={espn_bytes/max(b,1):.1f}x "
+            f"bit_table={resident/2**20:.1f}MB ms/q={ms:.2f}"))
+    bv0.close()
+    base.close()
+    return out
+
+
+if __name__ == "__main__":
+    main()

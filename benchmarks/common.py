@@ -14,7 +14,10 @@ import os
 import numpy as np
 
 CACHE = os.path.join(os.path.dirname(__file__), "..", ".bench_cache")
-FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+#: REPRO_BENCH_SMOKE=1 implies FAST and shrinks corpora to seconds-scale
+#: sizes — the CI smoke job's "the entry points still run" gate.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+FAST = SMOKE or os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 
 
 def cached(name: str, builder, save, load):
@@ -46,7 +49,7 @@ def _cached_layout(name: str, builder):
 def v1_like_corpus():
     """MS-MARCO-v1-like ratios: docs/cell ~270, K=1000 << N."""
     from repro.data.synthetic import make_corpus
-    n = 120_000 if FAST else 1_000_000
+    n = 20_000 if SMOKE else 120_000 if FAST else 1_000_000
     return _cached_corpus(f"corpus_v1_{n}", lambda: make_corpus(
         n_docs=n, n_queries=24, d_cls=64, n_clusters=1024, with_bow=False,
         mean_len=40, max_len=120, seed=0))
@@ -63,9 +66,10 @@ def v1_index(corpus):
 def scoring_corpus():
     """Smaller corpus WITH BOW tokens (rerank-quality + latency benches)."""
     from repro.data.synthetic import make_corpus
-    n = 8_000 if FAST else 40_000
+    n = 2_000 if SMOKE else 8_000 if FAST else 40_000
+    nq = 8 if SMOKE else 48
     return _cached_corpus(f"corpus_bow_{n}", lambda: make_corpus(
-        n_docs=n, n_queries=48, n_clusters=256, mean_len=55, max_len=180,
+        n_docs=n, n_queries=nq, n_clusters=256, mean_len=55, max_len=180,
         seed=1))
 
 

@@ -14,6 +14,7 @@ SUITES = [
     ("fig5:ivf-recall", "benchmarks.bench_ivf_recall"),
     ("fig7:prefetcher-hit-rate", "benchmarks.bench_prefetcher"),
     ("fig6:partial-rerank", "benchmarks.bench_partial_rerank"),
+    ("beyond:bitvec-filtered-rerank", "benchmarks.bench_bitvec_rerank"),
     ("tables4-5:latency-vs-memory", "benchmarks.bench_latency_memory"),
     ("figs8-10:batch-scaling", "benchmarks.bench_batch_scaling"),
     ("kernels", "benchmarks.bench_kernels"),

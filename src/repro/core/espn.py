@@ -11,6 +11,7 @@ Retrieval methods (each a registered ``repro.pipeline`` backend):
   "gds"   GDS-analogue reads, no prefetch (everything in the critical path)
   "mmap" / "swap"  conventional O/S paths under a memory budget
   "dram"  whole index resident (the paper's upper-bound baseline)
+  "bitvec" resident sign-bit filter + SSD rerank of the survivors only
 
 This module holds the shared pipeline types (config, clock, latency
 breakdown, response); the per-mode query paths live in
@@ -36,6 +37,8 @@ class ComputeModel:
     encode_base_s: float = 2.2e-3      # query-encoder launch+inference floor
     encode_flops_s: float = 60e12
     encoder_gflops: float = 4.4        # distilBERT fwd @ 32 tokens
+    bitsim_speedup: float = 10.0       # packed-bit MaxSim vs full precision
+                                       # (Nardini et al. 2024 report ~10x)
 
     def encode_time(self, batch: int) -> float:
         return self.encode_base_s + batch * self.encoder_gflops * 1e9 / self.encode_flops_s
@@ -44,6 +47,11 @@ class ComputeModel:
                     d_bow: int) -> float:
         flops = 2.0 * n_docs * q_len * mean_tokens * d_bow
         return 0.3e-3 + flops / self.maxsim_flops_s
+
+    def bitsim_time(self, n_docs: int, q_len: int, mean_tokens: float,
+                    d_bow: int) -> float:
+        flops = 2.0 * n_docs * q_len * mean_tokens * d_bow
+        return 0.05e-3 + flops / (self.maxsim_flops_s * self.bitsim_speedup)
 
 
 @dataclass(frozen=True)
@@ -56,6 +64,7 @@ class ESPNConfig:
     alpha: float = 1.0                 # CLS/BOW aggregation weight
     k_return: int = 100
     use_pallas: bool = False           # route MaxSim through the TPU kernel
+    bit_filter: int = 128              # bitvec: full-precision rerank width R
 
 
 @dataclass

@@ -57,6 +57,25 @@ class QueryResult:
                    hit_mask=np.zeros(len(doc_ids), bool), stats=stats,
                    miss_buffers=(read.cls, read.bow, read.lens))
 
+    @classmethod
+    def from_selected_read(cls, doc_ids: np.ndarray, cand_scores: np.ndarray,
+                           read, sel: np.ndarray, *,
+                           ann_s: float) -> "QueryResult":
+        """Result where only candidate positions ``sel`` were fetched (e.g.
+        the bitvec filter's survivors): row j of the read buffers holds
+        candidate ``sel[j]``. The buffers are exposed through the
+        ``prefetched`` id->row map so ``rerank_query`` scores exactly the
+        selected docs; I/O accounting stays in the critical path.
+        """
+        stats = PrefetchStats(hit_rate=0.0, n_prefetched=0, n_hits=0,
+                              n_misses=len(sel), budget_s=0.0,
+                              prefetch_io_s=0.0, leaked_s=0.0,
+                              miss_io_s=read.sim_seconds, ann_s=ann_s)
+        return cls(doc_ids=doc_ids, cand_scores=cand_scores,
+                   hit_mask=np.zeros(len(doc_ids), bool), stats=stats,
+                   prefetched={int(doc_ids[p]): j for j, p in enumerate(sel)},
+                   buffers=(read.cls, read.bow, read.lens))
+
 
 class ANNPrefetcher:
     """Two-phase IVF search + overlapped storage prefetch."""

@@ -12,7 +12,53 @@ from dataclasses import dataclass
 
 import numpy as np
 
-BYTES = {"fp32": 4, "fp16": 2, "int8": 1, "int4": 0.5}
+BYTES = {"fp32": 4, "fp16": 2, "int8": 1, "int4": 0.5, "binary": 0.125}
+
+#: Integer lane dtypes accepted by ``binary_pack`` (the bit-table packing
+#: dtype knob). uint8 wastes no padding for d % 32 != 0; uint32 matches the
+#: bitsim kernel's native lane width.
+PACK_DTYPES = ("uint8", "uint16", "uint32")
+
+
+def binary_pack(x: np.ndarray, dtype: str = "uint32") -> np.ndarray:
+    """Sign-bit packing of the last axis into integer lanes.
+
+    (..., d) floats -> (..., ceil(d / lane_bits)) unsigned ints, bit j of
+    lane w = 1 iff x[..., 32*w + j] > 0 (little-endian bit order, so a view
+    as uint8 round-trips across lane dtypes). This is the binarized token
+    representation of Nardini et al. 2024: 32x smaller than fp32, scored
+    asymmetrically against full-precision query tokens.
+    """
+    if dtype not in PACK_DTYPES:
+        raise ValueError(f"pack dtype {dtype!r}; expected one of {PACK_DTYPES}")
+    bits = (np.asarray(x) > 0).astype(np.uint8)
+    packed = np.packbits(bits, axis=-1, bitorder="little")
+    lane = np.dtype(dtype).itemsize
+    pad = -packed.shape[-1] % lane
+    if pad:
+        packed = np.concatenate(
+            [packed, np.zeros((*packed.shape[:-1], pad), np.uint8)], -1)
+    return np.ascontiguousarray(packed).view(dtype)
+
+
+def binary_unpack(packed: np.ndarray, d: int) -> np.ndarray:
+    """Inverse of ``binary_pack``: (..., W) lanes -> (..., d) fp32 in {-1,+1}."""
+    raw = np.ascontiguousarray(packed).view(np.uint8)
+    bits = np.unpackbits(raw, axis=-1, bitorder="little")[..., :d]
+    return bits.astype(np.float32) * 2.0 - 1.0
+
+
+def to_uint32_lanes(packed: np.ndarray) -> np.ndarray:
+    """Re-view any lane dtype as the kernel-native uint32 lanes (bit-exact;
+    pads the last axis with zero bytes when needed)."""
+    if packed.dtype == np.uint32:
+        return packed
+    raw = np.ascontiguousarray(packed).view(np.uint8)
+    pad = -raw.shape[-1] % 4
+    if pad:
+        raw = np.concatenate(
+            [raw, np.zeros((*raw.shape[:-1], pad), np.uint8)], -1)
+    return np.ascontiguousarray(raw).view(np.uint32)
 
 
 def quantize(x: np.ndarray, mode: str):

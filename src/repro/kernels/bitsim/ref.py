@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the packed-bit asymmetric MaxSim kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def unpack_bits(packed, d: int):
+    """(..., W) uint32 lanes -> (..., d) fp32 in {-1, +1} (little-endian bit
+    order, matching ``repro.core.quantize.binary_pack``)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*packed.shape[:-1], packed.shape[-1] * 32)[..., :d]
+    return flat.astype(jnp.float32) * 2.0 - 1.0
+
+
+def bitsim_ref(q, q_mask, docs_packed, doc_lens, *, d: int):
+    """Asymmetric MaxSim: full-precision query tokens against sign-binarized
+    document tokens.
+
+    q: (Lq, D) float; q_mask: (Lq,); docs_packed: (K, T, W) uint32 with
+    W*32 >= d == D; doc_lens: (K,) -> (K,) fp32 scores.
+    """
+    sgn = unpack_bits(docs_packed, d)                # (K, T, D) in {-1,+1}
+    s = jnp.einsum("qd,ktd->kqt", q.astype(jnp.float32), sgn)
+    t = docs_packed.shape[1]
+    tmask = jnp.arange(t)[None, None, :] < doc_lens[:, None, None]
+    s = jnp.where(tmask, s, NEG)
+    m = s.max(axis=-1)                               # (K, Lq)
+    m = m * q_mask.astype(jnp.float32)[None, :]
+    return m.sum(axis=-1)

@@ -6,13 +6,11 @@ physical axis rules come from launch/mesh.py:mesh_axes.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax import ShapeDtypeStruct
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

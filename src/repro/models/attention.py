@@ -5,8 +5,6 @@ reductions + all-reduce — the flash-decoding pattern, XLA-native).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

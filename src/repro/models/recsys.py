@@ -13,7 +13,7 @@ from jax import ShapeDtypeStruct
 
 from repro.configs.base import RecsysConfig
 from repro.models import embedding as emb
-from repro.models.layers import dense_init, mlp_apply, mlp_params, mlp_shapes
+from repro.models.layers import dense_init, mlp_apply, mlp_shapes
 
 
 # ---------------------------------------------------------------------------
@@ -52,7 +52,6 @@ def param_shapes(cfg: RecsysConfig):
 
 
 def init_params(cfg: RecsysConfig, rng):
-    import numpy as np
     shapes = param_shapes(cfg)
     flat, treedef = jax.tree.flatten(shapes)
     keys = jax.random.split(rng, len(flat))

@@ -12,7 +12,6 @@ Physical PartitionSpecs are resolved by ``partitioning.resolve``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

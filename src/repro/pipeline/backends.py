@@ -60,11 +60,14 @@ class RetrievalBackend(abc.ABC):
       storage_stack       the ``StorageTier`` software stack to run on
       needs_mem_budget    True for the O/S paths that operate under a page
                           cache budget (mmap / swap)
+      needs_bit_table     True for backends that filter against the resident
+                          sign-bit tier (the tier must carry a BitTable)
     """
 
     name: ClassVar[str] = ""
     storage_stack: ClassVar[str] = "espn"
     needs_mem_budget: ClassVar[bool] = False
+    needs_bit_table: ClassVar[bool] = False
 
     def __init__(self, index: IVFIndex, tier: StorageTier, cfg: ESPNConfig,
                  *, cost_model: ANNCostModel | None = None,
@@ -194,3 +197,58 @@ class SwapBackend(DirectBackend):
 class DRAMBackend(DirectBackend):
     """Whole index resident in memory: the paper's upper-bound baseline."""
     storage_stack = "dram"
+
+
+@register_backend("bitvec")
+class BitvecBackend(RetrievalBackend):
+    """Bit-vector compressed rerank (Nardini et al. 2024): every candidate is
+    first scored against the *resident* sign-bit table with a packed-bit
+    asymmetric MaxSim (no SSD traffic), then only the top ``bit_filter``
+    survivors are read from storage for full-precision MaxSim. Non-survivors
+    keep their alpha*CLS ordering, exactly like partial re-ranking — but the
+    survivors are chosen by a token-level signal instead of the CLS score,
+    so quality holds at much smaller R (and therefore far fewer BOW bytes
+    per query)."""
+
+    storage_stack = "espn"
+    needs_bit_table = True
+
+    def _retrieve(self, q_cls, q_bow, q_lens, bd):
+        import jax.numpy as jnp
+
+        from repro.kernels.bitsim.ops import bitsim
+
+        cfg = self.cfg
+        layout = self.tier.layout
+        mean_t = float(layout.n_tokens.mean())
+        scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
+        scores, ids = np.asarray(scores), np.asarray(ids)
+        bd.ann_s = self.cost.time(self.index, cfg.nprobe)
+        ranked = []
+        for b in range(q_cls.shape[0]):
+            fin = ids[b][ids[b] >= 0]
+            qlen = int(q_lens[b])
+            # 1) resident bit filter: score ALL candidates, zero SSD bytes
+            packed, lens = self.tier.read_bits(fin)
+            bit_s = np.asarray(bitsim(
+                jnp.asarray(q_bow[b][:qlen]),
+                jnp.ones((qlen,), jnp.float32),
+                jnp.asarray(packed), jnp.asarray(lens),
+                d=layout.d_bow, use_pallas=cfg.use_pallas))
+            bd.rerank_s += self.compute.bitsim_time(len(fin), qlen, mean_t,
+                                                    layout.d_bow)
+            # 2) SSD reads + full-precision MaxSim for the survivors only
+            sel = np.argsort(-bit_s, kind="stable")[:min(cfg.bit_filter,
+                                                         len(fin))]
+            read = self.tier.read(fin[sel])
+            bd.critical_io_s += read.sim_seconds
+            res = QueryResult.from_selected_read(fin, scores[b][:len(fin)],
+                                                 read, sel, ann_s=bd.ann_s)
+            out = rerank_query(q_bow[b], qlen, res, alpha=cfg.alpha,
+                               select=sel, doc_bytes=self.doc_bytes,
+                               use_pallas=cfg.use_pallas)
+            ranked.append(out)
+            bd.rerank_s += self._maxsim_time(len(sel), qlen)
+            bd.bytes_read += out.bow_bytes_read
+        bd.hit_rate = 0.0
+        return ranked

@@ -50,6 +50,8 @@ class StorageConfig:
     block: int = 4096
     t_max: int = 180                   # gather padding (max tokens read back)
     mem_budget_frac: float = 0.25      # page-cache budget for mmap/swap
+    bit_dtype: str = "uint32"          # resident bit-table lane dtype
+                                       # (uint8/uint16/uint32; bitvec only)
 
 
 @dataclass
@@ -63,6 +65,7 @@ class RetrievalConfig:
     alpha: float = 1.0
     k_return: int = 100
     use_pallas: bool = False
+    bit_filter: int = 128              # bitvec: survivors that get full rerank
 
     def to_espn_config(self):
         from repro.core.espn import ESPNConfig
@@ -70,7 +73,8 @@ class RetrievalConfig:
                           k_candidates=self.k_candidates,
                           prefetch_step=self.prefetch_step,
                           rerank_count=self.rerank_count, alpha=self.alpha,
-                          k_return=self.k_return, use_pallas=self.use_pallas)
+                          k_return=self.k_return, use_pallas=self.use_pallas,
+                          bit_filter=self.bit_filter)
 
 
 @dataclass
@@ -121,6 +125,9 @@ class PipelineConfig:
         ap.add_argument("--quant", default=i.quant,
                         choices=["fp32", "fp16", "int8"])
         ap.add_argument("--dtype", default=s.dtype)
+        ap.add_argument("--bit-dtype", default=s.bit_dtype,
+                        choices=["uint8", "uint16", "uint32"],
+                        help="resident bit-table lane dtype (bitvec mode)")
         ap.add_argument("--t-max", type=int, default=s.t_max)
         ap.add_argument("--mem-budget-frac", type=float,
                         default=s.mem_budget_frac)
@@ -135,6 +142,9 @@ class PipelineConfig:
                         help="partial re-rank count (0 = exact)")
         ap.add_argument("--alpha", type=float, default=r.alpha)
         ap.add_argument("--use-pallas", action="store_true")
+        ap.add_argument("--bit-filter", type=int, default=r.bit_filter,
+                        help="bitvec: top-R bit-score survivors that get "
+                             "full-precision re-rank")
         ap.add_argument("--max-batch", type=int, default=v.max_batch)
         ap.add_argument("--max-wait-s", type=float, default=v.max_wait_s)
         return ap
@@ -153,12 +163,14 @@ class PipelineConfig:
             index=IndexConfig(ncells=args.ncells, iters=args.iters,
                               quant=args.quant),
             storage=StorageConfig(dtype=args.dtype, t_max=args.t_max,
-                                  mem_budget_frac=args.mem_budget_frac),
+                                  mem_budget_frac=args.mem_budget_frac,
+                                  bit_dtype=args.bit_dtype),
             retrieval=RetrievalConfig(mode=args.mode, nprobe=args.nprobe,
                                       k_candidates=args.k,
                                       prefetch_step=args.prefetch_step,
                                       rerank_count=args.rerank or None,
                                       alpha=args.alpha,
-                                      use_pallas=args.use_pallas),
+                                      use_pallas=args.use_pallas,
+                                      bit_filter=args.bit_filter),
             serve=ServeConfig(max_batch=args.max_batch,
                               max_wait_s=args.max_wait_s))

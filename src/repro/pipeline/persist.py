@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core.ivf import IVFIndex
 from repro.data.synthetic import Corpus
-from repro.storage.layout import EmbeddingLayout
+from repro.storage.layout import BitTable, EmbeddingLayout
 
 _EMPTY = np.zeros(0, np.float32)
 
@@ -60,6 +60,18 @@ def load_layout(path: str) -> EmbeddingLayout:
                            dtype=np.dtype(str(z["dtype"])),
                            scales=scales if scales.size else None,
                            block=int(z["block"]))
+
+
+# -- resident bit table (bitvec backend) ------------------------------------
+
+def save_bits(bits: BitTable, path: str) -> None:
+    np.savez(path, packed=bits.packed, starts=bits.starts, d_bow=bits.d_bow)
+
+
+def load_bits(path: str) -> BitTable:
+    z = np.load(path, allow_pickle=False)
+    return BitTable(packed=z["packed"], starts=z["starts"],
+                    d_bow=int(z["d_bow"]))
 
 
 # -- corpus -----------------------------------------------------------------

@@ -31,7 +31,8 @@ from repro.pipeline import persist
 from repro.pipeline.backends import RetrievalBackend, get_backend
 from repro.pipeline.config import PipelineConfig
 from repro.storage.io_engine import StorageTier
-from repro.storage.layout import EmbeddingLayout, pack
+from repro.storage.layout import (BitTable, EmbeddingLayout, bits_from_layout,
+                                  pack)
 
 
 class Pipeline:
@@ -104,12 +105,19 @@ class Pipeline:
     @classmethod
     def _assemble(cls, cfg: PipelineConfig, corpus: Corpus | None,
                   index: IVFIndex, layout: EmbeddingLayout, *,
-                  cost_model=None, compute=None) -> "Pipeline":
+                  cost_model=None, compute=None,
+                  bits: BitTable | None = None) -> "Pipeline":
         backend_cls = get_backend(cfg.retrieval.mode)
         budget = (int(layout.nbytes * cfg.storage.mem_budget_frac)
                   if backend_cls.needs_mem_budget else None)
+        if backend_cls.needs_bit_table:
+            if bits is None:
+                bits = bits_from_layout(layout, dtype=cfg.storage.bit_dtype)
+        else:
+            bits = None       # don't bill the bit table to other backends
         tier = StorageTier(layout, stack=backend_cls.storage_stack,
-                           t_max=cfg.storage.t_max, mem_budget_bytes=budget)
+                           t_max=cfg.storage.t_max, mem_budget_bytes=budget,
+                           bits=bits)
         backend = backend_cls(index, tier, cfg.retrieval.to_espn_config(),
                               cost_model=cost_model, compute=compute)
         return cls(cfg, corpus=corpus, index=index, layout=layout, tier=tier,
@@ -167,7 +175,8 @@ class Pipeline:
             setattr(cfg.retrieval, k, v)
         return self._assemble(cfg, self.corpus, self.index, self.layout,
                               cost_model=self.backend.cost,
-                              compute=self.backend.compute)
+                              compute=self.backend.compute,
+                              bits=self.tier.bits)
 
     # -- persistence --------------------------------------------------------
     def save(self, out_dir: str) -> str:
@@ -179,6 +188,9 @@ class Pipeline:
         if self.corpus is not None:
             persist.save_corpus(self.corpus,
                                 os.path.join(out_dir, "corpus.npz"))
+        if self.tier.bits is not None:
+            persist.save_bits(self.tier.bits,
+                              os.path.join(out_dir, "bits.npz"))
         return out_dir
 
     @classmethod
@@ -195,8 +207,12 @@ class Pipeline:
         corpus_path = os.path.join(out_dir, "corpus.npz")
         corpus = (persist.load_corpus(corpus_path)
                   if os.path.exists(corpus_path) else None)
+        bits_path = os.path.join(out_dir, "bits.npz")
+        bits = (persist.load_bits(bits_path)
+                if os.path.exists(bits_path) else None)
         return cls._assemble(cfg, corpus, index, layout,
-                             cost_model=cost_model, compute=compute)
+                             cost_model=cost_model, compute=compute,
+                             bits=bits)
 
     # -- lifecycle ----------------------------------------------------------
     def close(self):

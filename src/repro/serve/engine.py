@@ -5,7 +5,6 @@ real wall clock (queueing, host work) and the calibrated device clock
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import numpy as np

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.storage import ssd as ssd_lib
 from repro.storage.cache import PageCache
-from repro.storage.layout import EmbeddingLayout, gather_docs
+from repro.storage.layout import BitTable, EmbeddingLayout, gather_docs
 
 
 @dataclass
@@ -36,9 +36,10 @@ class StorageTier:
                  spec: ssd_lib.StorageSpec = ssd_lib.PM983_PCIE3,
                  stack: str = "espn", mem_budget_bytes: int | None = None,
                  t_max: int = 180, qd: int = 64, include_h2d: bool = True,
-                 n_io_threads: int = 4):
+                 n_io_threads: int = 4, bits: BitTable | None = None):
         assert stack in ("espn", "mmap", "swap", "dram")
         self.layout = layout
+        self.bits = bits              # resident sign-bit tier (bitvec filter)
         self.spec = spec
         self.stack = stack
         self.t_max = t_max
@@ -100,10 +101,22 @@ class StorageTier:
     def read_async(self, ids, t_max: int | None = None) -> Future:
         return self._pool.submit(self.read, ids, t_max)
 
+    def read_bits(self, ids, t_max: int | None = None):
+        """Gather packed sign bits for ``ids`` from the *resident* bit tier:
+        no SSD blocks, no simulated device time — the whole point of the
+        bitvec filter is that this read is a memory access."""
+        if self.bits is None:
+            raise RuntimeError(
+                "this StorageTier was built without a resident BitTable; "
+                "construct it with bits=pack_bits(...)")
+        return self.bits.gather(ids, t_max or self.t_max)
+
     # -- reporting -----------------------------------------------------------
     def memory_resident_bytes(self) -> int:
         """Host/device memory this tier requires (ESPN: offsets only)."""
         meta = self.layout.offsets.nbytes + self.layout.n_tokens.nbytes
+        if self.bits is not None:
+            meta += self.bits.nbytes
         if self.stack == "dram":
             return self.layout.nbytes + meta
         if self.stack in ("mmap", "swap"):

@@ -5,12 +5,19 @@ are packed together and aligned so a typical compressed document costs ONE
 I/O block instead of two. The "disk image" is a single uint8 numpy array;
 an offsets table (kept in host memory, as in the paper) maps doc id ->
 (start_block, n_blocks, n_tokens).
+
+``BitTable`` is the second, *resident* tier (Nardini et al. 2024): every
+document token sign-binarized and bit-packed, ~1/16th the fp16 BOW bytes, so
+the bitvec backend can filter candidates in memory and hit the SSD only for
+the survivors.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.core.quantize import binary_pack, to_uint32_lanes
 
 
 @dataclass
@@ -85,6 +92,77 @@ def unpack_doc(layout: EmbeddingLayout, i: int):
     if layout.scales is not None:
         vals = vals * layout.scales[i]
     return vals[:layout.d_cls], vals[layout.d_cls:].reshape(t, layout.d_bow)
+
+
+@dataclass
+class BitTable:
+    """Resident sign-bit table over all document tokens.
+
+    ``packed`` concatenates every doc's (t_i, W) bit-packed token matrix
+    along axis 0; ``starts`` is the (N+1,) token-offset prefix sum. Lane
+    dtype is a storage knob (``StorageConfig.bit_dtype``): uint8 wastes no
+    pad bytes when d_bow % 32 != 0, uint32 is the bitsim kernel's native
+    width. ``gather`` always hands back uint32 lanes (bit-exact re-view).
+    """
+    packed: np.ndarray            # (total_tokens, W) unsigned int lanes
+    starts: np.ndarray            # (N + 1,) int64 token offsets
+    d_bow: int
+    _lanes32: np.ndarray | None = field(default=None, repr=False,
+                                        compare=False)
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.starts) - 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.nbytes + self.starts.nbytes
+
+    def doc(self, i: int) -> np.ndarray:
+        return self.packed[self.starts[i]:self.starts[i + 1]]
+
+    @property
+    def lanes32(self) -> np.ndarray:
+        """Kernel-native uint32 view of the whole table, converted once (a
+        no-copy re-view when the pack dtype is already uint32) — gather is
+        the per-query hot path of the bitvec filter."""
+        if self._lanes32 is None:
+            self._lanes32 = to_uint32_lanes(self.packed)
+        return self._lanes32
+
+    def gather(self, ids, t_max: int):
+        """Padded uint32-lane gather: (len(ids), t_max, W32) + lengths."""
+        ids = np.asarray(ids, np.int64)
+        lanes = self.lanes32
+        out = np.zeros((len(ids), t_max, lanes.shape[-1]), np.uint32)
+        lens = np.zeros(len(ids), np.int32)
+        for j, i in enumerate(ids):
+            rows = lanes[self.starts[i]:self.starts[i + 1]]
+            t = min(rows.shape[0], t_max)
+            out[j, :t] = rows[:t]
+            lens[j] = t
+        return out, lens
+
+
+def pack_bits(bow_embs: list[np.ndarray], *, dtype: str = "uint32") -> BitTable:
+    """Sign-binarize and bit-pack a ragged BOW list into one resident table."""
+    n_tokens = np.array([b.shape[0] for b in bow_embs], np.int64)
+    starts = np.zeros(len(bow_embs) + 1, np.int64)
+    np.cumsum(n_tokens, out=starts[1:])
+    flat = np.concatenate([b for b in bow_embs], axis=0) if bow_embs else \
+        np.zeros((0, 1), np.float32)
+    return BitTable(packed=binary_pack(flat, dtype=dtype), starts=starts,
+                    d_bow=flat.shape[-1])
+
+
+def bits_from_layout(layout: EmbeddingLayout, *,
+                     dtype: str = "uint32") -> BitTable:
+    """Build the resident bit table from an already-packed disk layout (the
+    save/load and from_artifacts paths, where the fp32 BOW list is gone).
+    Signs survive fp16/int8 storage quantization, so this is equivalent to
+    packing the original embeddings."""
+    bows = [unpack_doc(layout, i)[1] for i in range(layout.n_docs)]
+    return pack_bits(bows, dtype=dtype)
 
 
 def gather_docs(layout: EmbeddingLayout, ids, t_max: int):

@@ -16,7 +16,6 @@ an SSD delivers ~1/latency IOPS; at qd>=32 it reaches the datasheet number.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, replace
 
 

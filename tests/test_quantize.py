@@ -1,0 +1,78 @@
+"""Quantizer round-trips (int4 nibble packing, sign-bit binary packing) and
+the backend-registry error message for typo'd names."""
+import numpy as np
+import pytest
+
+from repro.core.quantize import (PACK_DTYPES, binary_pack, binary_unpack,
+                                 dequantize, quantize, to_uint32_lanes)
+
+RNG = np.random.default_rng(3)
+
+
+# ---------------------------------------------------------------- int4 / int8
+
+@pytest.mark.parametrize("d", [8, 15, 32, 33])
+def test_int4_pack_unpack_round_trip(d):
+    x = RNG.standard_normal((16, d)).astype(np.float32)
+    stored, scales = quantize(x, "int4")
+    assert stored.dtype == np.uint8
+    assert stored.shape[-1] == (d + 1) // 2          # two nibbles per byte
+    back = dequantize(stored, scales, "int4", d=d)
+    assert back.shape == x.shape
+    # max quantization error is half an int4 step (scale = amax/7)
+    np.testing.assert_allclose(back, x, atol=float(scales.max()) * 0.5 + 1e-6)
+
+
+def test_int8_round_trip():
+    x = RNG.standard_normal((8, 32)).astype(np.float32)
+    stored, scales = quantize(x, "int8")
+    back = dequantize(stored, scales, "int8")
+    np.testing.assert_allclose(back, x, atol=float(scales.max()) * 0.5 + 1e-6)
+
+
+def test_int4_values_survive_exactly():
+    """Values already on the int4 grid (amax=7 -> scale 1) round-trip."""
+    grid = np.arange(-7, 8, dtype=np.float32)[None]
+    stored, scales = quantize(grid, "int4")
+    back = dequantize(stored, scales, "int4", d=15)
+    np.testing.assert_allclose(back, grid, atol=1e-5)
+
+
+# -------------------------------------------------------------------- binary
+
+@pytest.mark.parametrize("d", [1, 8, 31, 32, 33, 64, 96, 128])
+@pytest.mark.parametrize("dtype", PACK_DTYPES)
+def test_binary_pack_unpack_round_trip(d, dtype):
+    x = RNG.standard_normal((5, 7, d)).astype(np.float32)
+    packed = binary_pack(x, dtype=dtype)
+    assert packed.dtype == np.dtype(dtype)
+    lane_bits = np.dtype(dtype).itemsize * 8
+    assert packed.shape == (5, 7, -(-d // lane_bits))
+    back = binary_unpack(packed, d)
+    np.testing.assert_array_equal(back, np.where(x > 0, 1.0, -1.0))
+
+
+def test_binary_pack_dtypes_bit_identical():
+    """All lane dtypes carry the same bits (little-endian byte order)."""
+    x = RNG.standard_normal((4, 70)).astype(np.float32)
+    lanes = [to_uint32_lanes(binary_pack(x, dtype=t)) for t in PACK_DTYPES]
+    for a in lanes[1:]:
+        np.testing.assert_array_equal(lanes[0], a)
+
+
+def test_binary_pack_rejects_unknown_dtype():
+    with pytest.raises(ValueError):
+        binary_pack(np.zeros((2, 8), np.float32), dtype="int64")
+
+
+# ------------------------------------------------------------- registry typo
+
+def test_registry_typo_error_names_bitvec():
+    """A typo'd backend name must fail loudly and list the real names."""
+    from repro.pipeline import get_backend
+    with pytest.raises(KeyError) as e:
+        get_backend("bitvce")
+    msg = str(e.value)
+    assert "bitvce" in msg
+    for name in ("bitvec", "espn", "gds", "mmap", "swap", "dram"):
+        assert name in msg
