@@ -15,6 +15,7 @@ SUITES = [
     ("fig7:prefetcher-hit-rate", "benchmarks.bench_prefetcher"),
     ("fig6:partial-rerank", "benchmarks.bench_partial_rerank"),
     ("beyond:bitvec-filtered-rerank", "benchmarks.bench_bitvec_rerank"),
+    ("beyond:fde-candidate-gen", "benchmarks.bench_fde_candidates"),
     ("tables4-5:latency-vs-memory", "benchmarks.bench_latency_memory"),
     ("figs8-10:batch-scaling", "benchmarks.bench_batch_scaling"),
     ("kernels", "benchmarks.bench_kernels"),

@@ -12,6 +12,8 @@ Retrieval methods (each a registered ``repro.pipeline`` backend):
   "mmap" / "swap"  conventional O/S paths under a memory budget
   "dram"  whole index resident (the paper's upper-bound baseline)
   "bitvec" resident sign-bit filter + SSD rerank of the survivors only
+  "fde"   MUVERA-style resident FDE candidate gen + SSD rerank of the top
+          candidates (Dhulipala et al. 2024)
 
 This module holds the shared pipeline types (config, clock, latency
 breakdown, response); the per-mode query paths live in
@@ -65,6 +67,8 @@ class ESPNConfig:
     k_return: int = 100
     use_pallas: bool = False           # route MaxSim through the TPU kernel
     bit_filter: int = 128              # bitvec: full-precision rerank width R
+    fde_brute_threshold: int = 100_000  # fde: brute-scan the FDE table below
+                                        # this corpus size, IVF above
 
 
 @dataclass

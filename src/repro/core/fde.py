@@ -1,0 +1,190 @@
+"""MUVERA-style fixed dimensional encodings (Dhulipala et al. 2024).
+
+A multi-vector document (ragged token matrix) is collapsed into ONE vector
+whose inner product with a query's FDE approximates the Chamfer / MaxSim
+similarity, so candidate generation becomes plain single-vector ANN over a
+small *resident* table — no token-level scoring, no SSD traffic — and only
+the top candidates are read from storage for full-precision re-rank.
+
+Construction (asymmetric between queries and documents):
+
+  1. SimHash space partitioning: ``r_reps`` independent repetitions, each
+     drawing ``k_sim`` random hyperplanes; a token's bucket in repetition r
+     is the integer formed by its ``k_sim`` sign bits (``2^k_sim`` buckets).
+  2. Per-bucket aggregation: queries SUM their tokens per bucket, documents
+     AVERAGE them — so ``<q_fde, d_fde>`` sums, over query tokens, the mean
+     similarity of the co-bucketed document tokens (a Chamfer estimate).
+  3. ``fill_empty`` backfill (documents only): an empty bucket copies the
+     aggregate of the nearest non-empty bucket in Hamming distance over the
+     SimHash bit codes, so every query token meets *some* document mass.
+  4. Optional final random projection to ``d_final`` dims (+-1/sqrt(d_final)
+     entries), shared by both encodings, shrinking the raw
+     ``r_reps * 2^k_sim * d_bow`` concatenation to a resident-friendly size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FDEConfig:
+    """Shared randomness + shape of one FDE family. Two encodings are only
+    comparable when they come from the same config (same planes, same
+    projection), which is why the table persists these fields."""
+    d_bow: int
+    k_sim: int = 3                # 2^k_sim SimHash buckets per repetition
+    r_reps: int = 16
+    d_final: int = 256            # 0 = keep the raw concatenation
+    fill_empty: bool = True
+    seed: int = 0
+
+    @property
+    def n_buckets(self) -> int:
+        return 1 << self.k_sim
+
+    @property
+    def d_raw(self) -> int:
+        return self.r_reps * self.n_buckets * self.d_bow
+
+    @property
+    def d_fde(self) -> int:
+        return self.d_final or self.d_raw
+
+
+class FDEEncoder:
+    """Materializes the random partitions/projection of an ``FDEConfig`` and
+    encodes queries (sum aggregation) and documents (average + backfill)."""
+
+    def __init__(self, cfg: FDEConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # (r_reps, k_sim, d_bow) SimHash hyperplanes
+        self.planes = rng.standard_normal(
+            (cfg.r_reps, cfg.k_sim, cfg.d_bow)).astype(np.float32)
+        self.proj = None
+        if cfg.d_final:
+            self.proj = ((rng.integers(0, 2, (cfg.d_raw, cfg.d_final))
+                          .astype(np.float32)) * 2.0 - 1.0
+                         ) / np.sqrt(cfg.d_final)
+        # pairwise Hamming distances between bucket bit codes (B, B), used by
+        # the nearest-bucket backfill of empty document buckets
+        codes = ((np.arange(cfg.n_buckets)[:, None]
+                  >> np.arange(cfg.k_sim)[None, :]) & 1)
+        self.bucket_hamming = (codes[:, None, :]
+                               != codes[None, :, :]).sum(-1)
+
+    # -- shared internals ---------------------------------------------------
+    def _bucketize(self, rep: int, toks: np.ndarray) -> np.ndarray:
+        """(t, d_bow) tokens -> (t,) bucket ids in [0, 2^k_sim)."""
+        bits = (toks @ self.planes[rep].T) > 0                # (t, k_sim)
+        return bits @ (1 << np.arange(self.cfg.k_sim))
+
+    def _aggregate(self, bows: list[np.ndarray], *, average: bool,
+                   fill_empty: bool) -> np.ndarray:
+        """Vectorized multi-doc aggregation: one np.add.at per repetition over
+        the concatenated token stream instead of a per-doc Python loop."""
+        cfg = self.cfg
+        n = len(bows)
+        nb = cfg.n_buckets
+        out = np.zeros((n, cfg.r_reps, nb, cfg.d_bow), np.float32)
+        if n == 0:
+            return out.reshape(0, cfg.d_raw)
+        lens = np.array([b.shape[0] for b in bows], np.int64)
+        flat = (np.concatenate(bows, axis=0).astype(np.float32)
+                if lens.sum() else np.zeros((0, cfg.d_bow), np.float32))
+        doc_of = np.repeat(np.arange(n), lens)
+        for r in range(cfg.r_reps):
+            bucket = self._bucketize(r, flat)                 # (total,)
+            slot = doc_of * nb + bucket
+            sums = np.zeros((n * nb, cfg.d_bow), np.float32)
+            np.add.at(sums, slot, flat)
+            cnt = np.bincount(slot, minlength=n * nb).reshape(n, nb)
+            agg = sums.reshape(n, nb, cfg.d_bow)
+            if average:
+                agg = agg / np.maximum(cnt, 1)[..., None]
+            if fill_empty:
+                # nearest non-empty bucket by Hamming distance on bit codes
+                dist = np.where(cnt[:, None, :] > 0,
+                                self.bucket_hamming[None].astype(np.float32),
+                                np.inf)                       # (n, B, B)
+                nearest = np.argmin(dist, axis=-1)            # (n, B)
+                filled = np.take_along_axis(agg, nearest[..., None], axis=1)
+                agg = np.where((cnt > 0)[..., None], agg, filled)
+            out[:, r] = agg
+        return out.reshape(n, cfg.d_raw)
+
+    def _project(self, raw: np.ndarray) -> np.ndarray:
+        return raw @ self.proj if self.proj is not None else raw
+
+    # -- public encodings ---------------------------------------------------
+    def encode_docs(self, bows: list[np.ndarray], *,
+                    chunk: int = 8192) -> np.ndarray:
+        """Document FDEs: per-bucket average + empty-bucket backfill.
+        Returns (len(bows), d_fde) fp32. Encoded in ``chunk``-doc slices so
+        the transient (chunk, d_raw) raw concatenation stays bounded (~128 MB
+        at defaults) — the corpus-sized buffer is only d_fde wide."""
+        out = np.empty((len(bows), self.cfg.d_fde), np.float32)
+        for s in range(0, len(bows), chunk):
+            out[s:s + chunk] = self._project(self._aggregate(
+                bows[s:s + chunk], average=True,
+                fill_empty=self.cfg.fill_empty))
+        return out
+
+    def encode_doc(self, toks: np.ndarray) -> np.ndarray:
+        return self.encode_docs([toks])[0]
+
+    def encode_queries(self, q_bow: np.ndarray,
+                       q_lens: np.ndarray) -> np.ndarray:
+        """Query FDEs from a padded (B, L, d_bow) batch + lengths: per-bucket
+        SUM, no backfill. Returns (B, d_fde) fp32."""
+        bows = [np.asarray(q_bow[i][:int(q_lens[i])])
+                for i in range(q_bow.shape[0])]
+        return self._project(self._aggregate(
+            bows, average=False, fill_empty=False))
+
+    def encode_query(self, toks: np.ndarray) -> np.ndarray:
+        return self.encode_queries(np.asarray(toks)[None],
+                                   np.array([len(toks)]))[0]
+
+
+@dataclass
+class FDETable:
+    """Resident single-vector tier: one FDE per document, plus the config
+    that generated it (queries must be encoded with the same randomness).
+    Stored as fp16 by default — the whole point is a small memory bill."""
+    vecs: np.ndarray              # (N, d_fde) stored dtype
+    cfg: FDEConfig
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.vecs)
+
+    @property
+    def nbytes(self) -> int:
+        return self.vecs.nbytes
+
+    def matches(self, cfg: FDEConfig, dtype: str | np.dtype) -> bool:
+        """True when this table can serve queries encoded under ``cfg`` at
+        storage dtype ``dtype`` (the with_mode sharing check)."""
+        return self.cfg == cfg and self.vecs.dtype == np.dtype(dtype)
+
+
+def build_fde_table(bows: list[np.ndarray], cfg: FDEConfig, *,
+                    dtype: str | np.dtype = "float16") -> FDETable:
+    enc = FDEEncoder(cfg)
+    return FDETable(vecs=enc.encode_docs(bows).astype(np.dtype(dtype)),
+                    cfg=cfg)
+
+
+def fde_from_layout(layout, cfg: FDEConfig, *,
+                    dtype: str | np.dtype = "float16") -> FDETable:
+    """Build the resident FDE table from an already-packed disk layout (the
+    save/load and from_artifacts paths, where the fp32 BOW list is gone).
+    Mirrors ``bits_from_layout``; fp16 storage perturbs token values by
+    <1e-3, which moves bucket assignments only for tokens sitting exactly on
+    a hyperplane — negligible for the Chamfer estimate."""
+    from repro.storage.layout import unpack_doc
+    bows = [unpack_doc(layout, i)[1] for i in range(layout.n_docs)]
+    return build_fde_table(bows, cfg, dtype=dtype)

@@ -193,6 +193,18 @@ def search(index: IVFIndex, q, nprobe: int, k: int):
                       probe, k=k)
 
 
+def valid_candidates(ids_row: np.ndarray, scores_row: np.ndarray):
+    """Drop ``-1`` padding from one query's candidate row, keeping ids and
+    scores PAIRED. Padding usually sorts to a pure suffix (padded slots score
+    ``NEG``), but duplicated ids across merged top-k blocks can interleave it;
+    masking both arrays with the same predicate is the only safe filter
+    (``scores[:len(fin)]`` silently mispairs every element after the first
+    interior ``-1``)."""
+    ids_row = np.asarray(ids_row)
+    mask = ids_row >= 0
+    return ids_row[mask], np.asarray(scores_row)[mask]
+
+
 def search_two_phase(index: IVFIndex, q, nprobe: int, k: int, delta: int):
     """ESPN's two-phase search: returns (approx top-k after δ probes,
     final top-k after all η probes, probe order). δ-snapshot = prefetch list.

@@ -15,7 +15,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.ivf import ANNCostModel, IVFIndex, search_two_phase
+from repro.core.ivf import (ANNCostModel, IVFIndex, search_two_phase,
+                            valid_candidates)
 from repro.storage.io_engine import StorageTier
 
 
@@ -45,12 +46,15 @@ class QueryResult:
     @classmethod
     def from_read(cls, doc_ids: np.ndarray, cand_scores: np.ndarray, read,
                   *, ann_s: float) -> "QueryResult":
-        """Result for a non-prefetching stack: every document was fetched in
-        the critical path, so the hit mask is empty and the (possibly
+        """Result for a non-prefetching stack: every fetched document came
+        through the critical path, so the hit mask is empty and the (possibly
         partial, rerank-count-truncated) read buffers are the miss buffers.
+        ``n_misses`` counts the rows actually read — under partial re-rank
+        the read is truncated to the top-R candidates, and billing all
+        ``len(doc_ids)`` candidates as misses would overstate the I/O.
         """
         stats = PrefetchStats(hit_rate=0.0, n_prefetched=0, n_hits=0,
-                              n_misses=len(doc_ids), budget_s=0.0,
+                              n_misses=len(read.lens), budget_s=0.0,
                               prefetch_io_s=0.0, leaked_s=0.0,
                               miss_io_s=read.sim_seconds, ann_s=ann_s)
         return cls(doc_ids=doc_ids, cand_scores=cand_scores,
@@ -108,7 +112,7 @@ class ANNPrefetcher:
         results = []
         for b in range(q.shape[0]):
             pref_ids = a_ids[b][a_ids[b] >= 0]
-            fin_ids = f_ids[b][f_ids[b] >= 0]
+            fin_ids, fin_scores = valid_candidates(f_ids[b], f_scores[b])
             pref_set = set(pref_ids.tolist())
             hit_mask = np.fromiter((i in pref_set for i in fin_ids), bool,
                                    len(fin_ids))
@@ -134,7 +138,7 @@ class ANNPrefetcher:
             )
             row_of = {int(i): j for j, i in enumerate(pref_ids)}
             results.append(QueryResult(
-                doc_ids=fin_ids, cand_scores=f_scores[b][:len(fin_ids)],
+                doc_ids=fin_ids, cand_scores=fin_scores,
                 hit_mask=hit_mask, stats=stats, prefetched=row_of,
                 buffers=(pref_read.cls, pref_read.bow, pref_read.lens)
                 if pref_read else None,

@@ -1,0 +1,58 @@
+"""Pallas TPU batched FDE dot-product scoring kernel.
+
+Candidate generation for the fde backend is one dense (B, D) x (D, N)
+matmul against the resident FDE table (brute force under the IVF
+threshold). The kernel tiles the document axis: the query FDE block is
+pinned in VMEM across the whole grid (block-0 index_map, same trick as
+maxsim/bitsim) while (BN, D) document tiles stream through, each step
+running ONE MXU matmul and writing a (B, BN) score tile. The fp16 table
+tile is upcast in registers, so HBM traffic stays at 2 bytes/element.
+
+VMEM budget per step (defaults BN=256, D=128): doc tile 256*128*2 = 64 KB
++ q block — far under the 16 MB ceiling. Alignment: D padded to a lane
+multiple of 128, B to the fp32 sublane 8, BN a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, d_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)               # (Bp, Dp)
+    d = d_ref[...].astype(jnp.float32)               # (BN, Dp)
+    out_ref[...] = jax.lax.dot_general(
+        q, d, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Bp, BN)
+
+
+@functools.partial(jax.jit, static_argnames=("block_docs", "interpret"))
+def fdescan_pallas(q, docs, *, block_docs: int = 256,
+                   interpret: bool = True):
+    """q: (B, D) float; docs: (N, D) float (any float dtype, e.g. the fp16
+    resident table). Returns (B, N) fp32 scores. Pads B to 8, D to 128, and
+    N to block_docs; zero padding cannot perturb the inner products."""
+    b, d_dim = q.shape
+    n = docs.shape[0]
+    bp = -(-b // 8) * 8
+    dp = -(-d_dim // 128) * 128
+    np_ = -(-n // block_docs) * block_docs
+    q = jnp.pad(q, ((0, bp - b), (0, dp - d_dim)))
+    docs = jnp.pad(docs, ((0, np_ - n), (0, dp - d_dim)))
+
+    grid = (np_ // block_docs,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, dp), lambda i: (0, 0)),            # q pinned
+            pl.BlockSpec((block_docs, dp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, block_docs), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
+        interpret=interpret,
+    )(q, docs)
+    return out[:b, :n]

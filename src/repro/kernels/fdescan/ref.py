@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the batched FDE dot-product scoring kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fdescan_ref(q, docs):
+    """Batched single-vector scoring: q (B, D) float x docs (N, D) float ->
+    (B, N) fp32 inner products (the FDE Chamfer estimate per candidate)."""
+    return jnp.dot(q.astype(jnp.float32), docs.astype(jnp.float32).T)

@@ -2,10 +2,12 @@
 
 Each of the paper's five retrieval stacks (Tables 4/5) is a first-class
 ``RetrievalBackend``: ESPN's prefetched GDS path, plain GDS, the mmap/swap
-O/S baselines, and the all-in-DRAM upper bound. New candidate-generation or
-re-rank strategies (bit-vector rerank, MUVERA-style FDE candidate gen, ...)
-plug in with ``@register_backend("name")`` and are immediately reachable from
-``Pipeline``, ``ESPNRetriever``, the serve launcher, and the CLI.
+O/S baselines, and the all-in-DRAM upper bound — joined by the bit-vector
+rerank (Nardini et al. 2024) and MUVERA-style FDE candidate-gen (Dhulipala
+et al. 2024) stacks from related work. New candidate-generation or re-rank
+strategies plug in with ``@register_backend("name")`` and are immediately
+reachable from ``Pipeline``, ``ESPNRetriever``, the serve launcher, and the
+CLI.
 
 A backend owns the full query path: candidate generation, storage reads,
 re-ranking, and the per-stage latency accounting on the calibrated device
@@ -20,7 +22,8 @@ import numpy as np
 
 from repro.core.espn import (ComputeModel, ESPNConfig, LatencyBreakdown,
                              RetrievalResponse)
-from repro.core.ivf import ANNCostModel, IVFIndex, search
+from repro.core.ivf import (ANNCostModel, IVFIndex, build_ivf, search,
+                            valid_candidates)
 from repro.core.prefetcher import ANNPrefetcher, QueryResult
 from repro.core.rerank import RerankOutput, rerank_query
 from repro.storage.io_engine import StorageTier
@@ -62,12 +65,16 @@ class RetrievalBackend(abc.ABC):
                           cache budget (mmap / swap)
       needs_bit_table     True for backends that filter against the resident
                           sign-bit tier (the tier must carry a BitTable)
+      needs_fde_table     True for backends that candidate-generate against
+                          the resident FDE tier (the tier must carry an
+                          FDETable)
     """
 
     name: ClassVar[str] = ""
     storage_stack: ClassVar[str] = "espn"
     needs_mem_budget: ClassVar[bool] = False
     needs_bit_table: ClassVar[bool] = False
+    needs_fde_table: ClassVar[bool] = False
 
     def __init__(self, index: IVFIndex, tier: StorageTier, cfg: ESPNConfig,
                  *, cost_model: ANNCostModel | None = None,
@@ -101,6 +108,32 @@ class RetrievalBackend(abc.ABC):
                                         float(layout.n_tokens.mean()),
                                         layout.d_bow)
 
+    def _rerank_candidates(self, q_bow, q_lens, scores, ids,
+                           bd: LatencyBreakdown) -> list[RerankOutput]:
+        """Shared tail of every single-phase candidate generator (Direct*,
+        FDE): per query, drop ``-1`` padding keeping ids/scores paired, read
+        the top-``rerank_count`` candidates in the critical path, and run the
+        full-precision re-rank with its latency/bandwidth billing."""
+        cfg = self.cfg
+        ranked = []
+        for b in range(len(ids)):
+            fin, fin_scores = valid_candidates(ids[b], scores[b])
+            rr = len(fin) if cfg.rerank_count is None else min(
+                cfg.rerank_count, len(fin))
+            read = self.tier.read(fin[:rr])
+            bd.critical_io_s += read.sim_seconds
+            res = QueryResult.from_read(fin, fin_scores, read,
+                                        ann_s=bd.ann_s)
+            out = rerank_query(q_bow[b], int(q_lens[b]), res,
+                               alpha=cfg.alpha, rerank_count=rr,
+                               doc_bytes=self.doc_bytes,
+                               use_pallas=cfg.use_pallas)
+            ranked.append(out)
+            bd.rerank_s += self._maxsim_time(rr, int(q_lens[b]))
+            bd.bytes_read += out.bow_bytes_read
+        bd.hit_rate = 0.0
+        return ranked
+
 
 @register_backend("espn")
 class ESPNBackend(RetrievalBackend):
@@ -117,6 +150,8 @@ class ESPNBackend(RetrievalBackend):
 
     def _retrieve(self, q_cls, q_bow, q_lens, bd):
         cfg = self.cfg
+        if q_cls.shape[0] == 0:           # empty batch: nothing to rank,
+            return []                     # hit_rate keeps its vacuous default
         results = self.prefetcher.run_batch(q_cls, nprobe=cfg.nprobe,
                                             k=cfg.k_candidates)
         bd.ann_s = results[0].stats.ann_s
@@ -149,27 +184,13 @@ class DirectBackend(RetrievalBackend):
 
     def _retrieve(self, q_cls, q_bow, q_lens, bd):
         cfg = self.cfg
+        if q_cls.shape[0] == 0:
+            bd.hit_rate = 0.0
+            return []
         scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
         scores, ids = np.asarray(scores), np.asarray(ids)
         bd.ann_s = self.cost.time(self.index, cfg.nprobe)
-        ranked = []
-        for b in range(q_cls.shape[0]):
-            fin = ids[b][ids[b] >= 0]
-            rr = len(fin) if cfg.rerank_count is None else min(
-                cfg.rerank_count, len(fin))
-            read = self.tier.read(fin[:rr])
-            bd.critical_io_s += read.sim_seconds
-            res = QueryResult.from_read(fin, scores[b][:len(fin)], read,
-                                        ann_s=bd.ann_s)
-            out = rerank_query(q_bow[b], int(q_lens[b]), res,
-                               alpha=cfg.alpha, rerank_count=rr,
-                               doc_bytes=self.doc_bytes,
-                               use_pallas=cfg.use_pallas)
-            ranked.append(out)
-            bd.rerank_s += self._maxsim_time(rr, int(q_lens[b]))
-            bd.bytes_read += out.bow_bytes_read
-        bd.hit_rate = 0.0
-        return ranked
+        return self._rerank_candidates(q_bow, q_lens, scores, ids, bd)
 
 
 @register_backend("gds")
@@ -219,6 +240,9 @@ class BitvecBackend(RetrievalBackend):
         from repro.kernels.bitsim.ops import bitsim
 
         cfg = self.cfg
+        if q_cls.shape[0] == 0:
+            bd.hit_rate = 0.0
+            return []
         layout = self.tier.layout
         mean_t = float(layout.n_tokens.mean())
         scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
@@ -226,7 +250,7 @@ class BitvecBackend(RetrievalBackend):
         bd.ann_s = self.cost.time(self.index, cfg.nprobe)
         ranked = []
         for b in range(q_cls.shape[0]):
-            fin = ids[b][ids[b] >= 0]
+            fin, fin_scores = valid_candidates(ids[b], scores[b])
             qlen = int(q_lens[b])
             # 1) resident bit filter: score ALL candidates, zero SSD bytes
             packed, lens = self.tier.read_bits(fin)
@@ -242,7 +266,7 @@ class BitvecBackend(RetrievalBackend):
                                                          len(fin))]
             read = self.tier.read(fin[sel])
             bd.critical_io_s += read.sim_seconds
-            res = QueryResult.from_selected_read(fin, scores[b][:len(fin)],
+            res = QueryResult.from_selected_read(fin, fin_scores,
                                                  read, sel, ann_s=bd.ann_s)
             out = rerank_query(q_bow[b], qlen, res, alpha=cfg.alpha,
                                select=sel, doc_bytes=self.doc_bytes,
@@ -252,3 +276,84 @@ class BitvecBackend(RetrievalBackend):
             bd.bytes_read += out.bow_bytes_read
         bd.hit_rate = 0.0
         return ranked
+
+
+@register_backend("fde")
+class FDEBackend(RetrievalBackend):
+    """MUVERA-style FDE candidate generation (Dhulipala et al. 2024):
+    candidates come from single-vector ANN over the *resident* fixed
+    dimensional encodings of the documents — one small vector per doc whose
+    inner product with the query's FDE approximates Chamfer/MaxSim — instead
+    of the CLS IVF index. Only the top candidates are then read from the SSD
+    tier for full-precision MaxSim re-rank, so Chamfer-faithful recall costs
+    a fraction of the CLS index's resident bytes.
+
+    Below ``cfg.fde_brute_threshold`` documents the table is scanned brute
+    force (one dense matmul, the ``kernels/fdescan`` Pallas kernel); above
+    it an IVF index is built over the doc FDEs and probed like any other
+    single-vector index."""
+
+    storage_stack = "espn"
+    needs_fde_table = True
+
+    def __init__(self, index, tier, cfg, **kw):
+        super().__init__(index, tier, cfg, **kw)
+        from repro.core.fde import FDEEncoder
+        if tier.fde is None:
+            raise RuntimeError(
+                "the fde backend needs a StorageTier built with a resident "
+                "FDETable; construct it with fde=build_fde_table(...)")
+        self.encoder = FDEEncoder(tier.fde.cfg)
+        n = tier.fde.n_docs
+        self.fde_index = None
+        self._fde_vecs_dev = None
+        if n > cfg.fde_brute_threshold:
+            self.fde_index = build_ivf(
+                np.asarray(tier.fde.vecs, np.float32),
+                ncells=max(16, n // 270), iters=4)
+        else:
+            # the table is immutable for the backend's lifetime: upload it
+            # to the device once, not per query batch
+            import jax.numpy as jnp
+            self._fde_vecs_dev = jnp.asarray(tier.fde.vecs)
+
+    def candidate_gen_bytes(self) -> int:
+        """Resident bytes this backend's candidate generation needs (the
+        quantity the paper's memory tables compare): the FDE table plus its
+        IVF wrapper when one was built. The CLS index does not count — this
+        backend never probes it."""
+        return self.tier.fde.nbytes + (self.fde_index.memory_bytes()
+                                       if self.fde_index is not None else 0)
+
+    def _retrieve(self, q_cls, q_bow, q_lens, bd):
+        import jax.numpy as jnp
+
+        from repro.kernels.fdescan.ops import fdescan
+
+        cfg = self.cfg
+        if q_cls.shape[0] == 0:
+            bd.hit_rate = 0.0
+            return []
+        q_fde = self.encoder.encode_queries(q_bow, q_lens)    # (B, d_fde)
+        n = self.tier.fde.n_docs
+        if self.fde_index is None:
+            s = np.asarray(fdescan(jnp.asarray(q_fde), self._fde_vecs_dev,
+                                   use_pallas=cfg.use_pallas))
+            k = min(cfg.k_candidates, n)
+            part = np.argpartition(-s, k - 1, axis=1)[:, :k]
+            ps = np.take_along_axis(s, part, axis=1)
+            order = np.argsort(-ps, axis=1, kind="stable")
+            ids = np.take_along_axis(part, order, axis=1)
+            scores = np.take_along_axis(ps, order, axis=1)
+            # brute scan touches every doc FDE: one flat pass, no centroids
+            bd.ann_s = self.cost.t0_s + self.cost.c_cand_s * n
+        else:
+            scores, ids = search(self.fde_index, jnp.asarray(q_fde),
+                                 cfg.nprobe, cfg.k_candidates)
+            scores, ids = np.asarray(scores), np.asarray(ids)
+            bd.ann_s = self.cost.time(self.fde_index, cfg.nprobe)
+        # the FDE inner product sums r_reps independent Chamfer estimates;
+        # dividing brings candidate scores onto MaxSim's scale so the
+        # full-precision re-rank, not the sketch, decides the final order
+        scores = scores / float(self.tier.fde.cfg.r_reps)
+        return self._rerank_candidates(q_bow, q_lens, scores, ids, bd)

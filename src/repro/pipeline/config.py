@@ -52,6 +52,7 @@ class StorageConfig:
     mem_budget_frac: float = 0.25      # page-cache budget for mmap/swap
     bit_dtype: str = "uint32"          # resident bit-table lane dtype
                                        # (uint8/uint16/uint32; bitvec only)
+    fde_dtype: str = "float16"         # resident FDE table dtype (fde only)
 
 
 @dataclass
@@ -66,6 +67,11 @@ class RetrievalConfig:
     k_return: int = 100
     use_pallas: bool = False
     bit_filter: int = 128              # bitvec: survivors that get full rerank
+    fde_k_sim: int = 3                 # fde: 2^k_sim SimHash buckets per rep
+    fde_reps: int = 16                 # fde: partition repetitions
+    fde_d_final: int = 256             # fde: final projection dim (0 = raw)
+    fde_seed: int = 0                  # fde: partition/projection randomness
+    fde_brute_threshold: int = 100_000  # fde: brute-scan below, IVF above
 
     def to_espn_config(self):
         from repro.core.espn import ESPNConfig
@@ -74,7 +80,16 @@ class RetrievalConfig:
                           prefetch_step=self.prefetch_step,
                           rerank_count=self.rerank_count, alpha=self.alpha,
                           k_return=self.k_return, use_pallas=self.use_pallas,
-                          bit_filter=self.bit_filter)
+                          bit_filter=self.bit_filter,
+                          fde_brute_threshold=self.fde_brute_threshold)
+
+    def to_fde_config(self, d_bow: int):
+        """The encoding family these knobs describe, for a given token dim
+        (the layout's d_bow — not a free knob)."""
+        from repro.core.fde import FDEConfig
+        return FDEConfig(d_bow=d_bow, k_sim=self.fde_k_sim,
+                         r_reps=self.fde_reps, d_final=self.fde_d_final,
+                         seed=self.fde_seed)
 
 
 @dataclass
@@ -145,6 +160,23 @@ class PipelineConfig:
         ap.add_argument("--bit-filter", type=int, default=r.bit_filter,
                         help="bitvec: top-R bit-score survivors that get "
                              "full-precision re-rank")
+        ap.add_argument("--fde-k-sim", type=int, default=r.fde_k_sim,
+                        help="fde: SimHash bits per repetition "
+                             "(2^k buckets)")
+        ap.add_argument("--fde-reps", type=int, default=r.fde_reps,
+                        help="fde: independent partition repetitions")
+        ap.add_argument("--fde-d-final", type=int, default=r.fde_d_final,
+                        help="fde: final random-projection dim (0 = raw "
+                             "reps * 2^k * d_bow concatenation)")
+        ap.add_argument("--fde-seed", type=int, default=r.fde_seed,
+                        help="fde: partition/projection randomness seed")
+        ap.add_argument("--fde-brute-threshold", type=int,
+                        default=r.fde_brute_threshold,
+                        help="fde: brute-scan the FDE table below this "
+                             "corpus size, IVF-over-FDEs above it")
+        ap.add_argument("--fde-dtype", default=s.fde_dtype,
+                        choices=["float16", "float32"],
+                        help="resident FDE table dtype (fde mode)")
         ap.add_argument("--max-batch", type=int, default=v.max_batch)
         ap.add_argument("--max-wait-s", type=float, default=v.max_wait_s)
         return ap
@@ -164,13 +196,20 @@ class PipelineConfig:
                               quant=args.quant),
             storage=StorageConfig(dtype=args.dtype, t_max=args.t_max,
                                   mem_budget_frac=args.mem_budget_frac,
-                                  bit_dtype=args.bit_dtype),
+                                  bit_dtype=args.bit_dtype,
+                                  fde_dtype=args.fde_dtype),
             retrieval=RetrievalConfig(mode=args.mode, nprobe=args.nprobe,
                                       k_candidates=args.k,
                                       prefetch_step=args.prefetch_step,
                                       rerank_count=args.rerank or None,
                                       alpha=args.alpha,
                                       use_pallas=args.use_pallas,
-                                      bit_filter=args.bit_filter),
+                                      bit_filter=args.bit_filter,
+                                      fde_k_sim=args.fde_k_sim,
+                                      fde_reps=args.fde_reps,
+                                      fde_d_final=args.fde_d_final,
+                                      fde_seed=args.fde_seed,
+                                      fde_brute_threshold=(
+                                          args.fde_brute_threshold)),
             serve=ServeConfig(max_batch=args.max_batch,
                               max_wait_s=args.max_wait_s))

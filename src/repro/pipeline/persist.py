@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fde import FDEConfig, FDETable
 from repro.core.ivf import IVFIndex
 from repro.data.synthetic import Corpus
 from repro.storage.layout import BitTable, EmbeddingLayout
@@ -72,6 +73,25 @@ def load_bits(path: str) -> BitTable:
     z = np.load(path, allow_pickle=False)
     return BitTable(packed=z["packed"], starts=z["starts"],
                     d_bow=int(z["d_bow"]))
+
+
+# -- resident FDE table (fde backend) ---------------------------------------
+
+def save_fde(fde: FDETable, path: str) -> None:
+    """The generating FDEConfig rides along: a reloaded table must encode
+    queries with the same partitions/projection or scores are garbage."""
+    c = fde.cfg
+    np.savez(path, vecs=fde.vecs, d_bow=c.d_bow, k_sim=c.k_sim,
+             r_reps=c.r_reps, d_final=c.d_final,
+             fill_empty=int(c.fill_empty), seed=c.seed)
+
+
+def load_fde(path: str) -> FDETable:
+    z = np.load(path, allow_pickle=False)
+    cfg = FDEConfig(d_bow=int(z["d_bow"]), k_sim=int(z["k_sim"]),
+                    r_reps=int(z["r_reps"]), d_final=int(z["d_final"]),
+                    fill_empty=bool(z["fill_empty"]), seed=int(z["seed"]))
+    return FDETable(vecs=z["vecs"], cfg=cfg)
 
 
 # -- corpus -----------------------------------------------------------------

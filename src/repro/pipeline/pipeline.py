@@ -24,6 +24,7 @@ import os
 import numpy as np
 
 from repro.core.espn import ComputeModel, RetrievalResponse
+from repro.core.fde import FDETable, fde_from_layout
 from repro.core.ivf import ANNCostModel, IVFIndex, build_ivf
 from repro.core.metrics import mrr_at_k, recall_at_k
 from repro.data.synthetic import Corpus, make_corpus
@@ -106,7 +107,8 @@ class Pipeline:
     def _assemble(cls, cfg: PipelineConfig, corpus: Corpus | None,
                   index: IVFIndex, layout: EmbeddingLayout, *,
                   cost_model=None, compute=None,
-                  bits: BitTable | None = None) -> "Pipeline":
+                  bits: BitTable | None = None,
+                  fde: FDETable | None = None) -> "Pipeline":
         backend_cls = get_backend(cfg.retrieval.mode)
         budget = (int(layout.nbytes * cfg.storage.mem_budget_frac)
                   if backend_cls.needs_mem_budget else None)
@@ -115,9 +117,18 @@ class Pipeline:
                 bits = bits_from_layout(layout, dtype=cfg.storage.bit_dtype)
         else:
             bits = None       # don't bill the bit table to other backends
+        if backend_cls.needs_fde_table:
+            want = cfg.retrieval.to_fde_config(layout.d_bow)
+            # a handed-down table (with_mode / load) is only reusable when
+            # the encoding family and storage dtype still match the config
+            if fde is None or not fde.matches(want, cfg.storage.fde_dtype):
+                fde = fde_from_layout(layout, want,
+                                      dtype=cfg.storage.fde_dtype)
+        else:
+            fde = None        # don't bill the FDE table to other backends
         tier = StorageTier(layout, stack=backend_cls.storage_stack,
                            t_max=cfg.storage.t_max, mem_budget_bytes=budget,
-                           bits=bits)
+                           bits=bits, fde=fde)
         backend = backend_cls(index, tier, cfg.retrieval.to_espn_config(),
                               cost_model=cost_model, compute=compute)
         return cls(cfg, corpus=corpus, index=index, layout=layout, tier=tier,
@@ -176,7 +187,7 @@ class Pipeline:
         return self._assemble(cfg, self.corpus, self.index, self.layout,
                               cost_model=self.backend.cost,
                               compute=self.backend.compute,
-                              bits=self.tier.bits)
+                              bits=self.tier.bits, fde=self.tier.fde)
 
     # -- persistence --------------------------------------------------------
     def save(self, out_dir: str) -> str:
@@ -191,6 +202,9 @@ class Pipeline:
         if self.tier.bits is not None:
             persist.save_bits(self.tier.bits,
                               os.path.join(out_dir, "bits.npz"))
+        if self.tier.fde is not None:
+            persist.save_fde(self.tier.fde,
+                             os.path.join(out_dir, "fde.npz"))
         return out_dir
 
     @classmethod
@@ -210,9 +224,12 @@ class Pipeline:
         bits_path = os.path.join(out_dir, "bits.npz")
         bits = (persist.load_bits(bits_path)
                 if os.path.exists(bits_path) else None)
+        fde_path = os.path.join(out_dir, "fde.npz")
+        fde = (persist.load_fde(fde_path)
+               if os.path.exists(fde_path) else None)
         return cls._assemble(cfg, corpus, index, layout,
                              cost_model=cost_model, compute=compute,
-                             bits=bits)
+                             bits=bits, fde=fde)
 
     # -- lifecycle ----------------------------------------------------------
     def close(self):

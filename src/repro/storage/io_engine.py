@@ -17,6 +17,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.fde import FDETable
 from repro.storage import ssd as ssd_lib
 from repro.storage.cache import PageCache
 from repro.storage.layout import BitTable, EmbeddingLayout, gather_docs
@@ -36,10 +37,13 @@ class StorageTier:
                  spec: ssd_lib.StorageSpec = ssd_lib.PM983_PCIE3,
                  stack: str = "espn", mem_budget_bytes: int | None = None,
                  t_max: int = 180, qd: int = 64, include_h2d: bool = True,
-                 n_io_threads: int = 4, bits: BitTable | None = None):
+                 n_io_threads: int = 4, bits: BitTable | None = None,
+                 fde: FDETable | None = None):
         assert stack in ("espn", "mmap", "swap", "dram")
         self.layout = layout
         self.bits = bits              # resident sign-bit tier (bitvec filter)
+        self.fde = fde                # resident FDE tier (fde candidate gen)
+        self._closed = False
         self.spec = spec
         self.stack = stack
         self.t_max = t_max
@@ -117,6 +121,8 @@ class StorageTier:
         meta = self.layout.offsets.nbytes + self.layout.n_tokens.nbytes
         if self.bits is not None:
             meta += self.bits.nbytes
+        if self.fde is not None:
+            meta += self.fde.nbytes
         if self.stack == "dram":
             return self.layout.nbytes + meta
         if self.stack in ("mmap", "swap"):
@@ -124,4 +130,13 @@ class StorageTier:
         return meta
 
     def close(self):
-        self._pool.shutdown(wait=False)
+        """Idempotent shutdown: pending ``read_async`` futures are cancelled
+        rather than abandoned (callers holding one see CancelledError instead
+        of a hang); in-flight reads finish. Safe to call more than once —
+        ``Pipeline.with_mode`` documents "close both", so stacked pipelines
+        routinely double-close shared-ancestry tiers."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._pool.shutdown(wait=False, cancel_futures=True)

@@ -1,0 +1,163 @@
+"""Regression tests for the shared retrieval-path accounting bugs (truncated
+reads, -1-padding score misalignment, empty batches) and the latency/memory
+invariants every registered backend must satisfy."""
+import numpy as np
+import pytest
+
+from repro.core.ivf import valid_candidates
+from repro.core.prefetcher import ANNPrefetcher, QueryResult
+from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                            StorageConfig, available_backends, get_backend)
+
+NEG = -1e30
+
+
+@pytest.fixture(scope="module")
+def base(small_corpus):
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64),
+        retrieval=RetrievalConfig(mode="espn", nprobe=16, k_candidates=50,
+                                  prefetch_step=0.3))
+    cfg.index.ncells = 32
+    pipe = Pipeline.build(cfg, corpus=small_corpus)
+    yield pipe
+    pipe.close()
+
+
+# -- truncated-read miss accounting ----------------------------------------
+
+def test_from_read_counts_only_rows_actually_read(base):
+    """Partial re-rank reads fin[:rr]; the stats must bill rr misses and rr
+    miss-buffer rows, not len(doc_ids)."""
+    ids = np.arange(10)
+    read = base.tier.read(ids[:4])
+    qr = QueryResult.from_read(ids, np.linspace(1, 0.1, 10), read, ann_s=0.0)
+    assert qr.stats.n_misses == 4
+    assert len(qr.miss_buffers[0]) == 4
+    assert len(qr.doc_ids) == 10            # candidate list itself untouched
+
+
+def test_direct_backend_truncated_read_stats(base):
+    """End to end: rerank_count < k_candidates must not read (or bill) more
+    docs than the re-rank consumes."""
+    pipe = base.with_mode("gds", rerank_count=4)
+    before = pipe.tier.stats["docs"]
+    c = pipe.corpus
+    resp = pipe.search(c.queries_cls[:3], c.queries_bow[:3],
+                       c.query_lens[:3])
+    assert pipe.tier.stats["docs"] - before == 3 * 4
+    for r in resp.ranked:
+        assert r.n_reranked == 4
+    pipe.close()
+
+
+# -- candidate score/id alignment under -1 padding --------------------------
+
+def test_valid_candidates_interleaved_padding():
+    ids = np.array([7, -1, 3, -1, 9])
+    scores = np.array([0.9, NEG, 0.5, NEG, 0.4], np.float32)
+    fin, s = valid_candidates(ids, scores)
+    np.testing.assert_array_equal(fin, [7, 3, 9])
+    np.testing.assert_allclose(s, [0.9, 0.5, 0.4], rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["gds", "bitvec", "fde"])
+def test_backend_scores_survive_interleaved_padding(base, monkeypatch, mode):
+    """A -1 inside the candidate row (not a pure suffix) must not shift every
+    later candidate onto its neighbour's score."""
+    import repro.pipeline.backends as B
+
+    t0, t1 = 5, 11
+
+    def fake_search(index, q, nprobe, k):
+        bsz = np.asarray(q).shape[0]
+        ids = np.tile(np.array([[t0, -1, t1]], np.int64), (bsz, 1))
+        scores = np.tile(np.array([[0.9, NEG, 0.5]], np.float32), (bsz, 1))
+        return scores, ids
+
+    monkeypatch.setattr(B, "search", fake_search)
+    # fde only consults ``search`` on its IVF path, taken when n_docs
+    # EXCEEDS the brute threshold — zero forces it for any corpus
+    kw = {"fde_brute_threshold": 0} if mode == "fde" else {}
+    pipe = base.with_mode(mode, **kw)
+    c = pipe.corpus
+    resp = pipe.search(c.queries_cls[:1], c.queries_bow[:1], c.query_lens[:1])
+    out = resp.ranked[0]
+    assert len(out.doc_ids) == 2
+    assert set(out.doc_ids.tolist()) == {t0, t1}
+    # pre-fix, t1 inherited the padding slot's NEG score
+    assert (out.scores > -1e20).all()
+    pipe.close()
+
+
+def test_prefetcher_scores_survive_interleaved_padding(base, monkeypatch):
+    import repro.core.prefetcher as P
+
+    def fake_two_phase(index, q, nprobe, k, delta):
+        ids = np.array([[5, -1, 11]], np.int64)
+        scores = np.array([[0.9, NEG, 0.5]], np.float32)
+        return (scores, ids), (scores, ids), None
+
+    monkeypatch.setattr(P, "search_two_phase", fake_two_phase)
+    pf = ANNPrefetcher(base.index, base.tier, prefetch_step=0.3)
+    (res,) = pf.run_batch(base.corpus.queries_cls[:1], nprobe=4, k=3)
+    np.testing.assert_array_equal(res.doc_ids, [5, 11])
+    np.testing.assert_allclose(res.cand_scores, [0.9, 0.5], rtol=1e-6)
+
+
+# -- empty query batches ----------------------------------------------------
+
+def test_espn_empty_batch_returns_empty_response(base):
+    c = base.corpus
+    d_cls = c.queries_cls.shape[1]
+    q_bow = np.zeros((0,) + c.queries_bow.shape[1:], np.float32)
+    resp = base.search(np.zeros((0, d_cls), np.float32), q_bow,
+                       np.zeros((0,), np.int32))
+    assert resp.ranked == []
+    assert np.isfinite(resp.breakdown.hit_rate)
+    assert np.isfinite(resp.breakdown.total_s)
+
+
+@pytest.mark.parametrize("mode", ["gds", "fde"])
+def test_other_backends_empty_batch(base, mode):
+    pipe = base.with_mode(mode)
+    c = pipe.corpus
+    d_cls = c.queries_cls.shape[1]
+    q_bow = np.zeros((0,) + c.queries_bow.shape[1:], np.float32)
+    resp = pipe.search(np.zeros((0, d_cls), np.float32), q_bow,
+                       np.zeros((0,), np.int32))
+    assert resp.ranked == []
+    assert np.isfinite(resp.breakdown.hit_rate)
+    pipe.close()
+
+
+# -- latency / memory invariants across every registered backend ------------
+
+@pytest.mark.parametrize("mode", sorted(available_backends()))
+def test_latency_accounting_invariants(base, mode):
+    """total_s is exactly the sum of its stage terms (+ the fixed 0.2 ms
+    overhead), bytes_read aggregates the per-query bills, the tier's doc
+    counter matches what the re-rank consumed, and the resident tiers are
+    billed only to the backends that need them."""
+    pipe = base if mode == "espn" else base.with_mode(mode)
+    c = pipe.corpus
+    before = dict(pipe.tier.stats)
+    resp = pipe.search(c.queries_cls[:6], c.queries_bow[:6], c.query_lens[:6])
+    bd = resp.breakdown
+    assert bd.total_s == pytest.approx(
+        bd.encode_s + bd.ann_s + bd.critical_io_s + bd.rerank_s + 0.2e-3)
+    assert bd.bytes_read == sum(r.bow_bytes_read for r in resp.ranked)
+    assert 0.0 <= bd.hit_rate <= 1.0
+    reranked = sum(r.n_reranked for r in resp.ranked)
+    docs_read = pipe.tier.stats["docs"] - before["docs"]
+    if mode == "espn":
+        # prefetch can fetch docs that drop out of the final top-k
+        assert docs_read >= reranked
+    else:
+        assert docs_read == reranked
+    # resident side tables bill only the backends that declared them
+    cls_ = get_backend(mode)
+    assert (pipe.tier.bits is not None) == cls_.needs_bit_table
+    assert (pipe.tier.fde is not None) == cls_.needs_fde_table
+    if pipe is not base:
+        pipe.close()

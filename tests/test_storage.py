@@ -111,3 +111,41 @@ def test_async_read_matches_sync():
     async_r = fut.result(timeout=10)
     np.testing.assert_array_equal(sync.bow, async_r.bow)
     tier.close()
+
+
+def test_close_is_idempotent():
+    """with_mode docs say "close both" — stacked pipelines double-close
+    shared-ancestry tiers, so close() must be safe to repeat."""
+    _, _, layout = _mini_layout()
+    tier = StorageTier(layout, stack="espn", t_max=32)
+    tier.read([0, 1])
+    tier.close()
+    tier.close()                      # second close must not raise
+
+
+def test_close_cancels_pending_async_reads():
+    """A queued read_async future must resolve (cancelled), not hang forever
+    after close()."""
+    import threading
+    from concurrent.futures import CancelledError
+
+    _, _, layout = _mini_layout()
+    tier = StorageTier(layout, stack="espn", t_max=32, n_io_threads=1)
+    started = threading.Event()
+    release = threading.Event()
+    real_read = tier.read
+
+    def slow_read(ids, t_max=None):
+        started.set()
+        release.wait(timeout=10)
+        return real_read(ids, t_max)
+
+    tier.read = slow_read
+    running = tier.read_async([0])
+    assert started.wait(timeout=10)   # worker busy -> next future queues
+    pending = tier.read_async([1])
+    tier.close()
+    release.set()
+    with pytest.raises(CancelledError):
+        pending.result(timeout=10)
+    assert running.result(timeout=10) is not None   # in-flight read finishes
