@@ -1,4 +1,4 @@
-"""Figs 8/9/10: query-batch scaling.
+"""Figs 8/9/10: query-batch scaling — plus the batch I/O engine A/B.
 
 Fig 8 (exact, 1000 docs/query): critical-path embedding access latency vs
 batch size for DRAM / GDS / ESPN — near-DRAM up to the batch threshold (~12
@@ -8,11 +8,17 @@ Fig 10: end-to-end batch latency + throughput, ESPN vs DRAM.
 
 Same modeling protocol as the paper §5.4: fixed storage bandwidth, constant
 prefetch budget, hit-rate from the measured Fig-7 value.
+
+``io_sweep`` runs the REAL pipeline twice per batch size — serial per-query
+reads vs the coalesced batch engine (``storage.io_coalesce``) — on a
+duplicate-heavy workload, asserts rankings stay bitwise identical, and
+emits ``BENCH_batch_io.json`` (consumed by the CI smoke assertion).
 """
 from __future__ import annotations
 
+import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import SMOKE, emit_json, row
 from repro.storage import ssd as S
 
 DOC_BLOCKS = 1            # ~4KB/doc after CLS+BOW co-location
@@ -35,6 +41,80 @@ def access_latency(spec, batch: int, docs_per_query: int, *,
     miss_blocks = int(n_blocks * (1.0 - HIT_RATE))
     t_miss = spec.read_time(miss_blocks, qd=256) + S.h2d_time(miss_blocks * 4096)
     return leaked + t_miss
+
+
+def _io_pipeline(index, layout, corpus, mode: str, coalesce: bool):
+    from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                                StorageConfig)
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=180, io_coalesce=coalesce),
+        retrieval=RetrievalConfig(mode=mode, nprobe=16, k_candidates=100,
+                                  rerank_count=64, prefetch_step=0.2))
+    return Pipeline.from_artifacts(cfg, index=index, layout=layout,
+                                   corpus=corpus)
+
+
+def io_sweep() -> tuple[list[str], list[dict]]:
+    """Serial vs coalesced batch reads through the real retrieval path."""
+    from benchmarks.common import scoring_corpus, scoring_index, scoring_layout
+    c = scoring_corpus()
+    index, layout = scoring_index(c), scoring_layout(c)
+    nq = len(c.queries_cls)
+    out, sweep = [], []
+    for mode in ("gds", "espn"):
+        for batch in ((4, 16) if SMOKE else (4, 16, 64)):
+            reps = -(-batch // nq)
+            q = (np.tile(c.queries_cls, (reps, 1))[:batch],
+                 np.tile(c.queries_bow, (reps, 1, 1))[:batch],
+                 np.tile(c.query_lens, reps)[:batch])
+            rec = {"mode": mode, "batch": batch,
+                   "duplicate_heavy": batch > nq}
+            ranked = {}
+            for tag, coalesce in (("serial", False), ("coalesced", True)):
+                pipe = _io_pipeline(index, layout, c, mode, coalesce)
+                before = dict(pipe.tier.stats)
+                resp = pipe.search(*q)
+                bd = resp.breakdown
+                stats = pipe.tier.stats
+                rec[tag] = {
+                    "sim_seconds": stats["sim_seconds"]
+                    - before["sim_seconds"],
+                    "critical_io_s": bd.critical_io_s,
+                    "bytes_read": bd.bytes_read,
+                    "bytes_read_per_query": bd.bytes_read / batch,
+                    "dedup_bytes_saved": bd.dedup_bytes_saved,
+                    "docs_read": stats["docs"] - before["docs"],
+                    "doc_requests": stats["doc_requests"]
+                    - before["doc_requests"],
+                    "blocks": stats["blocks"] - before["blocks"],
+                }
+                ranked[tag] = resp.ranked
+                pipe.close()
+            # the engine must never change scores…
+            rec["rankings_equal"] = all(
+                np.array_equal(x.doc_ids, y.doc_ids)
+                for x, y in zip(ranked["serial"], ranked["coalesced"]))
+            assert rec["rankings_equal"], (mode, batch)
+            # …and the coalesced clock must never be slower
+            assert rec["coalesced"]["sim_seconds"] \
+                <= rec["serial"]["sim_seconds"] + 1e-12, (mode, batch)
+            rec["io_speedup"] = (rec["serial"]["sim_seconds"]
+                                 / max(rec["coalesced"]["sim_seconds"], 1e-12))
+            rec["bytes_ratio"] = (rec["serial"]["bytes_read"]
+                                  / max(rec["coalesced"]["bytes_read"], 1))
+            sweep.append(rec)
+            out.append(row(
+                f"batch_io/{mode}/batch={batch}",
+                rec["coalesced"]["sim_seconds"] * 1e6,
+                f"serial_io_ms={rec['serial']['sim_seconds']*1e3:.2f} "
+                f"coalesced_io_ms={rec['coalesced']['sim_seconds']*1e3:.2f} "
+                f"io_speedup={rec['io_speedup']:.2f}x "
+                f"bytes_ratio={rec['bytes_ratio']:.2f}x "
+                f"dedup_saved_kb="
+                f"{rec['coalesced']['dedup_bytes_saved']/1024:.0f} "
+                f"rankings_equal={rec['rankings_equal']}"))
+    emit_json("BENCH_batch_io.json", {"sweep": sweep})
+    return out, sweep
 
 
 def main() -> list[str]:
@@ -69,6 +149,8 @@ def main() -> list[str]:
             th = bw * PREFETCH_BUDGET_S / (docs * DOC_BLOCKS * 4096)
             out.append(row(f"batch_threshold/{name}/{tag}", 0.0,
                            f"threshold={th:.0f}"))
+    io_rows, _ = io_sweep()
+    out.extend(io_rows)
     return out
 
 

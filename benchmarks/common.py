@@ -91,3 +91,19 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def emit_json(filename: str, payload: dict) -> str:
+    """Write a machine-readable benchmark artifact (``BENCH_*.json``).
+
+    Destination dir comes from ``REPRO_BENCH_OUT_DIR`` (set by
+    ``benchmarks/run.py --json-dir``; default: the working directory), so CI
+    can pick the artifact up and assert on it."""
+    import json
+    out_dir = os.environ.get("REPRO_BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path}", flush=True)
+    return path

@@ -7,6 +7,7 @@ corpora (CI); the full run reproduces the paper's curve shapes.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 SUITES = [
@@ -28,7 +29,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on suite name")
+    ap.add_argument("--json-dir", default=None,
+                    help="directory for machine-readable BENCH_*.json "
+                         "artifacts (default: working directory)")
     args = ap.parse_args()
+    if args.json_dir:
+        os.environ["REPRO_BENCH_OUT_DIR"] = args.json_dir
 
     import importlib
     print("suite,name,us_per_call,derived")

@@ -80,7 +80,9 @@ class LatencyBreakdown:
     rerank_s: float = 0.0
     total_s: float = 0.0
     hit_rate: float = 1.0
-    bytes_read: int = 0
+    bytes_read: int = 0                # unique bytes billed for the batch
+    dedup_bytes_saved: int = 0         # duplicate-request bytes billed once
+                                       # by the coalesced batch I/O engine
 
     def ms(self) -> dict:
         return {k: round(v * 1e3, 3) for k, v in self.__dict__.items()

@@ -42,6 +42,10 @@ class QueryResult:
     prefetched: dict = field(default_factory=dict)   # id -> row in prefetch buffers
     buffers: tuple | None = None  # (cls, bow, lens) of prefetched docs
     miss_buffers: tuple | None = None
+    miss_rows: dict | None = None  # id -> row in miss_buffers (batch arena);
+                                   # None = positional (seed per-query reads)
+    wait_io: object | None = None  # callable: block until this query's async
+                                   # batch-I/O runs landed (rerank calls it)
 
     @classmethod
     def from_read(cls, doc_ids: np.ndarray, cand_scores: np.ndarray, read,
@@ -62,23 +66,23 @@ class QueryResult:
                    miss_buffers=(read.cls, read.bow, read.lens))
 
     @classmethod
-    def from_selected_read(cls, doc_ids: np.ndarray, cand_scores: np.ndarray,
-                           read, sel: np.ndarray, *,
-                           ann_s: float) -> "QueryResult":
-        """Result where only candidate positions ``sel`` were fetched (e.g.
-        the bitvec filter's survivors): row j of the read buffers holds
-        candidate ``sel[j]``. The buffers are exposed through the
-        ``prefetched`` id->row map so ``rerank_query`` scores exactly the
-        selected docs; I/O accounting stays in the critical path.
+    def from_batch_view(cls, doc_ids: np.ndarray, cand_scores: np.ndarray,
+                        batch, b: int, *, ann_s: float) -> "QueryResult":
+        """Result whose buffers are query ``b``'s zero-copy view into a
+        ``BatchReadResult`` arena: the shared buffers plus an id->row map.
+        I/O is billed in the critical path with the query's first-owner
+        attribution share; ``wait_io`` defers the arrival barrier to the
+        re-rank, so reads of later queries overlap this query's scoring.
         """
+        buffers, row_map, io_s = batch.view(b)
         stats = PrefetchStats(hit_rate=0.0, n_prefetched=0, n_hits=0,
-                              n_misses=len(sel), budget_s=0.0,
+                              n_misses=len(batch.plan.lists[b]), budget_s=0.0,
                               prefetch_io_s=0.0, leaked_s=0.0,
-                              miss_io_s=read.sim_seconds, ann_s=ann_s)
+                              miss_io_s=io_s, ann_s=ann_s)
         return cls(doc_ids=doc_ids, cand_scores=cand_scores,
                    hit_mask=np.zeros(len(doc_ids), bool), stats=stats,
-                   prefetched={int(doc_ids[p]): j for j, p in enumerate(sel)},
-                   buffers=(read.cls, read.bow, read.lens))
+                   prefetched=row_map, buffers=buffers,
+                   wait_io=(lambda: batch.ensure_query(b)))
 
 
 class ANNPrefetcher:
@@ -98,8 +102,16 @@ class ANNPrefetcher:
                   fetch: bool = True) -> list[QueryResult]:
         """q: (B, d). Returns one QueryResult per query.
 
-        The IVF compute is batched (one device program); the I/O accounting
-        is per-query, matching the paper's per-query latency tables.
+        The IVF compute is batched (one device program) and so is the I/O:
+        all queries' prefetch lists go to the storage tier as ONE coalesced
+        ``read_batch`` (dedup'd across queries, pipelined runs), and the
+        misses as a second. In coalesced mode a miss that any query already
+        prefetched is served from the shared prefetch arena instead of
+        re-read — the paper's Fig-4 pipeline across the batch, in code. The
+        accounting stays per-query (the paper's latency tables) via
+        first-owner attribution shares, which sum exactly to the batch
+        totals. Serial mode (``tier.coalesce=False``) reproduces the seed's
+        per-query blocking reads bit for bit.
         """
         delta = self.delta(nprobe)
         approx, final, _ = search_two_phase(self.index, q, nprobe, k, delta)
@@ -109,41 +121,71 @@ class ANNPrefetcher:
         budget = self.cost.prefetch_budget(self.index, nprobe, delta)
         ann_total = self.cost.time(self.index, nprobe)
 
-        results = []
-        for b in range(q.shape[0]):
+        B = q.shape[0]
+        pref_lists, fins, hit_masks, miss_lists = [], [], [], []
+        for b in range(B):
             pref_ids = a_ids[b][a_ids[b] >= 0]
             fin_ids, fin_scores = valid_candidates(f_ids[b], f_scores[b])
-            pref_set = set(pref_ids.tolist())
-            hit_mask = np.fromiter((i in pref_set for i in fin_ids), bool,
-                                   len(fin_ids))
-            misses = fin_ids[~hit_mask]
+            hit_mask = np.isin(fin_ids, pref_ids, assume_unique=False)
+            pref_lists.append(pref_ids)
+            fins.append((fin_ids, fin_scores))
+            hit_masks.append(hit_mask)
+            miss_lists.append(fin_ids[~hit_mask])
 
-            pref_read = self.tier.read(pref_ids) if fetch and len(pref_ids) \
-                else None
-            miss_read = self.tier.read(misses) if fetch and len(misses) \
-                else None
-            pref_io = pref_read.sim_seconds if pref_read else 0.0
-            miss_io = miss_read.sim_seconds if miss_read else 0.0
+        pref_batch = miss_batch = None
+        fetch_lists = miss_lists
+        served_masks = None
+        if fetch:
+            pref_batch = self.tier.read_batch(pref_lists, skip_empty=True)
+            if pref_batch.coalesced:
+                # cross-query reuse: misses already in the batch's prefetch
+                # arena are served from memory, not re-read from storage
+                served_masks = [pref_batch.plan.contains(m)
+                                for m in miss_lists]
+                fetch_lists = [m[~mask]
+                               for m, mask in zip(miss_lists, served_masks)]
+            miss_batch = self.tier.read_batch(fetch_lists, skip_empty=True)
 
+        results = []
+        for b in range(B):
+            fin_ids, fin_scores = fins[b]
+            hit_mask = hit_masks[b]
+            buffers, pref_rows, pref_io = (None, {}, 0.0) if not fetch \
+                else pref_batch.view(b)
+            miss_buffers, miss_rows, miss_io = (None, None, 0.0) if not fetch \
+                else miss_batch.view(b)
+            wait_io = None
+            if fetch and (pref_batch.coalesced or miss_batch.coalesced):
+                served_rows = np.empty(0, np.int64)
+                served = miss_lists[b][served_masks[b]] if served_masks \
+                    else miss_lists[b][:0]
+                if len(served):
+                    served_rows = pref_batch.plan.rows_of(served)
+                    pref_rows = dict(pref_rows)
+                    pref_rows.update(zip(served.tolist(),
+                                         served_rows.tolist()))
+                # barrier covers this query's own runs AND the prefetch-arena
+                # runs it borrows served misses from (owned by other queries)
+                wait_io = (lambda b=b, rows=served_rows: (
+                    pref_batch.ensure_query(b),
+                    pref_batch.ensure_rows(rows),
+                    miss_batch.ensure_query(b)))
             stats = PrefetchStats(
                 hit_rate=float(hit_mask.mean()) if len(fin_ids) else 1.0,
-                n_prefetched=len(pref_ids),
+                n_prefetched=len(pref_lists[b]),
                 n_hits=int(hit_mask.sum()),
-                n_misses=len(misses),
+                n_misses=len(miss_lists[b]),
                 budget_s=budget,
                 prefetch_io_s=pref_io,
                 leaked_s=max(0.0, pref_io - budget),
                 miss_io_s=miss_io,
                 ann_s=ann_total,
             )
-            row_of = {int(i): j for j, i in enumerate(pref_ids)}
             results.append(QueryResult(
                 doc_ids=fin_ids, cand_scores=fin_scores,
-                hit_mask=hit_mask, stats=stats, prefetched=row_of,
-                buffers=(pref_read.cls, pref_read.bow, pref_read.lens)
-                if pref_read else None,
-                miss_buffers=(miss_read.cls, miss_read.bow, miss_read.lens)
-                if miss_read else None))
+                hit_mask=hit_mask, stats=stats, prefetched=pref_rows,
+                buffers=buffers, miss_buffers=miss_buffers,
+                miss_rows=miss_rows, wait_io=wait_io))
         return results
 
     # --- paper eq. (4) -----------------------------------------------------

@@ -59,6 +59,10 @@ def rerank_query(q_bow, q_len, result, *, alpha: float = 1.0,
     select=<positions> -> MaxSim exactly those candidate positions (e.g. the
     bit-filter survivors of the bitvec backend) instead of the CLS top-R.
     """
+    if result.wait_io is not None:
+        # batch I/O engine: block until this query's arena runs have landed
+        # (reads of later queries keep streaming while we score this one)
+        result.wait_io()
     ids = result.doc_ids
     k = len(ids)
     if select is not None:
@@ -74,9 +78,11 @@ def rerank_query(q_bow, q_len, result, *, alpha: float = 1.0,
     # hits: scored from the prefetch buffers (early re-rank)
     pref_rows, pref_pos = [], []
     miss_rows, miss_pos = [], []
-    n_miss_seen = 0
     miss_row_of = {}
-    if result.miss_buffers is not None:
+    if result.miss_rows is not None:
+        # batch I/O engine: rows point into the shared miss arena directly
+        miss_row_of = result.miss_rows
+    elif result.miss_buffers is not None:
         miss_ids = ids[~result.hit_mask]
         miss_row_of = {int(i): j for j, i in enumerate(miss_ids)}
     for j in sel:

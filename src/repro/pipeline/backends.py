@@ -26,6 +26,7 @@ from repro.core.ivf import (ANNCostModel, IVFIndex, build_ivf, search,
                             valid_candidates)
 from repro.core.prefetcher import ANNPrefetcher, QueryResult
 from repro.core.rerank import RerankOutput, rerank_query
+from repro.storage.batch_io import consumption_dedup_saved
 from repro.storage.io_engine import StorageTier
 
 _REGISTRY: dict[str, type["RetrievalBackend"]] = {}
@@ -111,19 +112,26 @@ class RetrievalBackend(abc.ABC):
     def _rerank_candidates(self, q_bow, q_lens, scores, ids,
                            bd: LatencyBreakdown) -> list[RerankOutput]:
         """Shared tail of every single-phase candidate generator (Direct*,
-        FDE): per query, drop ``-1`` padding keeping ids/scores paired, read
-        the top-``rerank_count`` candidates in the critical path, and run the
-        full-precision re-rank with its latency/bandwidth billing."""
+        FDE): per query, drop ``-1`` padding keeping ids/scores paired, then
+        read the whole batch's top-``rerank_count`` candidates as ONE
+        coalesced ``read_batch`` (dedup'd across queries, async runs) and
+        re-rank each query as its arena rows land — I/O for later queries
+        overlaps scoring of earlier ones. Billing: the batch pays one
+        coalesced read in the critical path; duplicate candidate bytes are
+        billed once, surfaced as ``bd.dedup_bytes_saved``."""
         cfg = self.cfg
-        ranked = []
+        prep = []
         for b in range(len(ids)):
             fin, fin_scores = valid_candidates(ids[b], scores[b])
             rr = len(fin) if cfg.rerank_count is None else min(
                 cfg.rerank_count, len(fin))
-            read = self.tier.read(fin[:rr])
-            bd.critical_io_s += read.sim_seconds
-            res = QueryResult.from_read(fin, fin_scores, read,
-                                        ann_s=bd.ann_s)
+            prep.append((fin, fin_scores, rr))
+        batch = self.tier.read_batch([fin[:rr] for fin, _, rr in prep])
+        bd.critical_io_s += batch.sim_seconds
+        ranked = []
+        for b, (fin, fin_scores, rr) in enumerate(prep):
+            res = QueryResult.from_batch_view(fin, fin_scores, batch, b,
+                                              ann_s=bd.ann_s)
             out = rerank_query(q_bow[b], int(q_lens[b]), res,
                                alpha=cfg.alpha, rerank_count=rr,
                                doc_bytes=self.doc_bytes,
@@ -131,6 +139,9 @@ class RetrievalBackend(abc.ABC):
             ranked.append(out)
             bd.rerank_s += self._maxsim_time(rr, int(q_lens[b]))
             bd.bytes_read += out.bow_bytes_read
+        saved = batch.dedup_bytes_saved(self.doc_bytes)
+        bd.bytes_read -= saved
+        bd.dedup_bytes_saved += saved
         bd.hit_rate = 0.0
         return ranked
 
@@ -174,6 +185,14 @@ class ESPNBackend(RetrievalBackend):
         bd.hidden_s = hidden
         bd.critical_io_s = critical
         bd.hit_rate = float(np.mean(hit_rates))
+        if self.tier.coalesce:
+            # batch engine billed each doc once; surface the duplicate
+            # consumptions the serial path would have re-billed
+            saved = consumption_dedup_saved(
+                [res.doc_ids[:out.n_reranked]
+                 for res, out in zip(results, ranked)], self.doc_bytes)
+            bd.bytes_read -= saved
+            bd.dedup_bytes_saved += saved
         return ranked
 
 
@@ -248,11 +267,13 @@ class BitvecBackend(RetrievalBackend):
         scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
         scores, ids = np.asarray(scores), np.asarray(ids)
         bd.ann_s = self.cost.time(self.index, cfg.nprobe)
-        ranked = []
+        # 1) resident bit filter: score ALL candidates, zero SSD bytes; the
+        #    top-R survivors are chosen with a partial sort (argpartition +
+        #    sort of R elements, like the FDE brute path), not a full argsort
+        prep = []
         for b in range(q_cls.shape[0]):
             fin, fin_scores = valid_candidates(ids[b], scores[b])
             qlen = int(q_lens[b])
-            # 1) resident bit filter: score ALL candidates, zero SSD bytes
             packed, lens = self.tier.read_bits(fin)
             bit_s = np.asarray(bitsim(
                 jnp.asarray(q_bow[b][:qlen]),
@@ -261,19 +282,35 @@ class BitvecBackend(RetrievalBackend):
                 d=layout.d_bow, use_pallas=cfg.use_pallas))
             bd.rerank_s += self.compute.bitsim_time(len(fin), qlen, mean_t,
                                                     layout.d_bow)
-            # 2) SSD reads + full-precision MaxSim for the survivors only
-            sel = np.argsort(-bit_s, kind="stable")[:min(cfg.bit_filter,
-                                                         len(fin))]
-            read = self.tier.read(fin[sel])
-            bd.critical_io_s += read.sim_seconds
-            res = QueryResult.from_selected_read(fin, fin_scores,
-                                                 read, sel, ann_s=bd.ann_s)
+            r = min(cfg.bit_filter, len(fin))
+            if r < len(fin):
+                # O(n + r log r) instead of a full argsort; ties exactly at
+                # the cutoff may pick a different (equal-score) survivor
+                # subset than a stable full sort would, like the FDE brute
+                # path's selection
+                part = np.argpartition(-bit_s, r - 1)[:r]
+            else:
+                part = np.arange(len(fin))
+            sel = part[np.argsort(-bit_s[part], kind="stable")]
+            prep.append((fin, fin_scores, sel))
+        # 2) ONE coalesced SSD read for every query's survivors, then
+        #    full-precision MaxSim per query as its arena rows land
+        batch = self.tier.read_batch([fin[sel] for fin, _, sel in prep])
+        bd.critical_io_s += batch.sim_seconds
+        ranked = []
+        for b, (fin, fin_scores, sel) in enumerate(prep):
+            qlen = int(q_lens[b])
+            res = QueryResult.from_batch_view(fin, fin_scores, batch, b,
+                                              ann_s=bd.ann_s)
             out = rerank_query(q_bow[b], qlen, res, alpha=cfg.alpha,
                                select=sel, doc_bytes=self.doc_bytes,
                                use_pallas=cfg.use_pallas)
             ranked.append(out)
             bd.rerank_s += self._maxsim_time(len(sel), qlen)
             bd.bytes_read += out.bow_bytes_read
+        saved = batch.dedup_bytes_saved(self.doc_bytes)
+        bd.bytes_read -= saved
+        bd.dedup_bytes_saved += saved
         bd.hit_rate = 0.0
         return ranked
 

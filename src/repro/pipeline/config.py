@@ -53,6 +53,10 @@ class StorageConfig:
     bit_dtype: str = "uint32"          # resident bit-table lane dtype
                                        # (uint8/uint16/uint32; bitvec only)
     fde_dtype: str = "float16"         # resident FDE table dtype (fde only)
+    io_coalesce: bool = True           # batch I/O engine: dedup + coalesce
+                                       # reads across the query batch (False
+                                       # = seed-faithful serial per-query
+                                       # reads, the benchmarks' baseline)
 
 
 @dataclass
@@ -146,6 +150,10 @@ class PipelineConfig:
         ap.add_argument("--t-max", type=int, default=s.t_max)
         ap.add_argument("--mem-budget-frac", type=float,
                         default=s.mem_budget_frac)
+        ap.add_argument("--serial-io", action="store_true",
+                        help="disable the coalesced batch I/O engine "
+                             "(per-query serial reads; duplicates billed "
+                             "per requesting query)")
         ap.add_argument("--mode", default=r.mode,
                         help="retrieval backend (espn, gds, mmap, swap, "
                              "dram, or any registered name; validated "
@@ -197,7 +205,8 @@ class PipelineConfig:
             storage=StorageConfig(dtype=args.dtype, t_max=args.t_max,
                                   mem_budget_frac=args.mem_budget_frac,
                                   bit_dtype=args.bit_dtype,
-                                  fde_dtype=args.fde_dtype),
+                                  fde_dtype=args.fde_dtype,
+                                  io_coalesce=not args.serial_io),
             retrieval=RetrievalConfig(mode=args.mode, nprobe=args.nprobe,
                                       k_candidates=args.k,
                                       prefetch_step=args.prefetch_step,

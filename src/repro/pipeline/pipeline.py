@@ -128,7 +128,8 @@ class Pipeline:
             fde = None        # don't bill the FDE table to other backends
         tier = StorageTier(layout, stack=backend_cls.storage_stack,
                            t_max=cfg.storage.t_max, mem_budget_bytes=budget,
-                           bits=bits, fde=fde)
+                           bits=bits, fde=fde,
+                           coalesce=cfg.storage.io_coalesce)
         backend = backend_cls(index, tier, cfg.retrieval.to_espn_config(),
                               cost_model=cost_model, compute=compute)
         return cls(cfg, corpus=corpus, index=index, layout=layout, tier=tier,

@@ -19,8 +19,11 @@ import numpy as np
 
 from repro.core.fde import FDETable
 from repro.storage import ssd as ssd_lib
+from repro.storage.batch_io import (BatchReadPlan, BatchReadResult,
+                                    _exclusive_cumsum)
 from repro.storage.cache import PageCache
-from repro.storage.layout import BitTable, EmbeddingLayout, gather_docs
+from repro.storage.layout import (BitTable, EmbeddingLayout, gather_docs,
+                                  gather_docs_into)
 
 
 @dataclass
@@ -38,7 +41,8 @@ class StorageTier:
                  stack: str = "espn", mem_budget_bytes: int | None = None,
                  t_max: int = 180, qd: int = 64, include_h2d: bool = True,
                  n_io_threads: int = 4, bits: BitTable | None = None,
-                 fde: FDETable | None = None):
+                 fde: FDETable | None = None, coalesce: bool = True,
+                 io_chunk_docs: int | None = None):
         assert stack in ("espn", "mmap", "swap", "dram")
         self.layout = layout
         self.bits = bits              # resident sign-bit tier (bitvec filter)
@@ -49,6 +53,9 @@ class StorageTier:
         self.t_max = t_max
         self.qd = qd
         self.include_h2d = include_h2d
+        self.coalesce = coalesce      # read_batch default: coalesced vs serial
+        self.io_chunk_docs = io_chunk_docs   # pipelining granularity (docs/run)
+        self.n_io_threads = n_io_threads
         self._pool = ThreadPoolExecutor(max_workers=n_io_threads,
                                         thread_name_prefix="espn-io")
         self._lock = threading.Lock()
@@ -56,16 +63,21 @@ class StorageTier:
         self.page_cache = PageCache(budget, layout.block)
         if stack == "swap":
             self.swap_capacity = (mem_budget_bytes or 0) + 32 * 2**30
-        self.stats = {"reads": 0, "docs": 0, "blocks": 0, "sim_seconds": 0.0}
+        self.stats = {"reads": 0, "docs": 0, "doc_requests": 0, "blocks": 0,
+                      "sim_seconds": 0.0, "batch_reads": 0, "io_runs": 0,
+                      "dedup_docs": 0}
 
     # -- timing ------------------------------------------------------------
-    def _pages_of(self, ids) -> list[int]:
-        pages = []
-        offs = self.layout.offsets
-        for i in np.asarray(ids, np.int64):
-            s, nb = offs[i]
-            pages.extend(range(int(s), int(s + nb)))
-        return pages
+    def _pages_of(self, ids) -> np.ndarray:
+        """Pages (device blocks) touched by ``ids``, vectorized: per-doc
+        ``range()`` loops replaced by a repeat/cumsum arange construction."""
+        offs = self.layout.offsets[np.asarray(ids, np.int64).ravel()]
+        starts, counts = offs[:, 0], offs[:, 1]
+        total = int(counts.sum())
+        if total == 0:
+            return np.empty(0, np.int64)
+        base = np.repeat(starts - _exclusive_cumsum(counts), counts)
+        return base + np.arange(total, dtype=np.int64)
 
     def _sim_time(self, ids) -> tuple[float, int]:
         n_blocks = self.layout.blocks_for(ids)
@@ -98,12 +110,84 @@ class StorageTier:
         with self._lock:
             self.stats["reads"] += 1
             self.stats["docs"] += len(ids)
+            self.stats["doc_requests"] += len(ids)
             self.stats["blocks"] += n_blocks
             self.stats["sim_seconds"] += sim
         return ReadResult(cls, bow, lens, sim, n_blocks)
 
     def read_async(self, ids, t_max: int | None = None) -> Future:
         return self._pool.submit(self.read, ids, t_max)
+
+    def read_batch(self, per_query_ids, t_max: int | None = None, *,
+                   coalesce: bool | None = None,
+                   skip_empty: bool = False) -> BatchReadResult:
+        """One storage transaction for a whole query batch.
+
+        Coalesced (the default, ``self.coalesce``): doc ids are dedup'd
+        across queries, the union is split into block-contiguous runs, runs
+        are gathered concurrently on the tier's thread pool into a shared
+        arena (call ``ensure_query(b)`` before consuming query ``b``'s rows
+        — rerank of earlier queries overlaps the remaining I/O), and the
+        clock bills ONE read of the unique blocks at this tier's queue
+        depth. Per-query shares (first-owner attribution) sum exactly to
+        the batch total.
+
+        ``coalesce=False``: the seed-faithful serial path — one blocking
+        ``read`` per query, duplicates billed per requesting query
+        (``skip_empty`` skips zero-id queries, matching the prefetcher's
+        historical behaviour; the direct backends always billed the empty
+        read's h2d floor).
+        """
+        t_max = t_max or self.t_max
+        coalesce = self.coalesce if coalesce is None else coalesce
+        lists = [np.asarray(x, np.int64).ravel() for x in per_query_ids]
+        if not coalesce:
+            reads = [None if (skip_empty and len(ids) == 0)
+                     else self.read(ids, t_max) for ids in lists]
+            plan = BatchReadPlan(
+                lists=lists, arena_ids=np.empty(0, np.int64),
+                arena_blocks=np.empty(0, np.int64), runs=[],
+                query_rows=[np.empty(0, np.int64) for _ in lists],
+                query_runs=[np.empty(0, np.int64) for _ in lists],
+                owned_blocks=np.zeros(len(lists), np.int64), n_unique=0,
+                n_requested=int(sum(len(x) for x in lists)), n_blocks=0)
+            return BatchReadResult(
+                coalesced=False, plan=plan,
+                sim_seconds=sum(r.sim_seconds for r in reads if r),
+                n_blocks=sum(r.n_blocks for r in reads if r),
+                serial_reads=reads)
+        plan = BatchReadPlan.build(self.layout, lists,
+                                   chunk_docs=self.io_chunk_docs)
+        if plan.n_unique == 0:
+            return BatchReadResult(coalesced=True, plan=plan,
+                                   sim_seconds=0.0, n_blocks=0,
+                                   arena=(np.zeros((0, self.layout.d_cls),
+                                                   np.float32),
+                                          np.zeros((0, t_max,
+                                                    self.layout.d_bow),
+                                                   np.float32),
+                                          np.zeros(0, np.int32)))
+        sim, n_blocks = self._sim_time(plan.arena_ids)
+        u = plan.n_unique
+        arena = (np.zeros((u, self.layout.d_cls), np.float32),
+                 np.zeros((u, t_max, self.layout.d_bow), np.float32),
+                 np.zeros(u, np.int32))
+        futures = [self._pool.submit(
+            gather_docs_into, self.layout, plan.arena_ids[r0:r1],
+            arena[0][r0:r1], arena[1][r0:r1], arena[2][r0:r1])
+            for r0, r1 in plan.runs]
+        with self._lock:
+            self.stats["reads"] += 1
+            self.stats["batch_reads"] += 1
+            self.stats["io_runs"] += len(plan.runs)
+            self.stats["docs"] += u
+            self.stats["doc_requests"] += plan.n_requested
+            self.stats["dedup_docs"] += plan.n_requested - u
+            self.stats["blocks"] += n_blocks
+            self.stats["sim_seconds"] += sim
+        return BatchReadResult(coalesced=True, plan=plan, sim_seconds=sim,
+                               n_blocks=n_blocks, arena=arena,
+                               futures=futures)
 
     def read_bits(self, ids, t_max: int | None = None):
         """Gather packed sign bits for ``ids`` from the *resident* bit tier:

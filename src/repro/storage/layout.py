@@ -165,6 +165,23 @@ def bits_from_layout(layout: EmbeddingLayout, *,
     return pack_bits(bows, dtype=dtype)
 
 
+def gather_docs_into(layout: EmbeddingLayout, ids, out_cls: np.ndarray,
+                     out_bow: np.ndarray, out_lens: np.ndarray) -> None:
+    """Gather ``ids`` into caller-owned buffer slices (rows ``0..len(ids)``).
+
+    The batch I/O engine preallocates one shared arena for a whole query
+    batch and hands each block-contiguous run a disjoint slice, so runs can
+    gather concurrently on the tier's thread pool with no further copies.
+    """
+    t_max = out_bow.shape[1]
+    for j, i in enumerate(np.asarray(ids, np.int64)):
+        c, b = unpack_doc(layout, int(i))
+        t = min(b.shape[0], t_max)
+        out_bow[j, :t] = b[:t]
+        out_cls[j] = c
+        out_lens[j] = t
+
+
 def gather_docs(layout: EmbeddingLayout, ids, t_max: int):
     """Host-side ragged gather -> padded (len(ids), t_max, d_bow) + lengths.
 
@@ -175,10 +192,5 @@ def gather_docs(layout: EmbeddingLayout, ids, t_max: int):
     out = np.zeros((len(ids), t_max, layout.d_bow), np.float32)
     cls = np.zeros((len(ids), layout.d_cls), np.float32)
     lens = np.zeros(len(ids), np.int32)
-    for j, i in enumerate(ids):
-        c, b = unpack_doc(layout, int(i))
-        t = min(b.shape[0], t_max)
-        out[j, :t] = b[:t]
-        cls[j] = c
-        lens[j] = t
+    gather_docs_into(layout, ids, cls, out, lens)
     return cls, out, lens
