@@ -1,0 +1,133 @@
+"""Storage-cluster scaling: simulated I/O latency percentiles vs shards x
+replication x hedging, plus the cross-batch arena-cache hit rate, on a
+repeat-heavy (hot-set) trace with a degraded primary replica.
+
+Emits ``BENCH_cluster.json`` (via ``benchmarks.run --json-dir`` /
+``REPRO_BENCH_OUT_DIR``). The CI smoke job asserts hedged p99 <= unhedged
+p99 on the degraded scenario and arena-cache hit rate > 0.
+
+    REPRO_BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run --only cluster
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _trace(n_docs: int, n_batches: int, batch: int, k: int, *,
+           hot: int = 64, p_hot: float = 0.7, seed: int = 7):
+    """Repeat-heavy doc-id trace: each query draws ``k`` ids, ``p_hot`` of
+    them from a small hot set shared across batches (head-query skew)."""
+    rng = np.random.default_rng(seed)
+    hot_ids = rng.choice(n_docs, size=min(hot, n_docs), replace=False)
+    out = []
+    for _ in range(n_batches):
+        lists = []
+        for _ in range(batch):
+            take_hot = rng.random(k) < p_hot
+            ids = np.where(take_hot,
+                           rng.choice(hot_ids, size=k),
+                           rng.integers(0, n_docs, size=k))
+            lists.append(np.unique(ids))
+        out.append(lists)
+    return out
+
+
+def _run_config(layout, trace, *, n_shards: int, replication: int,
+                hedge_quantile: float, arena_cache_mb: float,
+                jitter: float, mults) -> dict:
+    from repro.storage.cluster import StorageCluster
+
+    cluster = StorageCluster(
+        layout, n_shards=n_shards, replication=replication,
+        replica_mults=mults, hedge_quantile=hedge_quantile,
+        jitter_sigma=jitter, seed=0,
+        arena_cache_bytes=int(arena_cache_mb * 2**20), t_max=64)
+    lats = []
+    for lists in trace:
+        res = cluster.read_batch(lists)
+        res.wait_all()
+        lats.append(res.sim_seconds * 1e3)
+    st = dict(cluster.stats)
+    cluster.close()
+    probes = st["cache_hits"] + st["cache_misses"]
+    return {
+        "shards": n_shards, "replication": replication,
+        "hedge_quantile": hedge_quantile,
+        "p50_ms": round(float(np.percentile(lats, 50)), 4),
+        "p99_ms": round(float(np.percentile(lats, 99)), 4),
+        "mean_ms": round(float(np.mean(lats)), 4),
+        "cache_hit_rate": round(st["cache_hits"] / probes, 4) if probes else 0.0,
+        "hedged_reads": st["hedged_reads"], "hedge_wins": st["hedge_wins"],
+        "hedge_bytes": st["hedge_bytes"], "blocks": st["blocks"],
+    }
+
+
+def _e2e_rows(corpus, index, layout) -> list[dict]:
+    """Cluster through the full retrieval path: the same duplicate-heavy
+    query batch twice — the second batch rides the arena cache."""
+    from repro.pipeline import Pipeline, PipelineConfig
+    from repro.pipeline.config import ClusterConfig
+
+    cfg = PipelineConfig()
+    cfg.retrieval.mode = "gds"
+    cfg.retrieval.nprobe = 8
+    cfg.retrieval.k_candidates = 50
+    cfg.storage.t_max = 64
+    cfg.cluster = ClusterConfig(n_shards=2, arena_cache_mb=16.0)
+    pipe = Pipeline.from_artifacts(cfg, index=index, layout=layout,
+                                   corpus=corpus)
+    nq = min(8, len(corpus.query_lens))
+    q = (corpus.queries_cls[:nq], corpus.queries_bow[:nq],
+         corpus.query_lens[:nq])
+    rows = []
+    for label in ("cold", "warm"):
+        bd = pipe.search(*q).breakdown
+        rows.append({"pass": label,
+                     "critical_io_ms": round(bd.critical_io_s * 1e3, 4),
+                     "cache_hits": pipe.tier.stats["cache_hits"]})
+    pipe.close()
+    return rows
+
+
+def main() -> None:
+    corpus = common.scoring_corpus()
+    index = common.scoring_index(corpus)
+    layout = common.scoring_layout(corpus)
+    n_batches = 24 if common.FAST else 120
+    trace = _trace(layout.n_docs, n_batches, batch=8, k=24)
+
+    jitter = 0.25
+    cache_mb = 8.0
+    grid = []
+    for n_shards in (1, 2, 4):
+        for replication in (1, 2):
+            mults = [3.0] + [1.0] * (replication - 1) if replication > 1 \
+                else []                     # degraded primary scenario
+            for hq in ((0.0, 0.95) if replication > 1 else (0.0,)):
+                r = _run_config(layout, trace, n_shards=n_shards,
+                                replication=replication, hedge_quantile=hq,
+                                arena_cache_mb=cache_mb, jitter=jitter,
+                                mults=mults)
+                grid.append(r)
+                common.row(
+                    f"cluster_s{n_shards}_r{replication}_h{hq}",
+                    r["p99_ms"] * 1e3,
+                    f"p50={r['p50_ms']}ms p99={r['p99_ms']}ms "
+                    f"cache={r['cache_hit_rate']} wins={r['hedge_wins']}")
+    e2e = _e2e_rows(corpus, index, layout)
+    for r in e2e:
+        common.row(f"cluster_e2e_{r['pass']}", r["critical_io_ms"] * 1e3,
+                   f"cache_hits={r['cache_hits']}")
+    common.emit_json("BENCH_cluster.json", {
+        "scenario": {"jitter_sigma": jitter, "arena_cache_mb": cache_mb,
+                     "degraded_primary_mult": 3.0, "batches": n_batches,
+                     "batch": 8, "k": 24},
+        "grid": grid,
+        "e2e": e2e,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ SUITES = [
     ("beyond:fde-candidate-gen", "benchmarks.bench_fde_candidates"),
     ("tables4-5:latency-vs-memory", "benchmarks.bench_latency_memory"),
     ("figs8-10:batch-scaling", "benchmarks.bench_batch_scaling"),
+    ("beyond:cluster-scaling", "benchmarks.bench_cluster_scaling"),
     ("kernels", "benchmarks.bench_kernels"),
     ("beyond:espn-embedding-offload", "benchmarks.bench_espn_embedding"),
     ("beyond:disk-ivf-full-offload", "benchmarks.bench_disk_ivf"),

@@ -37,7 +37,7 @@ class DiskIVFIndex:
     blob: np.ndarray                # uint8 disk image of postings
     d: int
     n_docs: int
-    block: int = 4096
+    block: int = ssd_lib.DEFAULT_BLOCK
     spec: ssd_lib.StorageSpec = ssd_lib.PM983_PCIE3
     cache_cells: int = 0            # hot-cell LRU capacity (SPANN list heads)
     _cache: OrderedDict = field(default_factory=OrderedDict)
@@ -96,7 +96,7 @@ class DiskIVFIndex:
 
 
 def build_disk_ivf(index: IVFIndex, *, spec=ssd_lib.PM983_PCIE3,
-                   cache_cells: int = 0, block: int = 4096) -> DiskIVFIndex:
+                   cache_cells: int = 0, block: int = ssd_lib.DEFAULT_BLOCK) -> DiskIVFIndex:
     """Pack an in-memory IVFIndex's postings into a block-aligned disk image."""
     ncells, d = index.centroids.shape
     cell_ids = np.asarray(index.cell_ids)

@@ -83,6 +83,10 @@ class LatencyBreakdown:
     bytes_read: int = 0                # unique bytes billed for the batch
     dedup_bytes_saved: int = 0         # duplicate-request bytes billed once
                                        # by the coalesced batch I/O engine
+    hedge_bytes_read: int = 0          # EXTRA duplicate bytes moved by the
+                                       # storage cluster's hedged re-issues
+                                       # (billed on the device clock, never
+                                       # part of bytes_read's unique bill)
 
     def ms(self) -> dict:
         return {k: round(v * 1e3, 3) for k, v in self.__dict__.items()

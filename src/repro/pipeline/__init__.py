@@ -12,9 +12,9 @@ Config classes import eagerly (they are dependency-light, so CLIs can build
 an argparse parser before jax loads); ``Pipeline`` and the registry resolve
 lazily on first attribute access (PEP 562).
 """
-from repro.pipeline.config import (CorpusConfig, IndexConfig, PipelineConfig,
-                                   RetrievalConfig, ServeConfig,
-                                   StorageConfig)
+from repro.pipeline.config import (ClusterConfig, CorpusConfig, IndexConfig,
+                                   PipelineConfig, RetrievalConfig,
+                                   ServeConfig, StorageConfig)
 
 _LAZY = {
     "Pipeline": "repro.pipeline.pipeline",
@@ -27,7 +27,7 @@ _LAZY = {
 
 __all__ = [
     "Pipeline", "PipelineConfig", "CorpusConfig", "IndexConfig",
-    "StorageConfig", "RetrievalConfig", "ServeConfig",
+    "StorageConfig", "RetrievalConfig", "ClusterConfig", "ServeConfig",
     "RetrievalBackend", "register_backend", "get_backend",
     "available_backends",
 ]

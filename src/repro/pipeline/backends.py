@@ -92,7 +92,11 @@ class RetrievalBackend(abc.ABC):
                     q_lens: np.ndarray) -> RetrievalResponse:
         bd = LatencyBreakdown()
         bd.encode_s = self.compute.encode_time(q_cls.shape[0])
+        # hedged re-issues happen inside the tier (storage cluster); surface
+        # this batch's duplicate-byte bill without any per-backend plumbing
+        hedge0 = self.tier.stats.get("hedge_bytes", 0)
         ranked = self._retrieve(q_cls, q_bow, q_lens, bd)
+        bd.hedge_bytes_read = self.tier.stats.get("hedge_bytes", 0) - hedge0
         bd.total_s = (bd.encode_s + bd.ann_s + bd.critical_io_s + bd.rerank_s
                       + 0.2e-3)
         return RetrievalResponse(ranked=ranked, breakdown=bd)

@@ -12,7 +12,8 @@ from dataclasses import dataclass, field
 
 # NOTE: no repro.core / backends imports at module scope — this module must
 # stay import-light so CLIs can build their parser (and answer --help)
-# before jax loads.
+# before jax loads. (repro.storage.ssd is dataclass-only and jax-free.)
+from repro.storage.ssd import DEFAULT_BLOCK
 
 
 @dataclass
@@ -47,7 +48,7 @@ class StorageConfig:
     """Block-aligned embedding layout + storage tier. The software stack
     (espn/mmap/swap/dram) is chosen by the retrieval backend, not here."""
     dtype: str = "float16"             # stored element dtype
-    block: int = 4096
+    block: int = DEFAULT_BLOCK         # device block / alignment size
     t_max: int = 180                   # gather padding (max tokens read back)
     mem_budget_frac: float = 0.25      # page-cache budget for mmap/swap
     bit_dtype: str = "uint32"          # resident bit-table lane dtype
@@ -97,6 +98,39 @@ class RetrievalConfig:
 
 
 @dataclass
+class ClusterConfig:
+    """Sharded/replicated storage cluster (``repro.storage.cluster``). The
+    defaults are the single-tier identity: a plain ``StorageTier`` is built
+    unless any scale-out knob is set (bitwise-identical bills/rankings)."""
+    n_shards: int = 1                  # layout partitions (one tier each)
+    replication: int = 1               # replicas per shard (clock-only)
+    partition: str = "round_robin"     # round_robin | range (by block mass)
+    hedge_quantile: float = 0.0        # re-issue a lagging shard read past
+                                       # this quantile of the healthy latency
+                                       # distribution (0 = no hedging)
+    jitter_sigma: float = 0.0          # lognormal device-clock jitter sigma
+                                       # (straggler tail; 0 = deterministic)
+    replica_mults: list = field(default_factory=list)
+                                       # per-replica latency multipliers,
+                                       # broadcast across shards (e.g.
+                                       # [4.0, 1.0] = degraded primary);
+                                       # empty = all healthy (1.0)
+    arena_cache_mb: float = 0.0        # cross-batch doc-row cache budget
+                                       # (0 = off)
+    seed: int = 0                      # per-replica clock RNG seed
+
+    def enabled(self) -> bool:
+        """True when any knob leaves the single-tier identity path."""
+        return (self.n_shards > 1 or self.replication > 1
+                or self.hedge_quantile > 0.0 or self.jitter_sigma > 0.0
+                or self.arena_cache_mb > 0.0
+                or any(m != 1.0 for m in self.replica_mults))
+
+    def arena_cache_bytes(self) -> int:
+        return int(self.arena_cache_mb * 2**20)
+
+
+@dataclass
 class ServeConfig:
     max_batch: int = 12
     max_wait_s: float = 0.005
@@ -108,11 +142,12 @@ class PipelineConfig:
     index: IndexConfig = field(default_factory=IndexConfig)
     storage: StorageConfig = field(default_factory=StorageConfig)
     retrieval: RetrievalConfig = field(default_factory=RetrievalConfig)
+    cluster: ClusterConfig = field(default_factory=ClusterConfig)
     serve: ServeConfig = field(default_factory=ServeConfig)
 
     _SECTIONS = {"corpus": CorpusConfig, "index": IndexConfig,
                  "storage": StorageConfig, "retrieval": RetrievalConfig,
-                 "serve": ServeConfig}
+                 "cluster": ClusterConfig, "serve": ServeConfig}
 
     # -- dict round-trip ----------------------------------------------------
     def to_dict(self) -> dict:
@@ -132,6 +167,7 @@ class PipelineConfig:
     def add_cli_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
         c, i, s, r, v = (CorpusConfig(), IndexConfig(), StorageConfig(),
                          RetrievalConfig(), ServeConfig())
+        cl = ClusterConfig()
         ap.add_argument("--docs", type=int, default=c.n_docs)
         ap.add_argument("--queries", type=int, default=c.n_queries)
         ap.add_argument("--d-cls", type=int, default=c.d_cls)
@@ -185,6 +221,30 @@ class PipelineConfig:
         ap.add_argument("--fde-dtype", default=s.fde_dtype,
                         choices=["float16", "float32"],
                         help="resident FDE table dtype (fde mode)")
+        ap.add_argument("--shards", type=int, default=cl.n_shards,
+                        help="storage cluster: shard the layout across this "
+                             "many tiers (1 = single-tier identity)")
+        ap.add_argument("--replication", type=int, default=cl.replication,
+                        help="storage cluster: replicas per shard")
+        ap.add_argument("--partition", default=cl.partition,
+                        choices=["round_robin", "range"],
+                        help="shard partitioning policy")
+        ap.add_argument("--hedge-quantile", type=float,
+                        default=cl.hedge_quantile,
+                        help="re-issue lagging shard reads on a replica past "
+                             "this latency quantile (0 = no hedging)")
+        ap.add_argument("--cluster-jitter", type=float,
+                        default=cl.jitter_sigma,
+                        help="lognormal device-clock jitter sigma "
+                             "(straggler tail)")
+        ap.add_argument("--replica-mults", default="",
+                        help="comma-separated per-replica latency "
+                             "multipliers, e.g. '4.0,1.0' = degraded primary")
+        ap.add_argument("--arena-cache-mb", type=float,
+                        default=cl.arena_cache_mb,
+                        help="cross-batch arena cache budget in MB (0 = off)")
+        ap.add_argument("--cluster-seed", type=int, default=cl.seed,
+                        help="replica clock RNG seed")
         ap.add_argument("--max-batch", type=int, default=v.max_batch)
         ap.add_argument("--max-wait-s", type=float, default=v.max_wait_s)
         return ap
@@ -220,5 +280,13 @@ class PipelineConfig:
                                       fde_seed=args.fde_seed,
                                       fde_brute_threshold=(
                                           args.fde_brute_threshold)),
+            cluster=ClusterConfig(
+                n_shards=args.shards, replication=args.replication,
+                partition=args.partition,
+                hedge_quantile=args.hedge_quantile,
+                jitter_sigma=args.cluster_jitter,
+                replica_mults=[float(x) for x in
+                               args.replica_mults.split(",") if x],
+                arena_cache_mb=args.arena_cache_mb, seed=args.cluster_seed),
             serve=ServeConfig(max_batch=args.max_batch,
                               max_wait_s=args.max_wait_s))

@@ -63,6 +63,31 @@ def load_layout(path: str) -> EmbeddingLayout:
                            block=int(z["block"]))
 
 
+# -- sharded layouts (storage cluster) --------------------------------------
+
+def save_shard_layout(layout: EmbeddingLayout, global_ids: np.ndarray,
+                      path: str) -> None:
+    """One cluster shard: its sub-layout plus the global doc ids it owns
+    (the shard_of/local_of maps are rebuilt from these on load)."""
+    np.savez(path, blob=layout.blob, offsets=layout.offsets,
+             n_tokens=layout.n_tokens, d_cls=layout.d_cls,
+             d_bow=layout.d_bow, dtype=str(np.dtype(layout.dtype)),
+             scales=layout.scales if layout.scales is not None else _EMPTY,
+             block=layout.block, global_ids=np.asarray(global_ids, np.int64))
+
+
+def load_shard_layout(path: str) -> tuple[EmbeddingLayout, np.ndarray]:
+    z = np.load(path, allow_pickle=False)
+    scales = z["scales"]
+    layout = EmbeddingLayout(blob=z["blob"], offsets=z["offsets"],
+                             n_tokens=z["n_tokens"], d_cls=int(z["d_cls"]),
+                             d_bow=int(z["d_bow"]),
+                             dtype=np.dtype(str(z["dtype"])),
+                             scales=scales if scales.size else None,
+                             block=int(z["block"]))
+    return layout, z["global_ids"]
+
+
 # -- resident bit table (bitvec backend) ------------------------------------
 
 def save_bits(bits: BitTable, path: str) -> None:

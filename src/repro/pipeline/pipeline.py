@@ -31,6 +31,7 @@ from repro.data.synthetic import Corpus, make_corpus
 from repro.pipeline import persist
 from repro.pipeline.backends import RetrievalBackend, get_backend
 from repro.pipeline.config import PipelineConfig
+from repro.storage.cluster import StorageCluster
 from repro.storage.io_engine import StorageTier
 from repro.storage.layout import (BitTable, EmbeddingLayout, bits_from_layout,
                                   pack)
@@ -108,7 +109,8 @@ class Pipeline:
                   index: IVFIndex, layout: EmbeddingLayout, *,
                   cost_model=None, compute=None,
                   bits: BitTable | None = None,
-                  fde: FDETable | None = None) -> "Pipeline":
+                  fde: FDETable | None = None,
+                  shard_layouts=None) -> "Pipeline":
         backend_cls = get_backend(cfg.retrieval.mode)
         budget = (int(layout.nbytes * cfg.storage.mem_budget_frac)
                   if backend_cls.needs_mem_budget else None)
@@ -126,10 +128,23 @@ class Pipeline:
                                       dtype=cfg.storage.fde_dtype)
         else:
             fde = None        # don't bill the FDE table to other backends
-        tier = StorageTier(layout, stack=backend_cls.storage_stack,
-                           t_max=cfg.storage.t_max, mem_budget_bytes=budget,
-                           bits=bits, fde=fde,
-                           coalesce=cfg.storage.io_coalesce)
+        cl = cfg.cluster
+        if cl.enabled():
+            tier = StorageCluster(
+                layout, n_shards=cl.n_shards, replication=cl.replication,
+                partition=cl.partition, stack=backend_cls.storage_stack,
+                mem_budget_bytes=budget, t_max=cfg.storage.t_max,
+                bits=bits, fde=fde, coalesce=cfg.storage.io_coalesce,
+                replica_mults=cl.replica_mults,
+                hedge_quantile=cl.hedge_quantile,
+                jitter_sigma=cl.jitter_sigma, seed=cl.seed,
+                arena_cache_bytes=cl.arena_cache_bytes(),
+                shard_layouts=shard_layouts)
+        else:
+            tier = StorageTier(layout, stack=backend_cls.storage_stack,
+                               t_max=cfg.storage.t_max,
+                               mem_budget_bytes=budget, bits=bits, fde=fde,
+                               coalesce=cfg.storage.io_coalesce)
         backend = backend_cls(index, tier, cfg.retrieval.to_espn_config(),
                               cost_model=cost_model, compute=compute)
         return cls(cfg, corpus=corpus, index=index, layout=layout, tier=tier,
@@ -185,10 +200,17 @@ class Pipeline:
                 raise TypeError(f"unknown RetrievalConfig field {k!r}; "
                                 f"expected one of {sorted(valid)}")
             setattr(cfg.retrieval, k, v)
+        shard_layouts = None
+        if isinstance(self.tier, StorageCluster):
+            # cluster knobs are not retrieval overrides: the new pipeline
+            # shards identically, so reuse the already-built sub-layouts
+            shard_layouts = list(zip((sh.layout for sh in self.tier.shards),
+                                     self.tier.shard_ids))
         return self._assemble(cfg, self.corpus, self.index, self.layout,
                               cost_model=self.backend.cost,
                               compute=self.backend.compute,
-                              bits=self.tier.bits, fde=self.tier.fde)
+                              bits=self.tier.bits, fde=self.tier.fde,
+                              shard_layouts=shard_layouts)
 
     # -- persistence --------------------------------------------------------
     def save(self, out_dir: str) -> str:
@@ -206,6 +228,13 @@ class Pipeline:
         if self.tier.fde is not None:
             persist.save_fde(self.tier.fde,
                              os.path.join(out_dir, "fde.npz"))
+        if isinstance(self.tier, StorageCluster) and self.tier.n_shards > 1:
+            shard_dir = os.path.join(out_dir, "shards")
+            os.makedirs(shard_dir, exist_ok=True)
+            for s, sh in enumerate(self.tier.shards):
+                persist.save_shard_layout(
+                    sh.layout, self.tier.shard_ids[s],
+                    os.path.join(shard_dir, f"shard_{s}.npz"))
         return out_dir
 
     @classmethod
@@ -228,9 +257,16 @@ class Pipeline:
         fde_path = os.path.join(out_dir, "fde.npz")
         fde = (persist.load_fde(fde_path)
                if os.path.exists(fde_path) else None)
+        shard_layouts = None
+        shard_dir = os.path.join(out_dir, "shards")
+        if cfg.cluster.enabled() and os.path.isdir(shard_dir):
+            paths = [os.path.join(shard_dir, f"shard_{s}.npz")
+                     for s in range(cfg.cluster.n_shards)]
+            if all(os.path.exists(p) for p in paths):
+                shard_layouts = [persist.load_shard_layout(p) for p in paths]
         return cls._assemble(cfg, corpus, index, layout,
                              cost_model=cost_model, compute=compute,
-                             bits=bits, fde=fde)
+                             bits=bits, fde=fde, shard_layouts=shard_layouts)
 
     # -- lifecycle ----------------------------------------------------------
     def close(self):

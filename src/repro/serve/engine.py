@@ -19,13 +19,21 @@ class ServeStats:
     sim_latencies_ms: list = field(default_factory=list)
     batch_sizes: list = field(default_factory=list)
     hit_rates: list = field(default_factory=list)
+    # storage-cluster counters (zero when serving a single StorageTier):
+    hedged_reads: int = 0
+    hedge_wins: int = 0
+    hedge_bytes: int = 0               # duplicate bytes moved by hedges
+    cache_hits: int = 0                # cross-batch arena-cache rows served
+    cache_misses: int = 0
+    shard_blocks: list = field(default_factory=list)   # per-shard device blocks
+    shard_sim_s: list = field(default_factory=list)    # per-shard device time
 
     def percentile(self, p: float, sim: bool = True) -> float:
         xs = self.sim_latencies_ms if sim else self.latencies_ms
         return float(np.percentile(xs, p)) if xs else 0.0
 
     def summary(self) -> dict:
-        return {
+        out = {
             "n": self.n_requests,
             "mean_ms": round(float(np.mean(self.sim_latencies_ms)), 2)
             if self.sim_latencies_ms else 0,
@@ -36,6 +44,19 @@ class ServeStats:
             "mean_hit_rate": round(float(np.mean(self.hit_rates)), 4)
             if self.hit_rates else None,
         }
+        if self.shard_blocks:
+            total = self.cache_hits + self.cache_misses
+            out |= {
+                "shards": len(self.shard_blocks),
+                "shard_blocks": list(self.shard_blocks),
+                "shard_sim_s": [round(x, 6) for x in self.shard_sim_s],
+                "hedged_reads": self.hedged_reads,
+                "hedge_wins": self.hedge_wins,
+                "hedge_bytes": self.hedge_bytes,
+                "arena_cache_hit_rate": round(self.cache_hits / total, 4)
+                if total else 0.0,
+            }
+        return out
 
 
 class RetrievalServer:
@@ -53,7 +74,13 @@ class RetrievalServer:
         q_cls = np.stack([r.payload["cls"] for r in batch])
         q_bow = np.stack([r.payload["bow"] for r in batch])
         q_lens = np.array([r.payload["len"] for r in batch], np.int32)
+        tier = getattr(self.retriever, "tier", None)
+        before = ((dict(tier.stats), tier.per_shard_stats())
+                  if tier is not None and "hedge_bytes" in getattr(
+                      tier, "stats", {}) else None)
         resp = self.retriever.query_batch(q_cls, q_bow, q_lens)
+        if before is not None:
+            self._record_cluster(tier, *before)
         per_query_sim = resp.breakdown.total_s / len(batch) \
             + resp.breakdown.encode_s * (len(batch) - 1) / len(batch)
         for r, ranked in zip(batch, resp.ranked):
@@ -62,6 +89,28 @@ class RetrievalServer:
         self.stats.batch_sizes.append(len(batch))
         self.stats.hit_rates.append(resp.breakdown.hit_rate)
         self.stats.n_requests += len(batch)
+
+    def _record_cluster(self, tier, before: dict,
+                        before_shards: list[dict]) -> None:
+        """Fold a storage-cluster batch's stat DELTAS into ServeStats —
+        every counter here (hedge activity, arena-cache traffic, per-shard
+        device totals) covers the serve window only, so the summary stays
+        internally consistent even when the tier served traffic (e.g.
+        ``pipe.search``) before the server started."""
+        s = self.stats
+        after = tier.stats
+        s.hedged_reads += after["hedged_reads"] - before["hedged_reads"]
+        s.hedge_wins += after["hedge_wins"] - before["hedge_wins"]
+        s.hedge_bytes += after["hedge_bytes"] - before["hedge_bytes"]
+        s.cache_hits += after["cache_hits"] - before["cache_hits"]
+        s.cache_misses += after["cache_misses"] - before["cache_misses"]
+        shards = tier.per_shard_stats()
+        if len(s.shard_blocks) != len(shards):
+            s.shard_blocks = [0] * len(shards)
+            s.shard_sim_s = [0.0] * len(shards)
+        for i, (st, st0) in enumerate(zip(shards, before_shards)):
+            s.shard_blocks[i] += st["blocks"] - st0["blocks"]
+            s.shard_sim_s[i] += st["sim_seconds"] - st0["sim_seconds"]
 
     def query(self, cls_vec, bow_vecs, q_len, timeout: float = 30.0):
         self._rid += 1

@@ -5,6 +5,13 @@ Batching policy: dispatch when either `max_batch` requests are queued or the
 oldest request has waited `max_wait_s` (keeps p99 bounded at low load while
 reaching the SSD's batch-throughput regime at high load — the batch-threshold
 math of paper eq. 4 decides `max_batch`).
+
+Hedged reads are implemented by the storage cluster
+(``repro.storage.cluster.StorageCluster``): every batch the scheduler
+dispatches routes through the backend's tier, and when that tier is a
+cluster, lagging shard reads are re-issued on a replica after the
+``hedge_quantile`` delay; ``hedged_read`` below is the same primitive
+(``hedge_clock``) exposed for standalone read paths.
 """
 from __future__ import annotations
 
@@ -20,12 +27,12 @@ class Request:
     rid: int
     payload: Any
     arrival_s: float = field(default_factory=time.monotonic)
-    done = None           # threading.Event, set post-init
+    done: threading.Event = field(init=False, repr=False)
+    result: Any = field(init=False, default=None)
+    latency_s: float = field(init=False, default=0.0)
 
     def __post_init__(self):
         self.done = threading.Event()
-        self.result = None
-        self.latency_s = 0.0
 
 
 @dataclass
@@ -92,11 +99,12 @@ def hedged_read(read_fn: Callable, ids, *, hedge_after_s: float,
     duplicate request goes to a replica and the faster one wins.
 
     Returns (result, effective_latency_s, hedged?). The data path runs once
-    (reads are idempotent); only the simulated clock differs.
+    (reads are idempotent); only the simulated clock differs. The clock math
+    is the cluster's ``hedge_clock`` primitive, so standalone reads and
+    sharded cluster reads hedge identically.
     """
+    from repro.storage.cluster import hedge_clock
+
     result = read_fn(ids)
-    t1 = sampler()
-    if t1 <= hedge_after_s:
-        return result, t1, False
-    t2 = hedge_after_s + sampler()
-    return result, min(t1, t2), True
+    effective, hedged, _ = hedge_clock(sampler(), sampler, hedge_after_s)
+    return result, effective, hedged

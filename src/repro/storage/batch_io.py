@@ -41,6 +41,14 @@ def _exclusive_cumsum(counts: np.ndarray) -> np.ndarray:
     return out
 
 
+def run_chunk(n_docs: int, chunk_docs: int | None = None) -> int:
+    """Pipelining granularity for gather runs: explicit override, else equal
+    chunks targeting ~16 runs with a 32-doc floor (splitting at every seek
+    would drown small gathers in submission overhead). Shared by the tier's
+    plan and the cluster's per-shard runs so the two never drift."""
+    return int(chunk_docs) if chunk_docs else max(32, -(-n_docs // 16))
+
+
 @dataclass
 class BatchReadPlan:
     """Dedup + coalesce schedule for one batch of per-query id lists.
@@ -60,12 +68,20 @@ class BatchReadPlan:
     n_blocks: int
     n_contiguous: int = 0              # block-contiguous segments in the
                                        # union (device-visible seq streams)
+    owner_rows: np.ndarray = field(repr=False, default=None)
+                                       # (U,) first-owner query per arena row
+                                       # (the cluster re-attributes per row
+                                       # when some rows are cache-served)
     _sorted_ids: np.ndarray = field(repr=False, default=None)
     _sorted_rows: np.ndarray = field(repr=False, default=None)
 
     @classmethod
     def build(cls, layout, lists: list[np.ndarray], *,
-              chunk_docs: int | None = None) -> "BatchReadPlan":
+              chunk_docs: int | None = None,
+              with_query_runs: bool = True) -> "BatchReadPlan":
+        """``with_query_runs=False`` skips the per-query run-index tables —
+        callers that schedule their own runs over the arena (the storage
+        cluster) don't pay for the tier's ensure_query bookkeeping."""
         lists = [np.asarray(x, np.int64).ravel() for x in lists]
         n_req = int(sum(len(x) for x in lists))
         if n_req == 0:
@@ -75,6 +91,7 @@ class BatchReadPlan:
                        query_runs=[np.empty(0, np.int64) for _ in lists],
                        owned_blocks=np.zeros(len(lists), np.int64),
                        n_unique=0, n_requested=0, n_blocks=0,
+                       owner_rows=np.empty(0, np.int64),
                        _sorted_ids=np.empty(0, np.int64),
                        _sorted_rows=np.empty(0, np.int64))
         concat = np.concatenate(lists)
@@ -97,7 +114,7 @@ class BatchReadPlan:
         # drown small gathers in submission overhead.)
         n_contig = 1 + int(np.count_nonzero(
             arena_starts[1:] != arena_starts[:-1] + arena_blocks[:-1]))
-        chunk = int(chunk_docs) if chunk_docs else max(32, -(-u // 16))
+        chunk = run_chunk(u, chunk_docs)
         runs = [(r0, min(r0 + chunk, u)) for r0 in range(0, u, chunk)]
         run_starts = np.array([r0 for r0, _ in runs], np.int64)
         # per-query arena rows + the runs covering them
@@ -108,7 +125,8 @@ class BatchReadPlan:
             query_rows.append(rows)
             query_runs.append(np.unique(
                 np.searchsorted(run_starts, rows, side="right") - 1)
-                if len(rows) else np.empty(0, np.int64))
+                if with_query_runs and len(rows)
+                else np.empty(0, np.int64))
         # first-owner attribution: each unique id's blocks are billed to the
         # first query that requested it; later requesters ride for free
         bounds_q = _exclusive_cumsum(
@@ -121,6 +139,7 @@ class BatchReadPlan:
                    query_rows=query_rows, query_runs=query_runs,
                    owned_blocks=owned, n_unique=u, n_requested=n_req,
                    n_blocks=int(arena_blocks.sum()), n_contiguous=n_contig,
+                   owner_rows=owner[order],
                    _sorted_ids=uids, _sorted_rows=sorted_rows)
 
     # -- membership / row lookup over the arena -----------------------------
@@ -242,6 +261,28 @@ class BatchReadResult:
         if not self.coalesced:
             return 0
         return consumption_dedup_saved(self.plan.lists, doc_bytes)
+
+
+def serial_batch(read_fn, lists: list[np.ndarray],
+                 skip_empty: bool = False) -> "BatchReadResult":
+    """The seed-faithful serial fallback shared by ``StorageTier`` and
+    ``StorageCluster``: one blocking ``read_fn(ids)`` per query, duplicates
+    billed per requesting query (``skip_empty`` skips zero-id queries,
+    matching the prefetcher's historical behaviour)."""
+    reads = [None if (skip_empty and len(ids) == 0) else read_fn(ids)
+             for ids in lists]
+    plan = BatchReadPlan(
+        lists=lists, arena_ids=np.empty(0, np.int64),
+        arena_blocks=np.empty(0, np.int64), runs=[],
+        query_rows=[np.empty(0, np.int64) for _ in lists],
+        query_runs=[np.empty(0, np.int64) for _ in lists],
+        owned_blocks=np.zeros(len(lists), np.int64), n_unique=0,
+        n_requested=int(sum(len(x) for x in lists)), n_blocks=0)
+    return BatchReadResult(
+        coalesced=False, plan=plan,
+        sim_seconds=sum(r.sim_seconds for r in reads if r),
+        n_blocks=sum(r.n_blocks for r in reads if r),
+        serial_reads=reads)
 
 
 def consumption_dedup_saved(id_lists, doc_bytes) -> int:

@@ -7,9 +7,11 @@ from __future__ import annotations
 
 from collections import OrderedDict
 
+from repro.storage.ssd import DEFAULT_BLOCK
+
 
 class PageCache:
-    def __init__(self, capacity_bytes: int, block: int = 4096):
+    def __init__(self, capacity_bytes: int, block: int = DEFAULT_BLOCK):
         self.capacity_pages = max(0, int(capacity_bytes // block))
         self.block = block
         self._lru: OrderedDict[int, None] = OrderedDict()

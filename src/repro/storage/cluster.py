@@ -1,0 +1,575 @@
+"""Sharded, replicated storage cluster with hedged reads.
+
+A single ``StorageTier`` models one device; scale-out serving partitions the
+embedding layout across N devices and replicates each partition R ways. This
+module supplies that layer *between the retrieval backends and the devices*:
+
+* ``shard_assignments`` / ``build_shard_layout`` — block-aligned partitioning
+  of an ``EmbeddingLayout`` (round-robin over doc ids, or contiguous ranges
+  balanced by block mass). Each shard is a real sub-layout (own blob, own
+  offsets table) served by its own ``StorageTier``.
+* ``ReplicaClock`` — an independent per-replica device clock: the shard
+  tier's calibrated read time scaled by a per-replica latency multiplier
+  (degraded/slow replicas for straggler scenarios) and an optional lognormal
+  jitter draw from the replica's own RNG stream.
+* ``hedge_clock`` — the hedging primitive (also used by
+  ``repro.serve.scheduler.hedged_read``): if the primary replica's draw
+  exceeds the configured quantile of the healthy latency distribution, the
+  read is re-issued on the best secondary replica and the first arrival
+  wins. BOTH reads are billed on the device clock — the duplicate blocks are
+  reported separately as ``hedge_bytes`` (they are extra bytes *moved*, the
+  opposite sign of ``dedup_bytes_saved``, which counts bytes *not* moved).
+* ``StorageCluster`` — satisfies the ``StorageTier`` read/read_batch/
+  read_bits/memory_resident_bytes/close protocol, so every registered
+  retrieval backend runs on a cluster unchanged. ``read_batch`` builds ONE
+  global ``BatchReadPlan`` (batch-wide dedup, arena in global block order),
+  consults the cross-batch ``ArenaCache`` first (hot docs across consecutive
+  batches never touch the SSD clock), then routes the remaining arena rows
+  to per-shard runs gathered concurrently on each shard tier's pool. The
+  batch clock is the MAX over the shards' (possibly hedged) effective times
+  — the devices operate in parallel — and per-query attribution divides it
+  by first-owner uncached blocks, summing exactly to the batch total.
+
+The single-tier path is the identity: ``n_shards=1, replication=1``, cache
+off, no jitter reproduces ``StorageTier`` bills and rankings bitwise
+(pinned by tests/test_cluster.py for every registered backend).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from statistics import NormalDist
+
+import numpy as np
+
+from repro.storage import ssd as ssd_lib
+from repro.storage.arena_cache import ArenaCache
+from repro.storage.batch_io import (BatchReadPlan, BatchReadResult,
+                                    _exclusive_cumsum, run_chunk,
+                                    serial_batch)
+from repro.storage.io_engine import ReadResult, StorageTier
+from repro.storage.layout import EmbeddingLayout, gather_docs_at
+
+
+# -- partitioning ------------------------------------------------------------
+
+def shard_assignments(layout: EmbeddingLayout, n_shards: int,
+                      partition: str = "round_robin") -> np.ndarray:
+    """(N,) int32 doc -> shard map. ``round_robin`` interleaves doc ids;
+    ``range`` cuts contiguous id ranges with ~equal total block mass."""
+    if partition not in ("round_robin", "range"):
+        raise ValueError(f"unknown partition policy {partition!r}; "
+                         "expected 'round_robin' or 'range'")
+    n = layout.n_docs
+    if partition == "round_robin":
+        return (np.arange(n, dtype=np.int64) % n_shards).astype(np.int32)
+    cum = np.cumsum(layout.offsets[:, 1])
+    total = int(cum[-1]) if n else 0
+    bounds = total * (np.arange(1, n_shards) / n_shards)
+    cuts = np.searchsorted(cum, bounds, side="left")
+    return np.searchsorted(cuts, np.arange(n), side="right").astype(np.int32)
+
+
+def build_shard_layout(layout: EmbeddingLayout,
+                       global_ids: np.ndarray) -> EmbeddingLayout:
+    """Extract one shard's block-aligned sub-layout (own blob + offsets).
+    Docs keep their global order within the shard."""
+    gids = np.asarray(global_ids, np.int64)
+    offs = layout.offsets[gids]
+    nb = offs[:, 1]
+    starts = _exclusive_cumsum(nb)
+    block = layout.block
+    total = int(nb.sum())
+    if total:
+        # vectorized block copy (the _pages_of construction): one fancy-index
+        # gather over the block-reshaped blob, not a per-doc Python loop
+        src_blocks = (np.repeat(offs[:, 0] - _exclusive_cumsum(nb), nb)
+                      + np.arange(total, dtype=np.int64))
+        blob = layout.blob.reshape(-1, block)[src_blocks].reshape(-1)
+    else:
+        blob = np.zeros(0, np.uint8)
+    offsets = np.stack([starts, nb], axis=1)
+    return EmbeddingLayout(
+        blob=blob, offsets=offsets, n_tokens=layout.n_tokens[gids],
+        d_cls=layout.d_cls, d_bow=layout.d_bow, dtype=layout.dtype,
+        scales=layout.scales[gids] if layout.scales is not None else None,
+        block=block)
+
+
+# -- replica clocks + hedging ------------------------------------------------
+
+@dataclass
+class ReplicaClock:
+    """One replica's device clock: the shard tier's calibrated time scaled by
+    a latency multiplier (a degraded replica is deliberately slow) and an
+    independent lognormal jitter stream (the straggler tail)."""
+    mult: float = 1.0
+    jitter_sigma: float = 0.0
+    rng: np.random.Generator | None = None
+
+    def draw(self) -> float:
+        """Multiplicative factor for one read on this replica."""
+        f = self.mult
+        if self.jitter_sigma > 0.0 and self.rng is not None:
+            f *= float(np.exp(self.jitter_sigma * self.rng.standard_normal()))
+        return f
+
+
+def hedge_clock(t_primary: float, secondary_fn, hedge_after_s: float):
+    """The hedging primitive: if the primary exceeds ``hedge_after_s``, a
+    duplicate goes to a replica (``secondary_fn()`` -> its service time) and
+    the first arrival wins. Returns ``(effective_s, hedged, win)``."""
+    if t_primary <= hedge_after_s:
+        return t_primary, False, False
+    t_hedged = hedge_after_s + secondary_fn()
+    return min(t_primary, t_hedged), True, t_hedged < t_primary
+
+
+# -- the executed cluster batch ----------------------------------------------
+
+class ClusterBatchReadResult(BatchReadResult):
+    """A ``BatchReadResult`` whose runs are per-shard (non-contiguous arena
+    rows) and whose clock/attribution cover only the rows that actually went
+    to a device (cache-served rows are free)."""
+
+    def __init__(self, *, plan: BatchReadPlan, sim_seconds: float,
+                 n_blocks: int, arena: tuple,
+                 futures: list[Future], run_of_row: np.ndarray | None,
+                 owned_io_blocks: np.ndarray, hedge_blocks: int,
+                 cache_hits: int):
+        super().__init__(coalesced=True, plan=plan, sim_seconds=sim_seconds,
+                         n_blocks=n_blocks, arena=arena, futures=futures)
+        self._run_of_row = run_of_row          # (U,) run idx, -1 = cache-fill
+        self._owned_io = owned_io_blocks       # (B,) uncached first-owner blocks
+        self.hedge_blocks = hedge_blocks
+        self.cache_hits = cache_hits
+
+    def _wait_rows(self, rows: np.ndarray) -> None:
+        if self._run_of_row is None or len(rows) == 0:
+            return
+        for ri in np.unique(self._run_of_row[np.asarray(rows, np.int64)]):
+            if ri >= 0:
+                self._futures[int(ri)].result()
+
+    def ensure_query(self, b: int) -> None:
+        self._wait_rows(self.plan.query_rows[b])
+
+    def ensure_rows(self, rows) -> None:
+        self._wait_rows(np.asarray(rows, np.int64))
+
+    def io_s(self, b: int) -> float:
+        total = int(self._owned_io.sum())
+        if total == 0:
+            return 0.0
+        return self.sim_seconds * (float(self._owned_io[b]) / float(total))
+
+
+# -- the cluster -------------------------------------------------------------
+
+class StorageCluster:
+    """N shards x R replicas behind the ``StorageTier`` protocol.
+
+    Data movement is real (each shard owns a sub-layout blob and a thread
+    pool); the clock is the shard tier's calibrated model scaled by the
+    replica clocks, with hedged re-issue after the ``hedge_quantile`` delay.
+    """
+
+    def __init__(self, layout: EmbeddingLayout, *, n_shards: int = 1,
+                 replication: int = 1, partition: str = "round_robin",
+                 spec: ssd_lib.StorageSpec = ssd_lib.PM983_PCIE3,
+                 stack: str = "espn", mem_budget_bytes: int | None = None,
+                 t_max: int = 180, qd: int = 64, include_h2d: bool = True,
+                 n_io_threads: int = 4, bits=None, fde=None,
+                 coalesce: bool = True, io_chunk_docs: int | None = None,
+                 replica_mults=None, hedge_quantile: float = 0.0,
+                 jitter_sigma: float = 0.0, seed: int = 0,
+                 arena_cache_bytes: int = 0,
+                 shard_layouts: list[tuple[EmbeddingLayout, np.ndarray]]
+                 | None = None):
+        if n_shards < 1 or replication < 1:
+            raise ValueError("n_shards and replication must be >= 1")
+        if not 0.0 <= hedge_quantile < 1.0:
+            raise ValueError("hedge_quantile must be in [0, 1)")
+        mults = list(replica_mults or [])
+        if mults and len(mults) != replication:
+            raise ValueError(
+                f"replica_mults has {len(mults)} entries for "
+                f"replication={replication}; give one multiplier per replica "
+                "(broadcast across shards)")
+        self.layout = layout
+        self.bits = bits
+        self.fde = fde
+        self.spec = spec
+        self.stack = stack
+        self.t_max = t_max
+        self.qd = qd
+        self.coalesce = coalesce
+        self.io_chunk_docs = io_chunk_docs
+        self.n_shards = n_shards
+        self.replication = replication
+        self.partition = partition
+        self.hedge_quantile = hedge_quantile
+        self.jitter_sigma = jitter_sigma
+        self._closed = False
+        self._lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(max_workers=n_io_threads,
+                                        thread_name_prefix="cluster-io")
+
+        # -- shards: sub-layouts + one StorageTier per shard ----------------
+        if shard_layouts is not None:
+            if len(shard_layouts) != n_shards:
+                raise ValueError(f"{len(shard_layouts)} persisted shard "
+                                 f"layouts for n_shards={n_shards}")
+            subs = [sl for sl, _ in shard_layouts]
+            gid_lists = [np.asarray(g, np.int64) for _, g in shard_layouts]
+            self.shard_of = np.full(layout.n_docs, -1, np.int32)
+            for s, gids in enumerate(gid_lists):
+                self.shard_of[gids] = s
+            if (self.shard_of < 0).any():
+                raise ValueError("persisted shard layouts do not cover the "
+                                 "full doc-id space")
+        elif n_shards == 1:
+            subs = [layout]                    # zero-copy: the shard IS the
+            gid_lists = [np.arange(layout.n_docs, dtype=np.int64)]  # layout
+            self.shard_of = np.zeros(layout.n_docs, np.int32)
+        else:
+            self.shard_of = shard_assignments(layout, n_shards, partition)
+            gid_lists = [np.flatnonzero(self.shard_of == s).astype(np.int64)
+                         for s in range(n_shards)]
+            subs = [build_shard_layout(layout, g) for g in gid_lists]
+        self.shard_ids = gid_lists
+        self.local_of = np.zeros(layout.n_docs, np.int64)
+        for gids in gid_lists:
+            self.local_of[gids] = np.arange(len(gids))
+        budget = (None if mem_budget_bytes is None
+                  else max(1, int(mem_budget_bytes) // n_shards))
+        self.shards = [StorageTier(sub, spec=spec, stack=stack,
+                                   mem_budget_bytes=budget, t_max=t_max,
+                                   qd=qd, include_h2d=include_h2d,
+                                   n_io_threads=n_io_threads,
+                                   coalesce=coalesce,
+                                   io_chunk_docs=io_chunk_docs)
+                       for sub in subs]
+
+        # -- replica clocks + hedge threshold --------------------------------
+        self.replicas = [[ReplicaClock(
+            mult=float(mults[r]) if mults else 1.0,
+            jitter_sigma=jitter_sigma,
+            rng=(np.random.default_rng([seed, s, r])
+                 if jitter_sigma > 0.0 else None))
+            for r in range(replication)] for s in range(n_shards)]
+        # hedge target: the healthiest secondary (lowest multiplier)
+        self._secondary = [min(range(1, replication),
+                               key=lambda r: (reps[r].mult, r))
+                           if replication > 1 else None
+                           for reps in self.replicas]
+        self._hedge_on = hedge_quantile > 0.0 and replication > 1
+        # the hedge delay is the hedge_quantile-quantile of the HEALTHY
+        # (mult=1) latency distribution for this read: base_t * this factor
+        self._hedge_factor = (
+            float(np.exp(jitter_sigma * NormalDist().inv_cdf(hedge_quantile)))
+            if self._hedge_on and jitter_sigma > 0.0 else 1.0)
+
+        self.arena_cache = ArenaCache(arena_cache_bytes)
+        # cache inserts deferred from prior batches: flushed (in FIFO batch
+        # order, ascending arena rows) before the next batch's probe, so LRU
+        # recency stays deterministic WITHOUT joining this batch's gathers
+        # before read_batch returns (which would forfeit the I/O-overlaps-
+        # rerank pipelining)
+        self._cache_pending: list[tuple] = []
+        self.stats = {"reads": 0, "docs": 0, "doc_requests": 0, "blocks": 0,
+                      "sim_seconds": 0.0, "batch_reads": 0, "io_runs": 0,
+                      "dedup_docs": 0, "hedged_reads": 0, "hedge_wins": 0,
+                      "hedge_bytes": 0, "cache_hits": 0, "cache_misses": 0}
+
+    # -- clocks --------------------------------------------------------------
+    def _shard_clock(self, s: int, base_t: float, n_blocks: int):
+        """One shard read on the device clock: primary replica draw, hedged
+        re-issue past the quantile delay. Returns
+        ``(effective_s, hedge_blocks, hedged, win)``."""
+        reps = self.replicas[s]
+        t1 = base_t * reps[0].draw()
+        if not self._hedge_on or n_blocks == 0:
+            return t1, 0, False, False
+        hedge_after = base_t * self._hedge_factor
+        sec = reps[self._secondary[s]]
+        eff, hedged, win = hedge_clock(t1, lambda: base_t * sec.draw(),
+                                       hedge_after)
+        return eff, (n_blocks if hedged else 0), hedged, win
+
+    def _check_open(self):
+        if self._closed:
+            raise RuntimeError("StorageCluster is closed")
+
+    # -- reads ---------------------------------------------------------------
+    def read(self, ids, t_max: int | None = None) -> ReadResult:
+        """Blocking read in request order. The clock routes each shard's
+        slice through its replica clocks concurrently (max over shards);
+        duplicates are billed per occurrence, exactly like ``StorageTier``.
+        Data moves from the shard sub-layouts — the cluster never gathers
+        from the global blob, so a standalone caller may drop it (the
+        ``Pipeline`` keeps it for persistence/side-table builds)."""
+        self._check_open()
+        ids = np.asarray(ids, np.int64)
+        t_max = t_max or self.t_max
+        cls = np.zeros((len(ids), self.layout.d_cls), np.float32)
+        bow = np.zeros((len(ids), t_max, self.layout.d_bow), np.float32)
+        lens = np.zeros(len(ids), np.int32)
+        sim, n_blocks, hedge_blocks, hedged, wins = 0.0, 0, 0, 0, 0
+        if len(ids) == 0:
+            # preserve the single-tier empty-read floor (h2d base cost)
+            sim, _ = self.shards[0]._sim_time(ids)
+            sim *= self.replicas[0][0].draw()
+        else:
+            for s in range(self.n_shards):
+                rows = np.flatnonzero(self.shard_of[ids] == s)
+                if len(rows) == 0:
+                    continue
+                local = self.local_of[ids[rows]]
+                base_t, nb = self.shards[s]._sim_time(local)
+                eff, hb, h, w = self._shard_clock(s, base_t, nb)
+                sim = max(sim, eff)
+                n_blocks += nb
+                hedge_blocks += hb
+                hedged += int(h)
+                wins += int(w)
+                gather_docs_at(self.shards[s].layout, local, rows, cls, bow,
+                               lens)
+                with self.shards[s]._lock:
+                    st = self.shards[s].stats
+                    st["reads"] += 1
+                    st["docs"] += len(rows)
+                    st["doc_requests"] += len(rows)
+                    st["blocks"] += nb
+                    st["sim_seconds"] += eff
+        with self._lock:
+            self.stats["reads"] += 1
+            self.stats["docs"] += len(ids)
+            self.stats["doc_requests"] += len(ids)
+            self.stats["blocks"] += n_blocks
+            self.stats["sim_seconds"] += sim
+            self.stats["hedged_reads"] += hedged
+            self.stats["hedge_wins"] += wins
+            self.stats["hedge_bytes"] += hedge_blocks * self.layout.block
+        return ReadResult(cls, bow, lens, sim, n_blocks)
+
+    def read_async(self, ids, t_max: int | None = None) -> Future:
+        self._check_open()
+        return self._pool.submit(self.read, ids, t_max)
+
+    def _gather_run(self, shard: StorageTier, local_ids, rows, arena):
+        gather_docs_at(shard.layout, local_ids, rows, *arena)
+
+    def _flush_cache_inserts(self) -> None:
+        """Apply deferred cache inserts from earlier batches. Runs on the
+        coordinating thread in FIFO batch order / ascending arena rows —
+        deterministic LRU recency, so same-seed runs evict identically and
+        reproduce identical simulated clocks.
+
+        The joins below are free once the caller has consumed the previous
+        batch, but back-to-back ``read_batch`` calls (the espn prefetcher's
+        prefetch-then-miss pair) DO synchronize behind the first call's
+        outstanding gathers when the cache is on. That is the deliberate
+        price of clock reproducibility: flushing only already-done futures
+        (or inserting from the gather workers) would make cache contents —
+        and therefore evictions and every later batch's simulated clock —
+        depend on thread scheduling. Wall-clock only; the simulated
+        accounting never includes gather wall time."""
+        with self._lock:
+            pending, self._cache_pending = self._cache_pending, []
+        for futures, arena, rows, gids in pending:
+            try:
+                for f in futures:
+                    f.result()
+            except (Exception, CancelledError):
+                # cancelled (closed mid-batch) or failed gathers: the OWNING
+                # batch already surfaced the failure through its own
+                # wait/rerank path — a later batch's flush must not re-raise
+                # it, only skip that batch's inserts
+                continue
+            cls_a, bow_a, lens_a = arena
+            for row, gid in zip(rows, gids):
+                self.arena_cache.put(int(gid), cls_a[row], bow_a[row],
+                                     int(lens_a[row]))
+
+    def read_batch(self, per_query_ids, t_max: int | None = None, *,
+                   coalesce: bool | None = None,
+                   skip_empty: bool = False) -> BatchReadResult:
+        """One cluster transaction for a whole query batch.
+
+        Coalesced: ONE global plan (batch-wide dedup, arena in global block
+        order); the arena cache serves hot rows from memory first; the rest
+        route to per-shard runs gathered concurrently on each shard's pool,
+        each shard billed once through its replica clocks (hedged re-issue
+        past the quantile delay). The batch clock is the max over shards.
+        Serial (``coalesce=False``): per-query blocking ``read`` calls, the
+        seed-faithful baseline.
+        """
+        self._check_open()
+        t_max = t_max or self.t_max
+        coalesce = self.coalesce if coalesce is None else coalesce
+        lists = [np.asarray(x, np.int64).ravel() for x in per_query_ids]
+        if not coalesce:
+            # the seed-faithful serial baseline deliberately bypasses the
+            # arena cache (the seed had none) — but earlier coalesced
+            # batches' deferred inserts still flush, so no batch arena stays
+            # pinned in _cache_pending across a mode switch
+            if self.arena_cache.enabled:
+                self._flush_cache_inserts()
+            return serial_batch(lambda ids: self.read(ids, t_max), lists,
+                                skip_empty)
+        plan = BatchReadPlan.build(self.layout, lists,
+                                   chunk_docs=self.io_chunk_docs,
+                                   with_query_runs=False)
+        u = plan.n_unique
+        arena = (np.zeros((u, self.layout.d_cls), np.float32),
+                 np.zeros((u, t_max, self.layout.d_bow), np.float32),
+                 np.zeros(u, np.int32))
+        if u == 0:
+            return ClusterBatchReadResult(
+                plan=plan, sim_seconds=0.0, n_blocks=0, arena=arena,
+                futures=[], run_of_row=None,
+                owned_io_blocks=np.zeros(len(lists), np.int64),
+                hedge_blocks=0, cache_hits=0)
+
+        # 1) cross-batch arena cache: hot rows are a memory access
+        cached = np.zeros(u, bool)
+        if self.arena_cache.enabled:
+            self._flush_cache_inserts()
+            t_needs = np.minimum(self.layout.n_tokens[plan.arena_ids], t_max)
+            ents = self.arena_cache.get_many(plan.arena_ids, t_needs)
+            for row, ent in enumerate(ents):
+                if ent is None:
+                    continue
+                t_need = int(t_needs[row])
+                arena[0][row] = ent[0]
+                arena[1][row, :t_need] = ent[1][:t_need]
+                arena[2][row] = t_need
+                cached[row] = True
+        cache_hits = int(cached.sum())
+
+        # 2) per-shard runs over the uncached rows, concurrent gathers
+        run_of_row = np.full(u, -1, np.int64)
+        futures: list[Future] = []
+        sim, hedge_blocks, hedged, wins, io_blocks = 0.0, 0, 0, 0, 0
+        uncached_rows = np.flatnonzero(~cached)
+        shard_of_rows = (self.shard_of[plan.arena_ids[uncached_rows]]
+                         if len(uncached_rows) else
+                         np.empty(0, np.int32))
+        # per-shard requested docs, duplicates included (the StorageTier
+        # doc_requests convention): every request for a doc that reached
+        # shard s, so shard-level doc_requests - docs = that shard's dedup
+        concat = np.concatenate(lists)
+        req_mask = np.isin(concat, plan.arena_ids[uncached_rows])
+        req_by_shard = np.bincount(self.shard_of[concat[req_mask]],
+                                   minlength=self.n_shards)
+        for s in range(self.n_shards):
+            rows_s = uncached_rows[shard_of_rows == s]
+            if len(rows_s) == 0:
+                continue
+            gids_s = plan.arena_ids[rows_s]
+            local_s = self.local_of[gids_s]
+            base_t, nb = self.shards[s]._sim_time(local_s)
+            eff, hb, h, w = self._shard_clock(s, base_t, nb)
+            sim = max(sim, eff)
+            io_blocks += nb
+            hedge_blocks += hb
+            hedged += int(h)
+            wins += int(w)
+            chunk = run_chunk(len(rows_s), self.io_chunk_docs)
+            n_runs = 0
+            for r0 in range(0, len(rows_s), chunk):
+                sl = slice(r0, r0 + chunk)
+                run_of_row[rows_s[sl]] = len(futures)
+                futures.append(self.shards[s]._pool.submit(
+                    self._gather_run, self.shards[s], local_s[sl],
+                    rows_s[sl], arena))
+                n_runs += 1
+            with self.shards[s]._lock:
+                st = self.shards[s].stats
+                st["reads"] += 1
+                st["batch_reads"] += 1
+                st["io_runs"] += n_runs
+                st["docs"] += len(rows_s)
+                st["doc_requests"] += int(req_by_shard[s])
+                st["dedup_docs"] += int(req_by_shard[s]) - len(rows_s)
+                st["blocks"] += nb
+                st["sim_seconds"] += eff
+
+        # 3) cache insertion is DEFERRED to the next batch's flush — never
+        #    done by the gather workers (scheduling-dependent interleaving
+        #    would make LRU recency, evictions, and every later batch's
+        #    simulated clock nondeterministic across same-seed runs) and
+        #    never joined here (that would forfeit the rerank overlap)
+        if self.arena_cache.enabled and len(uncached_rows):
+            with self._lock:
+                self._cache_pending.append(
+                    (futures, arena, uncached_rows,
+                     plan.arena_ids[uncached_rows]))
+
+        # 4) attribution: first-owner over the rows that hit a device
+        owned_io = np.zeros(len(lists), np.int64)
+        if len(uncached_rows):
+            np.add.at(owned_io, plan.owner_rows[uncached_rows],
+                      plan.arena_blocks[uncached_rows])
+        with self._lock:
+            self.stats["reads"] += 1
+            self.stats["batch_reads"] += 1
+            self.stats["io_runs"] += len(futures)
+            self.stats["docs"] += u
+            self.stats["doc_requests"] += plan.n_requested
+            self.stats["dedup_docs"] += plan.n_requested - u
+            self.stats["blocks"] += io_blocks
+            self.stats["sim_seconds"] += sim
+            self.stats["hedged_reads"] += hedged
+            self.stats["hedge_wins"] += wins
+            self.stats["hedge_bytes"] += hedge_blocks * self.layout.block
+            if self.arena_cache.enabled:
+                self.stats["cache_hits"] += cache_hits
+                self.stats["cache_misses"] += len(uncached_rows)
+        return ClusterBatchReadResult(
+            plan=plan, sim_seconds=sim, n_blocks=io_blocks, arena=arena,
+            futures=futures, run_of_row=run_of_row,
+            owned_io_blocks=owned_io, hedge_blocks=hedge_blocks,
+            cache_hits=cache_hits)
+
+    def read_bits(self, ids, t_max: int | None = None):
+        """Resident bit-tier gather (global — side tables are not sharded)."""
+        if self.bits is None:
+            raise RuntimeError(
+                "this StorageCluster was built without a resident BitTable; "
+                "construct it with bits=pack_bits(...)")
+        return self.bits.gather(ids, t_max or self.t_max)
+
+    # -- reporting -----------------------------------------------------------
+    def memory_resident_bytes(self) -> int:
+        """Host/device memory across the cluster: every shard's resident
+        footprint, the global side tables, and the arena-cache budget."""
+        total = sum(sh.memory_resident_bytes() for sh in self.shards)
+        if self.bits is not None:
+            total += self.bits.nbytes
+        if self.fde is not None:
+            total += self.fde.nbytes
+        return total + self.arena_cache.capacity_bytes
+
+    def per_shard_stats(self) -> list[dict]:
+        return [dict(sh.stats) for sh in self.shards]
+
+    def close(self):
+        """Idempotent cluster shutdown: the cluster pool and every shard pool
+        cancel their pending futures (callers holding one see CancelledError,
+        not a hang); in-flight gathers finish. ``read``/``read_batch`` after
+        close raise instead of billing — an interrupted batch never records
+        phantom hedges."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            # release deferred-insert arenas: a pinned (u, t_max, d_bow)
+            # float32 arena from the final batch would otherwise outlive
+            # every BatchReadResult the caller dropped
+            self._cache_pending.clear()
+        self._pool.shutdown(wait=False, cancel_futures=True)
+        for sh in self.shards:
+            sh.close()

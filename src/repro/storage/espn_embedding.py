@@ -22,7 +22,7 @@ from repro.storage import ssd as ssd_lib
 class EmbeddingBlockStore:
     """Row-blocked table image: rows_per_block rows per 4K block."""
     table: np.ndarray             # (R, D) stored dtype (fp16 default)
-    block: int = 4096
+    block: int = ssd_lib.DEFAULT_BLOCK
 
     def __post_init__(self):
         elt = self.table.dtype.itemsize

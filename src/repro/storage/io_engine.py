@@ -20,7 +20,7 @@ import numpy as np
 from repro.core.fde import FDETable
 from repro.storage import ssd as ssd_lib
 from repro.storage.batch_io import (BatchReadPlan, BatchReadResult,
-                                    _exclusive_cumsum)
+                                    _exclusive_cumsum, serial_batch)
 from repro.storage.cache import PageCache
 from repro.storage.layout import (BitTable, EmbeddingLayout, gather_docs,
                                   gather_docs_into)
@@ -142,20 +142,8 @@ class StorageTier:
         coalesce = self.coalesce if coalesce is None else coalesce
         lists = [np.asarray(x, np.int64).ravel() for x in per_query_ids]
         if not coalesce:
-            reads = [None if (skip_empty and len(ids) == 0)
-                     else self.read(ids, t_max) for ids in lists]
-            plan = BatchReadPlan(
-                lists=lists, arena_ids=np.empty(0, np.int64),
-                arena_blocks=np.empty(0, np.int64), runs=[],
-                query_rows=[np.empty(0, np.int64) for _ in lists],
-                query_runs=[np.empty(0, np.int64) for _ in lists],
-                owned_blocks=np.zeros(len(lists), np.int64), n_unique=0,
-                n_requested=int(sum(len(x) for x in lists)), n_blocks=0)
-            return BatchReadResult(
-                coalesced=False, plan=plan,
-                sim_seconds=sum(r.sim_seconds for r in reads if r),
-                n_blocks=sum(r.n_blocks for r in reads if r),
-                serial_reads=reads)
+            return serial_batch(lambda ids: self.read(ids, t_max), lists,
+                                skip_empty)
         plan = BatchReadPlan.build(self.layout, lists,
                                    chunk_docs=self.io_chunk_docs)
         if plan.n_unique == 0:

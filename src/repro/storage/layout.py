@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.quantize import binary_pack, to_uint32_lanes
+from repro.storage.ssd import DEFAULT_BLOCK
 
 
 @dataclass
@@ -29,7 +30,7 @@ class EmbeddingLayout:
     d_bow: int
     dtype: np.dtype               # stored element dtype (e.g. float16/int8)
     scales: np.ndarray | None     # (N,) fp32 dequant scales (int8/int4 modes)
-    block: int = 4096
+    block: int = DEFAULT_BLOCK
 
     @property
     def n_docs(self) -> int:
@@ -50,7 +51,7 @@ class EmbeddingLayout:
 
 def pack(cls_embs: np.ndarray, bow_embs: list[np.ndarray], *,
          dtype=np.float16, scales: np.ndarray | None = None,
-         block: int = 4096) -> EmbeddingLayout:
+         block: int = DEFAULT_BLOCK) -> EmbeddingLayout:
     """Build the block-aligned disk image.
 
     cls_embs: (N, d_cls) fp32; bow_embs: list of (t_i, d_bow) fp32 arrays.
@@ -165,6 +166,24 @@ def bits_from_layout(layout: EmbeddingLayout, *,
     return pack_bits(bows, dtype=dtype)
 
 
+def gather_docs_at(layout: EmbeddingLayout, ids, rows, out_cls: np.ndarray,
+                   out_bow: np.ndarray, out_lens: np.ndarray) -> None:
+    """Gather ``ids`` into arbitrary (non-contiguous) buffer rows.
+
+    The storage cluster's per-shard runs land in interleaved slots of the
+    batch's shared arena (the arena is global-block-sorted while a shard owns
+    a strided subset of it), so the contiguous-slice contract of
+    ``gather_docs_into`` does not apply.
+    """
+    t_max = out_bow.shape[1]
+    for i, row in zip(np.asarray(ids, np.int64), np.asarray(rows, np.int64)):
+        c, b = unpack_doc(layout, int(i))
+        t = min(b.shape[0], t_max)
+        out_bow[row, :t] = b[:t]
+        out_cls[row] = c
+        out_lens[row] = t
+
+
 def gather_docs_into(layout: EmbeddingLayout, ids, out_cls: np.ndarray,
                      out_bow: np.ndarray, out_lens: np.ndarray) -> None:
     """Gather ``ids`` into caller-owned buffer slices (rows ``0..len(ids)``).
@@ -173,13 +192,9 @@ def gather_docs_into(layout: EmbeddingLayout, ids, out_cls: np.ndarray,
     batch and hands each block-contiguous run a disjoint slice, so runs can
     gather concurrently on the tier's thread pool with no further copies.
     """
-    t_max = out_bow.shape[1]
-    for j, i in enumerate(np.asarray(ids, np.int64)):
-        c, b = unpack_doc(layout, int(i))
-        t = min(b.shape[0], t_max)
-        out_bow[j, :t] = b[:t]
-        out_cls[j] = c
-        out_lens[j] = t
+    ids = np.asarray(ids, np.int64)
+    gather_docs_at(layout, ids, np.arange(len(ids)), out_cls, out_bow,
+                   out_lens)
 
 
 def gather_docs(layout: EmbeddingLayout, ids, t_max: int):

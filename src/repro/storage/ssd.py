@@ -18,6 +18,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
+#: The device I/O block (and layout alignment) size. Every layer that packs,
+#: caches, or bills by blocks imports this one constant instead of repeating
+#: the 4096 literal.
+DEFAULT_BLOCK = 4096
+
 
 @dataclass(frozen=True)
 class StorageSpec:
@@ -26,7 +31,7 @@ class StorageSpec:
     device_latency_s: float       # per-IO device latency (qd=1 limit)
     rand_iops: float              # saturated 4K random IOPS
     seq_bw: float                 # bytes/s sequential/large-block bandwidth
-    block: int = 4096
+    block: int = DEFAULT_BLOCK
 
     def eff_iops(self, qd: int) -> float:
         qd1 = 1.0 / self.device_latency_s

@@ -1,0 +1,608 @@
+"""Storage cluster: partitioning round-trips, single-tier bitwise identity
+(rankings AND per-query byte bills, every registered backend — the
+tests/test_retrieval_accounting.py-style pin for the cluster layer), hedged
+reads, the cross-batch arena cache, close semantics with in-flight I/O, and
+the cluster config/persistence/serve plumbing."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                            StorageConfig, available_backends, get_backend)
+from repro.pipeline.config import ClusterConfig
+from repro.storage.arena_cache import ArenaCache
+from repro.storage.cluster import (StorageCluster, build_shard_layout,
+                                   hedge_clock, shard_assignments)
+from repro.storage.io_engine import StorageTier
+from repro.storage.layout import pack, unpack_doc
+
+
+def _mini_layout(n=60, d_cls=16, d_bow=8, seed=3):
+    rng = np.random.default_rng(seed)
+    cls = rng.standard_normal((n, d_cls)).astype(np.float32)
+    bow = [rng.standard_normal((int(t), d_bow)).astype(np.float32)
+           for t in rng.integers(4, 40, n)]
+    return pack(cls, bow, dtype=np.float16)
+
+
+@pytest.fixture(scope="module")
+def base(small_corpus):
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64, mem_budget_frac=1.0),
+        retrieval=RetrievalConfig(mode="espn", nprobe=16, k_candidates=50,
+                                  prefetch_step=0.3, bit_filter=16))
+    cfg.index.ncells = 32
+    pipe = Pipeline.build(cfg, corpus=small_corpus)
+    yield pipe
+    pipe.close()
+
+
+def _dup_queries(corpus, n_base=5, reps=3):
+    return (np.tile(corpus.queries_cls[:n_base], (reps, 1)),
+            np.tile(corpus.queries_bow[:n_base], (reps, 1, 1)),
+            np.tile(corpus.query_lens[:n_base], reps))
+
+
+# -- partitioning ------------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["round_robin", "range"])
+def test_shard_layout_roundtrip(partition):
+    layout = _mini_layout()
+    shard_of = shard_assignments(layout, 3, partition)
+    assert shard_of.shape == (layout.n_docs,)
+    assert set(np.unique(shard_of)) <= {0, 1, 2}
+    total_blocks = 0
+    for s in range(3):
+        gids = np.flatnonzero(shard_of == s)
+        sub = build_shard_layout(layout, gids)
+        total_blocks += int(sub.offsets[:, 1].sum())
+        for j, g in enumerate(gids):
+            c_ref, b_ref = unpack_doc(layout, int(g))
+            c, b = unpack_doc(sub, j)
+            np.testing.assert_array_equal(c, c_ref)
+            np.testing.assert_array_equal(b, b_ref)
+    # block mass is conserved: sharding moves blocks, never dupes/drops them
+    assert total_blocks == int(layout.offsets[:, 1].sum())
+
+
+def test_range_partition_balances_blocks():
+    layout = _mini_layout(n=200)
+    shard_of = shard_assignments(layout, 4, "range")
+    # contiguous ranges…
+    assert (np.diff(shard_of) >= 0).all()
+    # …with roughly equal block mass per shard
+    masses = [int(layout.offsets[shard_of == s, 1].sum()) for s in range(4)]
+    assert max(masses) <= 2 * min(masses)
+
+
+def test_bad_partition_and_mults_rejected():
+    layout = _mini_layout(n=10)
+    with pytest.raises(ValueError):
+        shard_assignments(layout, 2, "hash")
+    with pytest.raises(ValueError):
+        StorageCluster(layout, replication=2, replica_mults=[1.0, 1.0, 1.0])
+    with pytest.raises(ValueError):
+        StorageCluster(layout, hedge_quantile=1.5)
+
+
+# -- single-tier identity ----------------------------------------------------
+
+def test_trivial_cluster_matches_tier_bitwise():
+    """n_shards=1, replication=1, cache off: the cluster IS the tier —
+    identical clock, blocks, per-query attribution, buffers, and the
+    empty-read h2d floor."""
+    layout = _mini_layout()
+    tier = StorageTier(layout, stack="espn", t_max=48)
+    clus = StorageCluster(layout, t_max=48)
+    lists = [np.array([3, 8, 8, 1]), np.array([8, 3]), np.array([], np.int64)]
+    bt, bc = tier.read_batch(lists), clus.read_batch(lists)
+    bt.wait_all(), bc.wait_all()
+    assert bc.sim_seconds == bt.sim_seconds
+    assert bc.n_blocks == bt.n_blocks
+    for b in range(len(lists)):
+        assert bc.io_s(b) == bt.io_s(b)
+        (buf_t, map_t, _), (buf_c, map_c, _) = bt.view(b), bc.view(b)
+        assert map_t == map_c
+        for i, r in map_t.items():
+            np.testing.assert_array_equal(buf_c[1][map_c[i]], buf_t[1][r])
+    # single reads: duplicates billed per occurrence, like the tier
+    rt, rc = tier.read([5, 5, 9]), clus.read([5, 5, 9])
+    assert rc.sim_seconds == rt.sim_seconds and rc.n_blocks == rt.n_blocks
+    np.testing.assert_array_equal(rc.bow, rt.bow)
+    assert clus.read([]).sim_seconds == tier.read([]).sim_seconds
+    # serial path too
+    st, sc = (tier.read_batch(lists[:2], coalesce=False),
+              clus.read_batch(lists[:2], coalesce=False))
+    assert sc.sim_seconds == st.sim_seconds and sc.n_blocks == st.n_blocks
+    for k in ("docs", "doc_requests", "blocks", "sim_seconds"):
+        assert clus.stats[k] == tier.stats[k]
+    tier.close(), clus.close()
+
+
+@pytest.mark.parametrize("mode", sorted(available_backends()))
+def test_trivial_cluster_identity_per_backend(base, mode):
+    """Every registered backend on a trivial cluster returns bitwise-identical
+    rankings AND bills (per-query bytes, breakdown stages) to the plain
+    single-tier path."""
+    ref = base if mode == "espn" else base.with_mode(mode)
+    q = _dup_queries(base.corpus)
+    a = ref.search(*q)
+    bcls = get_backend(mode)
+    budget = (int(base.layout.nbytes * base.cfg.storage.mem_budget_frac)
+              if bcls.needs_mem_budget else None)
+    clus = StorageCluster(base.layout, stack=bcls.storage_stack,
+                          mem_budget_bytes=budget, t_max=64,
+                          bits=ref.tier.bits, fde=ref.tier.fde)
+    backend = bcls(base.index, clus, ref.cfg.retrieval.to_espn_config(),
+                   cost_model=ref.backend.cost, compute=ref.backend.compute)
+    b = backend.query_batch(*q)
+    assert len(a.ranked) == len(b.ranked) == len(q[0])
+    for x, y in zip(a.ranked, b.ranked):
+        np.testing.assert_array_equal(y.doc_ids, x.doc_ids)
+        np.testing.assert_allclose(y.scores, x.scores, rtol=0, atol=0)
+        assert y.bow_bytes_read == x.bow_bytes_read
+    assert b.breakdown.critical_io_s == a.breakdown.critical_io_s
+    assert b.breakdown.bytes_read == a.breakdown.bytes_read
+    assert b.breakdown.dedup_bytes_saved == a.breakdown.dedup_bytes_saved
+    assert b.breakdown.total_s == a.breakdown.total_s
+    assert b.breakdown.hedge_bytes_read == 0
+    clus.close()
+    if ref is not base:
+        ref.close()
+
+
+@pytest.mark.parametrize("mode", sorted(available_backends()))
+def test_sharded_rankings_and_bills_identical(base, mode):
+    """Sharding redistributes blocks across devices — it must never change
+    scores, rankings, or the per-query byte bills (only the clock)."""
+    q = _dup_queries(base.corpus)
+    ref = base if mode == "espn" else base.with_mode(mode)
+    a = ref.search(*q)
+    cfg = PipelineConfig.from_dict(base.cfg.to_dict())
+    cfg.retrieval = dataclasses.replace(ref.cfg.retrieval)
+    cfg.cluster = ClusterConfig(n_shards=3)
+    pipe = Pipeline.from_artifacts(cfg, index=base.index, layout=base.layout,
+                                   corpus=base.corpus)
+    assert isinstance(pipe.tier, StorageCluster)
+    b = pipe.search(*q)
+    for x, y in zip(a.ranked, b.ranked):
+        np.testing.assert_array_equal(y.doc_ids, x.doc_ids)
+        np.testing.assert_allclose(y.scores, x.scores, rtol=0, atol=0)
+        assert y.bow_bytes_read == x.bow_bytes_read
+    assert b.breakdown.bytes_read == a.breakdown.bytes_read
+    assert b.breakdown.dedup_bytes_saved == a.breakdown.dedup_bytes_saved
+    pipe.close()
+    if ref is not base:
+        ref.close()
+
+
+@pytest.mark.parametrize("mode", sorted(available_backends()))
+def test_cluster_accounting_invariants(base, mode):
+    """The accounting contract on a full scale-out stack (shards + degraded
+    replica + hedging + arena cache): total_s is the stage sum, unique bytes
+    + dedup savings equal the per-query bills, hedge duplicates are reported
+    separately, and per-query attribution sums to the batch clock."""
+    cfg = PipelineConfig.from_dict(base.cfg.to_dict())
+    cfg.retrieval.mode = mode
+    cfg.cluster = ClusterConfig(n_shards=2, replication=2,
+                                replica_mults=[3.0, 1.0],
+                                hedge_quantile=0.9, jitter_sigma=0.2,
+                                arena_cache_mb=4.0)
+    pipe = Pipeline.from_artifacts(cfg, index=base.index, layout=base.layout,
+                                   corpus=base.corpus)
+    c = pipe.corpus
+    for _ in range(2):           # second pass rides the arena cache
+        resp = pipe.search(c.queries_cls[:6], c.queries_bow[:6],
+                           c.query_lens[:6])
+        bd = resp.breakdown
+        assert bd.total_s == pytest.approx(
+            bd.encode_s + bd.ann_s + bd.critical_io_s + bd.rerank_s + 0.2e-3)
+        assert bd.bytes_read + bd.dedup_bytes_saved == sum(
+            r.bow_bytes_read for r in resp.ranked)
+        assert bd.hedge_bytes_read >= 0
+    st = pipe.tier.stats
+    # hedge duplicates are whole device blocks, never folded into bytes_read
+    assert st["hedge_bytes"] % base.layout.block == 0
+    assert st["cache_hits"] > 0
+    assert st["hedged_reads"] >= st["hedge_wins"]
+    pipe.close()
+
+
+def test_cluster_io_attribution_sums_to_batch_clock():
+    layout = _mini_layout()
+    clus = StorageCluster(layout, n_shards=3, t_max=48)
+    lists = [np.arange(20), np.arange(10, 30), np.array([5])]
+    res = clus.read_batch(lists)
+    res.wait_all()
+    assert sum(res.io_s(b) for b in range(3)) == pytest.approx(
+        res.sim_seconds, rel=1e-12)
+    clus.close()
+
+
+# -- hedged reads ------------------------------------------------------------
+
+def test_hedge_clock_primitive():
+    eff, hedged, win = hedge_clock(0.100, lambda: 0.002, 0.005)
+    assert hedged and win and eff == pytest.approx(0.007)
+    eff, hedged, win = hedge_clock(0.004, lambda: 0.002, 0.005)
+    assert not hedged and eff == 0.004
+    # hedge issued but the primary still wins
+    eff, hedged, win = hedge_clock(0.006, lambda: 0.100, 0.005)
+    assert hedged and not win and eff == 0.006
+
+
+def test_degraded_primary_hedges_and_wins():
+    layout = _mini_layout()
+    lists = [np.arange(30), np.arange(15, 45)]
+    unhedged = StorageCluster(layout, n_shards=2, replication=2,
+                              replica_mults=[5.0, 1.0], t_max=48)
+    hedged = StorageCluster(layout, n_shards=2, replication=2,
+                            replica_mults=[5.0, 1.0], hedge_quantile=0.9,
+                            t_max=48)
+    ru, rh = unhedged.read_batch(lists), hedged.read_batch(lists)
+    ru.wait_all(), rh.wait_all()
+    # deterministic clocks: the healthy secondary beats the 5x primary
+    assert rh.sim_seconds < ru.sim_seconds
+    assert hedged.stats["hedged_reads"] == 2       # both shards lagged
+    assert hedged.stats["hedge_wins"] == 2
+    # billing both: duplicate blocks reported separately, at block size
+    assert hedged.stats["hedge_bytes"] == ru.n_blocks * layout.block
+    assert rh.hedge_blocks == ru.n_blocks
+    assert unhedged.stats["hedge_bytes"] == 0
+    # the data is identical either way
+    for b in range(2):
+        (bu, mu, _), (bh, mh, _) = ru.view(b), rh.view(b)
+        assert mu == mh
+        for i, r in mu.items():
+            np.testing.assert_array_equal(bh[1][mh[i]], bu[1][r])
+    unhedged.close(), hedged.close()
+
+
+def test_hedged_never_slower_pointwise_under_jitter():
+    """Same seed, same trace: hedging only ever replaces a draw with
+    min(primary, delay + secondary) — per-batch effective time can't grow."""
+    layout = _mini_layout()
+    rng = np.random.default_rng(0)
+    trace = [[rng.integers(0, 60, 12) for _ in range(4)] for _ in range(20)]
+    kw = dict(n_shards=2, replication=2, replica_mults=[3.0, 1.0],
+              jitter_sigma=0.3, seed=11, t_max=48)
+    a = StorageCluster(layout, **kw)
+    b = StorageCluster(layout, hedge_quantile=0.9, **kw)
+    for lists in trace:
+        ra, rb = a.read_batch(lists), b.read_batch(lists)
+        ra.wait_all(), rb.wait_all()
+        assert rb.sim_seconds <= ra.sim_seconds + 1e-15
+    assert b.stats["hedge_wins"] > 0
+    a.close(), b.close()
+
+
+def test_no_hedging_without_replicas():
+    layout = _mini_layout()
+    clus = StorageCluster(layout, n_shards=2, replication=1,
+                          hedge_quantile=0.9, t_max=48)
+    res = clus.read_batch([np.arange(20)])
+    res.wait_all()
+    assert clus.stats["hedged_reads"] == 0
+    assert clus.stats["hedge_bytes"] == 0
+    clus.close()
+
+
+# -- cross-batch arena cache -------------------------------------------------
+
+def test_arena_cache_serves_repeat_batches_for_free():
+    layout = _mini_layout()
+    clus = StorageCluster(layout, n_shards=2, arena_cache_bytes=1 << 20,
+                          t_max=48)
+    lists = [np.array([3, 8, 1]), np.array([8, 40])]
+    r1 = clus.read_batch(lists)
+    r1.wait_all()
+    assert r1.sim_seconds > 0 and r1.cache_hits == 0
+    r2 = clus.read_batch(lists)
+    r2.wait_all()
+    assert r2.sim_seconds == 0.0 and r2.n_blocks == 0
+    assert r2.cache_hits == 4                      # the whole unique union
+    assert clus.stats["cache_hits"] == 4
+    for b, ids in enumerate(lists):
+        bufs, row_map, io_s = r2.view(b)
+        assert io_s == 0.0
+        for i in ids:
+            row = row_map[int(i)]
+            c_ref, b_ref = unpack_doc(layout, int(i))
+            t = int(bufs[2][row])
+            np.testing.assert_array_equal(bufs[1][row][:t], b_ref[:t])
+            np.testing.assert_array_equal(bufs[0][row], c_ref)
+    clus.close()
+
+
+def test_arena_cache_narrow_rows_not_served_wider():
+    """A row gathered under a small t_max must not serve a wider read."""
+    cache = ArenaCache(1 << 20)
+    cache.put(7, np.zeros(4, np.float32), np.zeros((6, 8), np.float32), 6)
+    assert cache.get(7, 6) is not None
+    assert cache.get(7, 10) is None                # stored row is too narrow
+    assert cache.hits == 1 and cache.misses == 1
+
+
+def test_arena_cache_budget_evicts_lru():
+    row_bytes = 4 * 4 + 6 * 8 * 4                  # one entry's payload
+    cache = ArenaCache(3 * row_bytes)
+    for i in range(5):
+        cache.put(i, np.zeros(4, np.float32), np.zeros((6, 8), np.float32), 6)
+    assert len(cache) == 3
+    assert cache.evictions == 2
+    assert cache.bytes_used <= cache.capacity_bytes
+    assert cache.get(0, 6) is None and cache.get(4, 6) is not None
+    cache.clear()
+    assert len(cache) == 0 and cache.bytes_used == 0
+
+
+def test_disabled_cache_is_inert():
+    cache = ArenaCache(0)
+    cache.put(1, np.zeros(4, np.float32), np.zeros((2, 8), np.float32), 2)
+    assert len(cache) == 0 and not cache.enabled
+
+
+# -- close semantics (in-flight hedged + async batch reads) ------------------
+
+def test_cluster_close_idempotent_and_guards_reads():
+    layout = _mini_layout()
+    clus = StorageCluster(layout, n_shards=2, replication=2,
+                          replica_mults=[5.0, 1.0], hedge_quantile=0.9,
+                          t_max=48)
+    clus.read_batch([np.arange(10)]).wait_all()
+    billed = dict(clus.stats)
+    clus.close()
+    clus.close()                                   # double close must not raise
+    with pytest.raises(RuntimeError):
+        clus.read_batch([np.arange(10)])
+    with pytest.raises(RuntimeError):
+        clus.read([1, 2])
+    # a rejected read bills nothing: no phantom hedges after close
+    assert clus.stats == billed
+
+
+def test_close_with_inflight_batch_leaves_no_abandoned_futures():
+    """Close while a hedged batch's gathers are gated: every run future must
+    resolve (result or CancelledError) — never hang — and close must not
+    re-bill the interrupted batch."""
+    from concurrent.futures import CancelledError
+
+    layout = _mini_layout()
+    clus = StorageCluster(layout, n_shards=2, replication=2,
+                          replica_mults=[5.0, 1.0], hedge_quantile=0.9,
+                          io_chunk_docs=4, t_max=48)
+    gate = threading.Event()
+    orig = clus._gather_run
+
+    def gated(*a, **kw):
+        assert gate.wait(timeout=30)
+        return orig(*a, **kw)
+
+    clus._gather_run = gated
+    try:
+        res = clus.read_batch([np.arange(40)])
+        billed = dict(clus.stats)                  # billed at submit time
+        assert billed["hedged_reads"] == 2 and billed["hedge_bytes"] > 0
+        clus.close()
+        gate.set()
+        resolved = 0
+        for f in res._futures:
+            try:
+                f.result(timeout=30)
+            except CancelledError:
+                pass
+            resolved += 1
+        assert resolved == len(res._futures) > 0
+        # the interrupted batch's bill is exactly what was recorded at
+        # submit: close() neither drops nor duplicates hedge accounting
+        assert clus.stats == billed
+    finally:
+        gate.set()
+        clus.close()
+
+
+def test_cluster_read_async_cancelled_on_close():
+    from concurrent.futures import CancelledError
+
+    layout = _mini_layout()
+    clus = StorageCluster(layout, t_max=48, n_io_threads=1)
+    started, release = threading.Event(), threading.Event()
+    real_read = clus.read
+
+    def slow_read(ids, t_max=None):
+        out = real_read(ids, t_max)    # work happens pre-close (in flight)
+        started.set()
+        release.wait(timeout=10)
+        return out
+
+    clus.read = slow_read
+    running = clus.read_async([0])
+    assert started.wait(timeout=10)
+    pending = [clus._pool.submit(slow_read, [1]) for _ in range(3)]
+    clus.close()
+    release.set()
+    assert running.result(timeout=10) is not None
+
+    def resolved_cancelled(f):
+        try:
+            f.result(timeout=10)
+            return False
+        except CancelledError:
+            return True
+
+    assert any(resolved_cancelled(f) for f in pending)
+
+
+# -- scheduler satellite -----------------------------------------------------
+
+def test_request_fields_are_real_dataclass_fields():
+    """`done`/`result`/`latency_s` were a class-attribute shadow + ad-hoc
+    __post_init__ attrs; they must be proper init=False fields."""
+    from repro.serve.scheduler import Request
+
+    names = {f.name for f in dataclasses.fields(Request)}
+    assert {"done", "result", "latency_s"} <= names
+    for n in ("done", "result", "latency_s"):
+        f = next(x for x in dataclasses.fields(Request) if x.name == n)
+        assert not f.init
+    a, b = Request(1, "x"), Request(2, "y")
+    assert isinstance(a.done, threading.Event)
+    assert a.done is not b.done
+    assert a.result is None and a.latency_s == 0.0
+
+
+# -- config / persistence / serve plumbing -----------------------------------
+
+def test_cluster_config_round_trips():
+    cfg = PipelineConfig()
+    cfg.cluster = ClusterConfig(n_shards=4, replication=2,
+                                replica_mults=[3.0, 1.0],
+                                hedge_quantile=0.95, jitter_sigma=0.25,
+                                arena_cache_mb=8.0, seed=3)
+    again = PipelineConfig.from_dict(cfg.to_dict())
+    assert again.cluster == cfg.cluster
+    assert again.cluster.enabled()
+    # configs saved before the cluster section existed still load
+    d = cfg.to_dict()
+    del d["cluster"]
+    legacy = PipelineConfig.from_dict(d)
+    assert legacy.cluster == ClusterConfig()
+    assert not legacy.cluster.enabled()
+
+
+def test_cluster_cli_round_trip():
+    import argparse
+
+    ap = PipelineConfig.add_cli_args(argparse.ArgumentParser())
+    args = ap.parse_args(["--shards", "4", "--replication", "2",
+                          "--hedge-quantile", "0.95",
+                          "--replica-mults", "3.0,1.0",
+                          "--arena-cache-mb", "8", "--cluster-jitter", "0.25",
+                          "--partition", "range", "--cluster-seed", "3"])
+    cfg = PipelineConfig.from_cli(args)
+    assert cfg.cluster == ClusterConfig(
+        n_shards=4, replication=2, partition="range", hedge_quantile=0.95,
+        jitter_sigma=0.25, replica_mults=[3.0, 1.0], arena_cache_mb=8.0,
+        seed=3)
+
+
+def test_save_load_sharded_pipeline(base, tmp_path):
+    cfg = PipelineConfig.from_dict(base.cfg.to_dict())
+    cfg.retrieval.mode = "gds"
+    cfg.cluster = ClusterConfig(n_shards=3, partition="range")
+    pipe = Pipeline.from_artifacts(cfg, index=base.index, layout=base.layout,
+                                   corpus=base.corpus)
+    resp = pipe.search()
+    out = pipe.save(str(tmp_path / "art"))
+    assert (tmp_path / "art" / "shards" / "shard_2.npz").exists()
+    again = Pipeline.load(out)
+    assert isinstance(again.tier, StorageCluster)
+    # persisted shard layouts reproduce the exact same shard map + results
+    for s in range(3):
+        np.testing.assert_array_equal(again.tier.shard_ids[s],
+                                      pipe.tier.shard_ids[s])
+    resp2 = again.search()
+    for x, y in zip(resp.ranked, resp2.ranked):
+        np.testing.assert_array_equal(y.doc_ids, x.doc_ids)
+        np.testing.assert_allclose(y.scores, x.scores, rtol=0, atol=0)
+    pipe.close(), again.close()
+
+
+def test_with_mode_reuses_shard_layouts(base):
+    cfg = PipelineConfig.from_dict(base.cfg.to_dict())
+    cfg.retrieval.mode = "gds"
+    cfg.cluster = ClusterConfig(n_shards=2)
+    pipe = Pipeline.from_artifacts(cfg, index=base.index, layout=base.layout,
+                                   corpus=base.corpus)
+    other = pipe.with_mode("dram")
+    assert isinstance(other.tier, StorageCluster)
+    for s in range(2):
+        assert other.tier.shards[s].layout is pipe.tier.shards[s].layout
+    pipe.close(), other.close()
+
+
+def test_serve_reports_cluster_stats(base):
+    cfg = PipelineConfig.from_dict(base.cfg.to_dict())
+    cfg.retrieval.mode = "gds"
+    cfg.cluster = ClusterConfig(n_shards=2, replication=2,
+                                replica_mults=[3.0, 1.0], hedge_quantile=0.9,
+                                arena_cache_mb=4.0)
+    pipe = Pipeline.from_artifacts(cfg, index=base.index, layout=base.layout,
+                                   corpus=base.corpus)
+    srv = pipe.serve()
+    c = base.corpus
+    try:
+        reqs = [srv.query_async(c.queries_cls[i % 4], c.queries_bow[i % 4],
+                                int(c.query_lens[i % 4])) for i in range(8)]
+        for r in reqs:
+            assert r.done.wait(30)
+        s = srv.stats.summary()
+        assert s["shards"] == 2 and len(s["shard_blocks"]) == 2
+        assert s["hedged_reads"] > 0 and s["hedge_bytes"] > 0
+        assert 0.0 <= s["arena_cache_hit_rate"] <= 1.0
+        assert sum(s["shard_blocks"]) > 0
+    finally:
+        srv.shutdown()
+        pipe.close()
+
+
+def test_serve_stats_are_serve_window_deltas(base):
+    """Traffic served before the server starts (pipe.search) must not leak
+    into the per-shard serve stats — every ServeStats counter covers the
+    serve window only."""
+    cfg = PipelineConfig.from_dict(base.cfg.to_dict())
+    cfg.retrieval.mode = "gds"
+    cfg.cluster = ClusterConfig(n_shards=2)
+    pipe = Pipeline.from_artifacts(cfg, index=base.index, layout=base.layout,
+                                   corpus=base.corpus)
+    c = base.corpus
+    pipe.search(c.queries_cls[:6], c.queries_bow[:6], c.query_lens[:6])
+    pre = [st["blocks"] for st in pipe.tier.per_shard_stats()]
+    srv = pipe.serve()
+    try:
+        reqs = [srv.query_async(c.queries_cls[i], c.queries_bow[i],
+                                int(c.query_lens[i])) for i in range(4)]
+        for r in reqs:
+            assert r.done.wait(30)
+        post = [st["blocks"] for st in pipe.tier.per_shard_stats()]
+        assert srv.stats.summary()["shard_blocks"] == \
+            [b - a for a, b in zip(pre, post)]
+    finally:
+        srv.shutdown()
+        pipe.close()
+
+
+def test_per_shard_dedup_signal():
+    """Shard-level doc_requests follows the StorageTier convention (requests
+    reaching the device, duplicates included), so doc_requests - docs is the
+    shard's dedup saving on duplicate-heavy batches."""
+    layout = _mini_layout()
+    clus = StorageCluster(layout, n_shards=2, t_max=48)
+    clus.read_batch([np.array([3, 8, 1]), np.array([8, 3, 40])]).wait_all()
+    shards = clus.per_shard_stats()
+    assert sum(st["doc_requests"] for st in shards) == 6
+    assert sum(st["docs"] for st in shards) == 4
+    assert sum(st["dedup_docs"] for st in shards) == 2
+    clus.close()
+
+
+def test_memory_accounting_counts_cache_budget(base):
+    clus = StorageCluster(base.layout, n_shards=2,
+                          arena_cache_bytes=1 << 20, t_max=64)
+    plain = StorageTier(base.layout, stack="espn", t_max=64)
+    # sharded metadata ~ the single tier's; the cache budget rides on top
+    assert clus.memory_resident_bytes() >= \
+        plain.memory_resident_bytes() + (1 << 20)
+    clus.close(), plain.close()
+
+
+def test_default_block_single_source():
+    from repro.storage.cache import PageCache
+    from repro.storage.ssd import DEFAULT_BLOCK, PM983_PCIE3
+
+    assert PM983_PCIE3.block == DEFAULT_BLOCK
+    assert _mini_layout(n=4).block == DEFAULT_BLOCK
+    assert PageCache(DEFAULT_BLOCK * 2).block == DEFAULT_BLOCK
+    assert PipelineConfig().storage.block == DEFAULT_BLOCK
