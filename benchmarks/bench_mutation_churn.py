@@ -1,0 +1,203 @@
+"""Live-mutation churn: read amplification and tail latency vs append-segment
+count, the compaction payoff, replica recovery cost, and recall parity of a
+churned index against a from-scratch rebuild.
+
+Emits ``BENCH_mutation.json`` (via ``benchmarks.run --json-dir`` /
+``REPRO_BENCH_OUT_DIR``). The CI smoke job asserts post-compaction p99 <=
+the max-segment p99 (same trace, same docs — only the layout changed) and
+that the churned stack ranks identically to the rebuild oracle.
+
+    REPRO_BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run --only mutation
+"""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _mk_docs(rng, d_cls: int, d_bow: int, n: int):
+    cls = rng.standard_normal((n, d_cls)).astype(np.float32)
+    cls /= np.linalg.norm(cls, axis=1, keepdims=True)
+    bows = []
+    for _ in range(n):
+        b = rng.standard_normal((int(rng.integers(8, 24)),
+                                 d_bow)).astype(np.float32)
+        bows.append(b / np.linalg.norm(b, axis=1, keepdims=True))
+    return cls, bows
+
+
+def _trace(tier, n_batches: int, *, batch: int = 8, k: int = 24,
+           hot_frac: float = 0.33, seed: int = 9):
+    """Per-batch id lists: ``hot_frac`` of each query's reads go to the
+    newest (segment-resident) docs — fresh documents are the hot ones, which
+    is exactly the traffic that pays the segment read amplification."""
+    rng = np.random.default_rng(seed)
+    alive = np.flatnonzero(tier.alive)
+    seg_docs = np.flatnonzero(tier.seg_of >= 0)
+    hot = seg_docs if len(seg_docs) else alive
+    n_hot = max(1, int(round(hot_frac * k)))
+    out = []
+    for _ in range(n_batches):
+        out.append([np.unique(np.concatenate([
+            rng.choice(hot, size=n_hot),
+            rng.choice(alive, size=k - n_hot)])) for _ in range(batch)])
+    return out
+
+
+def _measure(tier, trace) -> dict:
+    lats = []
+    for lists in trace:
+        res = tier.read_batch(lists)
+        res.wait_all()
+        lats.append(res.sim_seconds * 1e3)
+    return {"p50_ms": round(float(np.percentile(lats, 50)), 4),
+            "p99_ms": round(float(np.percentile(lats, 99)), 4),
+            "mean_ms": round(float(np.mean(lats)), 4)}
+
+
+def _io_section(layout, n_batches: int) -> dict:
+    """Tail latency vs segment count on a 2-shard replicated cluster, then
+    the same trace after compaction, then a replica kill/recover cycle."""
+    from repro.storage.mutation import MutableStorageCluster
+
+    tier = MutableStorageCluster(layout, n_shards=2, replication=2, t_max=64)
+    rng = np.random.default_rng(3)
+    rows = []
+
+    def snapshot(state, trace):
+        r = {"state": state,
+             "segments": sum(len(s) for s in tier.segments)} | \
+            _measure(tier, trace)
+        rows.append(r)
+        common.row(f"mutation_{state}", r["p99_ms"] * 1e3,
+                   f"segments={r['segments']} p50={r['p50_ms']}ms "
+                   f"p99={r['p99_ms']}ms")
+        return r
+
+    snapshot("base", _trace(tier, n_batches))
+    for target in (2, 4, 8):
+        while sum(len(s) for s in tier.segments) < target:
+            tier.ingest(*_mk_docs(rng, layout.d_cls, layout.d_bow, 24))
+        snapshot(f"segments_{target}", _trace(tier, n_batches))
+    # tombstone some base docs so compaction also reclaims dead blocks
+    tier.delete(rng.choice(layout.n_docs, layout.n_docs // 20,
+                           replace=False))
+    pre_trace = _trace(tier, n_batches)          # ids survive compaction
+    pre = snapshot("pre_compaction", pre_trace)
+    report = tier.compact()
+    post = snapshot("post_compaction", pre_trace)   # SAME trace, merged runs
+
+    tier.kill_replica(0, 0)
+    for lists in _trace(tier, max(2, n_batches // 4), seed=11):
+        tier.read_batch(lists).wait_all()
+    rec = tier.recover_replica(0, 0)
+    recovery = {"failovers": tier.stats["failovers"],
+                "recovery_bytes": rec["bytes"],
+                "recovery_seconds": round(rec["seconds"], 6)}
+    common.row("mutation_recovery", rec["seconds"] * 1e6,
+               f"bytes={rec['bytes']} failovers={recovery['failovers']}")
+    st = tier.stats
+    churn = {"ingested_docs": st["ingested_docs"],
+             "tombstones": st["tombstones"],
+             "ingest_bytes": st["ingest_bytes"],
+             "compaction_bytes": st["compaction_bytes"],
+             "blocks_reclaimed": report["blocks_reclaimed"],
+             "segments_merged": report["segments_merged"]}
+    tier.close()
+    return {"rows": rows,
+            "read_amp_pre_compaction": round(
+                pre["mean_ms"] / rows[0]["mean_ms"], 4),
+            "read_amp_post_compaction": round(
+                post["mean_ms"] / rows[0]["mean_ms"], 4),
+            "pre_p99_ms": pre["p99_ms"], "post_p99_ms": post["p99_ms"],
+            "churn": churn, "recovery": recovery}
+
+
+def _parity_section(corpus, index, layout) -> dict:
+    """Churn an espn pipeline (ingest + delete through segments), then rank
+    the corpus queries on it AND on a stack rebuilt from scratch over the
+    surviving docs (fresh pack, fresh side tiers, IVF replayed as
+    build + ivf_add). The rankings must agree exactly."""
+    from repro.core.ivf import ivf_add
+    from repro.core.metrics import mrr_at_k, recall_at_k
+    from repro.pipeline import Pipeline, PipelineConfig
+    from repro.storage.layout import pack
+
+    def cfg(mutation: bool) -> PipelineConfig:
+        c = PipelineConfig()
+        c.retrieval.mode = "espn"
+        c.retrieval.nprobe = 8
+        c.retrieval.k_candidates = 50
+        c.storage.t_max = 64
+        c.mutation.enabled = mutation
+        if mutation:
+            c.cluster.n_shards = 2
+        return c
+
+    pipe = Pipeline.from_artifacts(cfg(True), index=copy.copy(index),
+                                   layout=layout, corpus=corpus)
+    rng = np.random.default_rng(17)
+    batches = [_mk_docs(rng, layout.d_cls, layout.d_bow, 16)
+               for _ in range(2)]
+    for docs in batches:
+        pipe.ingest(*docs)
+    pipe.delete(rng.choice(layout.n_docs, layout.n_docs // 20,
+                           replace=False))
+
+    oracle_index = copy.copy(index)              # ivf_add reassigns, no alias
+    start = layout.n_docs
+    for cls_b, _ in batches:
+        ivf_add(oracle_index, cls_b, np.arange(start, start + len(cls_b)))
+        start += len(cls_b)
+    all_cls = np.concatenate([corpus.cls] + [b[0] for b in batches])
+    all_bows = list(corpus.bow) + [bw for b in batches for bw in b[1]]
+    oracle = Pipeline.from_artifacts(
+        cfg(False), index=oracle_index,
+        layout=pack(all_cls, all_bows, dtype=np.float16))
+    oracle.tier.alive = pipe.tier.alive.copy()
+
+    q = (corpus.queries_cls, corpus.queries_bow, corpus.query_lens)
+    rm, ro = pipe.search(*q), oracle.search(*q)
+    identical = all(
+        np.array_equal(a.doc_ids, b.doc_ids)
+        and np.array_equal(a.scores, b.scores)
+        for a, b in zip(rm.ranked, ro.ranked))
+    ranked_m = [r.doc_ids for r in rm.ranked]
+    ranked_o = [r.doc_ids for r in ro.ranked]
+    out = {"rankings_identical": bool(identical),
+           "mrr10_churned": round(mrr_at_k(ranked_m, corpus.qrels, 10), 4),
+           "mrr10_rebuild": round(mrr_at_k(ranked_o, corpus.qrels, 10), 4),
+           "recall50_churned": round(
+               recall_at_k(ranked_m, corpus.qrels, 50), 4),
+           "recall50_rebuild": round(
+               recall_at_k(ranked_o, corpus.qrels, 50), 4)}
+    common.row("mutation_parity", 0.0,
+               f"identical={out['rankings_identical']} "
+               f"mrr10={out['mrr10_churned']}")
+    pipe.close()
+    oracle.close()
+    return out
+
+
+def main() -> None:
+    corpus = common.scoring_corpus()
+    index = common.scoring_index(corpus)
+    layout = common.scoring_layout(corpus)
+    n_batches = 12 if common.FAST else 60
+
+    io = _io_section(layout, n_batches)
+    parity = _parity_section(corpus, index, layout)
+    common.emit_json("BENCH_mutation.json", {
+        "scenario": {"batches": n_batches, "batch": 8, "k": 24,
+                     "shards": 2, "replication": 2,
+                     "n_docs": layout.n_docs},
+        "io": io,
+        "parity": parity,
+    })
+
+
+if __name__ == "__main__":
+    main()

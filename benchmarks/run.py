@@ -20,6 +20,7 @@ SUITES = [
     ("tables4-5:latency-vs-memory", "benchmarks.bench_latency_memory"),
     ("figs8-10:batch-scaling", "benchmarks.bench_batch_scaling"),
     ("beyond:cluster-scaling", "benchmarks.bench_cluster_scaling"),
+    ("beyond:mutation-churn", "benchmarks.bench_mutation_churn"),
     ("kernels", "benchmarks.bench_kernels"),
     ("beyond:espn-embedding-offload", "benchmarks.bench_espn_embedding"),
     ("beyond:disk-ivf-full-offload", "benchmarks.bench_disk_ivf"),

@@ -170,6 +170,15 @@ class FDETable:
         storage dtype ``dtype`` (the with_mode sharing check)."""
         return self.cfg == cfg and self.vecs.dtype == np.dtype(dtype)
 
+    def append(self, vecs: np.ndarray) -> None:
+        """Extend the table with newly ingested docs' FDEs (encoded under
+        this table's own ``cfg`` — the encoder is deterministic from it, so
+        incremental appends match a from-scratch rebuild exactly)."""
+        if len(vecs) == 0:
+            return
+        self.vecs = np.concatenate(
+            [self.vecs, np.asarray(vecs).astype(self.vecs.dtype)])
+
 
 def build_fde_table(bows: list[np.ndarray], cfg: FDEConfig, *,
                     dtype: str | np.dtype = "float16") -> FDETable:

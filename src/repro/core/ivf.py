@@ -205,6 +205,68 @@ def valid_candidates(ids_row: np.ndarray, scores_row: np.ndarray):
     return ids_row[mask], np.asarray(scores_row)[mask]
 
 
+def mask_dead(ids, alive: np.ndarray | None):
+    """Tombstone filter for candidate rows: ids whose doc is deleted become
+    ``-1`` padding, which the existing ``valid_candidates`` drop then removes
+    with scores kept paired. ``alive=None`` (no mutation layer) is the
+    identity."""
+    if alive is None:
+        return ids
+    ids = np.asarray(ids)
+    safe = np.clip(ids, 0, len(alive) - 1)
+    return np.where((ids >= 0) & ~alive[safe], -1, ids)
+
+
+def ivf_add(index: IVFIndex, cls_embs: np.ndarray, doc_ids) -> IVFIndex:
+    """Online insertion: assign new docs to their nearest existing centroid
+    and append them to that cell (growing the pad width when a cell fills).
+
+    Centroids are NOT retrained — cells drift from optimal as the corpus
+    churns, which is the standard online-IVF trade (FAISS ``add`` does the
+    same); a periodic rebuild restores clustering quality. The update is
+    fully deterministic, so replaying the same ingest sequence on a freshly
+    built index reproduces the index state bit-for-bit (the churn oracle
+    relies on this). Mutates ``index`` in place and returns it — callers
+    holding the object (prefetchers, cost models) see the update."""
+    vecs = np.asarray(cls_embs, np.float32)
+    ids = np.asarray(doc_ids, np.int64)
+    if len(ids) == 0:
+        return index
+    assign = np.asarray(_assign_chunked(jnp.asarray(vecs), index.centroids))
+    cell_ids = np.asarray(index.cell_ids).copy()
+    cell_vecs = np.asarray(index.cell_vecs).copy()
+    cell_scale = (np.asarray(index.cell_scale).copy()
+                  if index.cell_scale is not None else None)
+    sizes = index.cell_sizes.astype(np.int64)
+    need = np.bincount(assign, minlength=index.ncells) + sizes
+    new_max = int(max(index.max_cell, need.max()))
+    if new_max > index.max_cell:
+        grow = new_max - index.max_cell
+        cell_ids = np.pad(cell_ids, ((0, 0), (0, grow)), constant_values=-1)
+        cell_vecs = np.pad(cell_vecs, ((0, 0), (0, grow), (0, 0)))
+        if cell_scale is not None:
+            # empty slots carry the same floor scale the builder gives them
+            cell_scale = np.pad(cell_scale, ((0, 0), (0, grow)),
+                                constant_values=1e-9)
+    for v, gid, c in zip(vecs, ids, assign):
+        pos = int(sizes[c])
+        cell_ids[c, pos] = gid
+        if index.quant == "int8":
+            sc = max(float(np.abs(v).max()) / 127.0, 1e-9)
+            cell_vecs[c, pos] = np.round(v / sc).astype(np.int8)
+            cell_scale[c, pos] = sc
+        else:
+            cell_vecs[c, pos] = v.astype(cell_vecs.dtype)
+        sizes[c] = pos + 1
+    index.cell_ids = jnp.asarray(cell_ids)
+    index.cell_vecs = jnp.asarray(cell_vecs)
+    if cell_scale is not None:
+        index.cell_scale = jnp.asarray(cell_scale)
+    index.cell_sizes = sizes
+    index.n_docs = int(max(index.n_docs, int(ids.max()) + 1))
+    return index
+
+
 def search_two_phase(index: IVFIndex, q, nprobe: int, k: int, delta: int):
     """ESPN's two-phase search: returns (approx top-k after δ probes,
     final top-k after all η probes, probe order). δ-snapshot = prefetch list.

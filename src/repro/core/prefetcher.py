@@ -15,8 +15,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.ivf import (ANNCostModel, IVFIndex, search_two_phase,
-                            valid_candidates)
+from repro.core.ivf import (ANNCostModel, IVFIndex, mask_dead,
+                            search_two_phase, valid_candidates)
 from repro.storage.io_engine import StorageTier
 
 
@@ -117,6 +117,12 @@ class ANNPrefetcher:
         approx, final, _ = search_two_phase(self.index, q, nprobe, k, delta)
         a_scores, a_ids = map(np.asarray, approx)
         f_scores, f_ids = map(np.asarray, final)
+        # tombstones: deleted docs become -1 padding BEFORE the prefetch and
+        # miss lists form, so they are never fetched, never scored, and never
+        # inserted into any cache
+        alive = getattr(self.tier, "alive", None)
+        a_ids = mask_dead(a_ids, alive)
+        f_ids = mask_dead(f_ids, alive)
 
         budget = self.cost.prefetch_budget(self.index, nprobe, delta)
         ann_total = self.cost.time(self.index, nprobe)

@@ -13,8 +13,9 @@ an argparse parser before jax loads); ``Pipeline`` and the registry resolve
 lazily on first attribute access (PEP 562).
 """
 from repro.pipeline.config import (ClusterConfig, CorpusConfig, IndexConfig,
-                                   PipelineConfig, RetrievalConfig,
-                                   ServeConfig, StorageConfig)
+                                   MutationConfig, PipelineConfig,
+                                   RetrievalConfig, ServeConfig,
+                                   StorageConfig)
 
 _LAZY = {
     "Pipeline": "repro.pipeline.pipeline",
@@ -27,7 +28,8 @@ _LAZY = {
 
 __all__ = [
     "Pipeline", "PipelineConfig", "CorpusConfig", "IndexConfig",
-    "StorageConfig", "RetrievalConfig", "ClusterConfig", "ServeConfig",
+    "StorageConfig", "RetrievalConfig", "ClusterConfig", "MutationConfig",
+    "ServeConfig",
     "RetrievalBackend", "register_backend", "get_backend",
     "available_backends",
 ]

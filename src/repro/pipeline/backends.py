@@ -22,8 +22,8 @@ import numpy as np
 
 from repro.core.espn import (ComputeModel, ESPNConfig, LatencyBreakdown,
                              RetrievalResponse)
-from repro.core.ivf import (ANNCostModel, IVFIndex, build_ivf, search,
-                            valid_candidates)
+from repro.core.ivf import (ANNCostModel, IVFIndex, build_ivf, ivf_add,
+                            mask_dead, search, valid_candidates)
 from repro.core.prefetcher import ANNPrefetcher, QueryResult
 from repro.core.rerank import RerankOutput, rerank_query
 from repro.storage.batch_io import consumption_dedup_saved
@@ -106,6 +106,19 @@ class RetrievalBackend(abc.ABC):
                   bd: LatencyBreakdown) -> list[RerankOutput]:
         """Fill ``bd``'s ann/hidden/critical/rerank terms; return rankings."""
 
+    # -- live-mutation hooks ------------------------------------------
+    def _dead_masked(self, ids):
+        """Tombstone deleted docs out of candidate rows (``-1`` padding;
+        ``valid_candidates`` drops them with scores kept paired). Identity
+        for tiers without a mutation layer."""
+        return mask_dead(ids, getattr(self.tier, "alive", None))
+
+    def on_mutation(self, ingested=None, deleted=None) -> None:
+        """Called by ``Pipeline.ingest``/``delete`` after the tier and its
+        side tables moved. Deletes need nothing here (the tombstone mask is
+        consulted per query); backends holding device copies of a side tier
+        override this to refresh them on ingest."""
+
     # -- shared helpers -----------------------------------------------
     def _maxsim_time(self, n_docs: int, q_len: int) -> float:
         layout = self.tier.layout
@@ -124,6 +137,7 @@ class RetrievalBackend(abc.ABC):
         coalesced read in the critical path; duplicate candidate bytes are
         billed once, surfaced as ``bd.dedup_bytes_saved``."""
         cfg = self.cfg
+        ids = self._dead_masked(ids)
         prep = []
         for b in range(len(ids)):
             fin, fin_scores = valid_candidates(ids[b], scores[b])
@@ -269,7 +283,7 @@ class BitvecBackend(RetrievalBackend):
         layout = self.tier.layout
         mean_t = float(layout.n_tokens.mean())
         scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
-        scores, ids = np.asarray(scores), np.asarray(ids)
+        scores, ids = np.asarray(scores), self._dead_masked(np.asarray(ids))
         bd.ann_s = self.cost.time(self.index, cfg.nprobe)
         # 1) resident bit filter: score ALL candidates, zero SSD bytes; the
         #    top-R survivors are chosen with a partial sort (argpartition +
@@ -357,6 +371,20 @@ class FDEBackend(RetrievalBackend):
             # to the device once, not per query batch
             import jax.numpy as jnp
             self._fde_vecs_dev = jnp.asarray(tier.fde.vecs)
+
+    def on_mutation(self, ingested=None, deleted=None) -> None:
+        """Ingest moved ``tier.fde`` under this backend: fold the new doc
+        FDEs into the IVF wrapper when one exists, else refresh the device
+        copy of the (no-longer-immutable) brute-scan table."""
+        if ingested is None or len(ingested) == 0:
+            return
+        gids = np.asarray(ingested, np.int64)
+        if self.fde_index is not None:
+            ivf_add(self.fde_index,
+                    np.asarray(self.tier.fde.vecs[gids], np.float32), gids)
+        else:
+            import jax.numpy as jnp
+            self._fde_vecs_dev = jnp.asarray(self.tier.fde.vecs)
 
     def candidate_gen_bytes(self) -> int:
         """Resident bytes this backend's candidate generation needs (the

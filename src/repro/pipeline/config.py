@@ -131,6 +131,31 @@ class ClusterConfig:
 
 
 @dataclass
+class MutationConfig:
+    """Live index mutation (``repro.storage.mutation``). Defaults build the
+    immutable PR-5 tier; set ``enabled`` (or any maintenance knob) to get a
+    ``MutableStorageCluster`` with ``Pipeline.ingest/delete/compact/
+    rebalance`` available. A mutable cluster that never mutates is
+    bitwise-identical to the immutable one."""
+    enabled: bool = False              # build the mutable cluster
+    auto_compact_segments: int = 0     # maintain(): compact a shard once it
+                                       # carries this many segments (0 = off)
+    auto_compact_dead_frac: float = 0.0  # maintain(): compact past this dead-
+                                       # block fraction (0 = off)
+    compact_interval_s: float = 0.0    # background compactor period
+                                       # (0 = no daemon; call maintain())
+    rebalance_skew: float = 0.0        # maintain(): rebalance when max live
+                                       # block mass > skew * min (0 = off)
+
+    def active(self) -> bool:
+        """True when the pipeline should build the mutable tier."""
+        return (self.enabled or self.auto_compact_segments > 0
+                or self.auto_compact_dead_frac > 0.0
+                or self.compact_interval_s > 0.0
+                or self.rebalance_skew > 0.0)
+
+
+@dataclass
 class ServeConfig:
     max_batch: int = 12
     max_wait_s: float = 0.005
@@ -143,11 +168,13 @@ class PipelineConfig:
     storage: StorageConfig = field(default_factory=StorageConfig)
     retrieval: RetrievalConfig = field(default_factory=RetrievalConfig)
     cluster: ClusterConfig = field(default_factory=ClusterConfig)
+    mutation: MutationConfig = field(default_factory=MutationConfig)
     serve: ServeConfig = field(default_factory=ServeConfig)
 
     _SECTIONS = {"corpus": CorpusConfig, "index": IndexConfig,
                  "storage": StorageConfig, "retrieval": RetrievalConfig,
-                 "cluster": ClusterConfig, "serve": ServeConfig}
+                 "cluster": ClusterConfig, "mutation": MutationConfig,
+                 "serve": ServeConfig}
 
     # -- dict round-trip ----------------------------------------------------
     def to_dict(self) -> dict:
@@ -245,6 +272,26 @@ class PipelineConfig:
                         help="cross-batch arena cache budget in MB (0 = off)")
         ap.add_argument("--cluster-seed", type=int, default=cl.seed,
                         help="replica clock RNG seed")
+        m = MutationConfig()
+        ap.add_argument("--mutation", action="store_true",
+                        help="build the mutable storage cluster (online "
+                             "ingest/delete/compact/rebalance)")
+        ap.add_argument("--auto-compact-segments", type=int,
+                        default=m.auto_compact_segments,
+                        help="maintain(): compact a shard at this many "
+                             "append segments (0 = off)")
+        ap.add_argument("--auto-compact-dead-frac", type=float,
+                        default=m.auto_compact_dead_frac,
+                        help="maintain(): compact past this dead-block "
+                             "fraction (0 = off)")
+        ap.add_argument("--compact-interval-s", type=float,
+                        default=m.compact_interval_s,
+                        help="background compactor period in seconds "
+                             "(0 = no daemon)")
+        ap.add_argument("--rebalance-skew", type=float,
+                        default=m.rebalance_skew,
+                        help="maintain(): rebalance shards when max/min "
+                             "live block mass exceeds this (0 = off)")
         ap.add_argument("--max-batch", type=int, default=v.max_batch)
         ap.add_argument("--max-wait-s", type=float, default=v.max_wait_s)
         return ap
@@ -288,5 +335,11 @@ class PipelineConfig:
                 replica_mults=[float(x) for x in
                                args.replica_mults.split(",") if x],
                 arena_cache_mb=args.arena_cache_mb, seed=args.cluster_seed),
+            mutation=MutationConfig(
+                enabled=args.mutation,
+                auto_compact_segments=args.auto_compact_segments,
+                auto_compact_dead_frac=args.auto_compact_dead_frac,
+                compact_interval_s=args.compact_interval_s,
+                rebalance_skew=args.rebalance_skew),
             serve=ServeConfig(max_batch=args.max_batch,
                               max_wait_s=args.max_wait_s))

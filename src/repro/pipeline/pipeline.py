@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.espn import ComputeModel, RetrievalResponse
 from repro.core.fde import FDETable, fde_from_layout
-from repro.core.ivf import ANNCostModel, IVFIndex, build_ivf
+from repro.core.ivf import ANNCostModel, IVFIndex, build_ivf, ivf_add
 from repro.core.metrics import mrr_at_k, recall_at_k
 from repro.data.synthetic import Corpus, make_corpus
 from repro.pipeline import persist
@@ -35,6 +35,8 @@ from repro.storage.cluster import StorageCluster
 from repro.storage.io_engine import StorageTier
 from repro.storage.layout import (BitTable, EmbeddingLayout, bits_from_layout,
                                   pack)
+from repro.storage.mutation import MutableStorageCluster
+from repro.storage.segments import Segment
 
 
 class Pipeline:
@@ -110,7 +112,8 @@ class Pipeline:
                   cost_model=None, compute=None,
                   bits: BitTable | None = None,
                   fde: FDETable | None = None,
-                  shard_layouts=None) -> "Pipeline":
+                  shard_layouts=None, segments=None,
+                  alive=None) -> "Pipeline":
         backend_cls = get_backend(cfg.retrieval.mode)
         budget = (int(layout.nbytes * cfg.storage.mem_budget_frac)
                   if backend_cls.needs_mem_budget else None)
@@ -129,7 +132,28 @@ class Pipeline:
         else:
             fde = None        # don't bill the FDE table to other backends
         cl = cfg.cluster
-        if cl.enabled():
+        mu = cfg.mutation
+        if mu.active():
+            # mutation rides on the cluster tier even for the trivial
+            # 1-shard/1-replica config (routing/segment machinery lives
+            # there); an unmutated mutable cluster is bitwise-identical
+            # to the immutable path
+            tier = MutableStorageCluster(
+                layout, n_shards=cl.n_shards, replication=cl.replication,
+                partition=cl.partition, stack=backend_cls.storage_stack,
+                mem_budget_bytes=budget, t_max=cfg.storage.t_max,
+                bits=bits, fde=fde, coalesce=cfg.storage.io_coalesce,
+                replica_mults=cl.replica_mults,
+                hedge_quantile=cl.hedge_quantile,
+                jitter_sigma=cl.jitter_sigma, seed=cl.seed,
+                arena_cache_bytes=cl.arena_cache_bytes(),
+                shard_layouts=shard_layouts,
+                auto_compact_segments=mu.auto_compact_segments,
+                auto_compact_dead_frac=mu.auto_compact_dead_frac,
+                compact_interval_s=mu.compact_interval_s,
+                rebalance_skew=mu.rebalance_skew,
+                segments=segments, alive=alive)
+        elif cl.enabled():
             tier = StorageCluster(
                 layout, n_shards=cl.n_shards, replication=cl.replication,
                 partition=cl.partition, stack=backend_cls.storage_stack,
@@ -179,6 +203,56 @@ class Pipeline:
                 f"recall@{recall_k}": recall_at_k(ranked, qrels, recall_k),
                 "breakdown_ms": resp.breakdown.ms()}
 
+    # -- live mutation -------------------------------------------------------
+    def _mutable_tier(self) -> MutableStorageCluster:
+        if not isinstance(self.tier, MutableStorageCluster):
+            raise RuntimeError(
+                "live mutation requires the mutable tier; set "
+                "cfg.mutation.enabled=True (or --mutation) when building")
+        return self.tier
+
+    def ingest(self, cls_embs: np.ndarray, bow_embs: list[np.ndarray], *,
+               scales=None) -> np.ndarray:
+        """Add documents online: appends a block-aligned segment on the
+        lightest shard, extends the side tiers, inserts into the IVF index
+        (no re-clustering), and notifies the backend. Returns global ids."""
+        tier = self._mutable_tier()
+        gids = tier.ingest(cls_embs, bow_embs, scales=scales)
+        self.layout = tier.layout           # grown doc-id space
+        ivf_add(self.index, np.asarray(cls_embs, np.float32), gids)
+        self.backend.on_mutation(ingested=gids)
+        return gids
+
+    def delete(self, ids) -> int:
+        """Tombstone documents: they stop appearing in results immediately;
+        blocks are reclaimed by the next ``compact()``."""
+        tier = self._mutable_tier()
+        n = tier.delete(ids)
+        self.backend.on_mutation(deleted=np.asarray(ids, np.int64))
+        return n
+
+    def compact(self, shard: int | None = None) -> dict:
+        """Merge append segments + drop dead rows (one shard or all)."""
+        return self._mutable_tier().compact(shard)
+
+    def rebalance(self, skew_threshold: float | None = None) -> dict:
+        """Migrate live blocks from the heaviest shard to the lightest."""
+        return self._mutable_tier().rebalance(skew_threshold)
+
+    def maintain(self) -> dict:
+        """One self-management pass (threshold compaction + rebalance)."""
+        return self._mutable_tier().maintain()
+
+    def kill_replica(self, shard: int, replica: int) -> None:
+        if not isinstance(self.tier, StorageCluster):
+            raise RuntimeError("replica control requires the cluster tier")
+        self.tier.kill_replica(shard, replica)
+
+    def recover_replica(self, shard: int, replica: int) -> dict:
+        if not isinstance(self.tier, StorageCluster):
+            raise RuntimeError("replica control requires the cluster tier")
+        return self.tier.recover_replica(shard, replica)
+
     def serve(self, policy=None):
         """Start a continuous-batching ``RetrievalServer`` over this stack.
         Caller owns shutdown()."""
@@ -200,17 +274,24 @@ class Pipeline:
                 raise TypeError(f"unknown RetrievalConfig field {k!r}; "
                                 f"expected one of {sorted(valid)}")
             setattr(cfg.retrieval, k, v)
-        shard_layouts = None
+        shard_layouts = segments = alive = None
         if isinstance(self.tier, StorageCluster):
             # cluster knobs are not retrieval overrides: the new pipeline
             # shards identically, so reuse the already-built sub-layouts
             shard_layouts = list(zip((sh.layout for sh in self.tier.shards),
                                      self.tier.shard_ids))
+        if isinstance(self.tier, MutableStorageCluster):
+            # segments/tombstones carry over too: the mode comparison must
+            # see the same live corpus (layouts are immutable, so sharing
+            # Segment objects across pipelines is safe)
+            segments = [list(segs) for segs in self.tier.segments]
+            alive = self.tier.alive
         return self._assemble(cfg, self.corpus, self.index, self.layout,
                               cost_model=self.backend.cost,
                               compute=self.backend.compute,
                               bits=self.tier.bits, fde=self.tier.fde,
-                              shard_layouts=shard_layouts)
+                              shard_layouts=shard_layouts,
+                              segments=segments, alive=alive)
 
     # -- persistence --------------------------------------------------------
     def save(self, out_dir: str) -> str:
@@ -228,7 +309,26 @@ class Pipeline:
         if self.tier.fde is not None:
             persist.save_fde(self.tier.fde,
                              os.path.join(out_dir, "fde.npz"))
-        if isinstance(self.tier, StorageCluster) and self.tier.n_shards > 1:
+        if isinstance(self.tier, MutableStorageCluster):
+            # mutation state replaces the plain shards/ dir: the base
+            # sub-layouts have diverged from a fresh partition (ingest,
+            # compaction, migration), so every shard persists its base
+            # image, its append segments, and the tombstone mask
+            t = self.tier
+            mdir = os.path.join(out_dir, "mutation")
+            os.makedirs(mdir, exist_ok=True)
+            np.savez(os.path.join(mdir, "state.npz"), alive=t.alive,
+                     seg_counts=np.array([len(s) for s in t.segments],
+                                         np.int64))
+            for s, sh in enumerate(t.shards):
+                persist.save_shard_layout(
+                    sh.layout, t.shard_ids[s],
+                    os.path.join(mdir, f"shard_{s}.npz"))
+                for k, seg in enumerate(t.segments[s]):
+                    persist.save_shard_layout(
+                        seg.layout, seg.global_ids,
+                        os.path.join(mdir, f"seg_{s}_{k}.npz"))
+        elif isinstance(self.tier, StorageCluster) and self.tier.n_shards > 1:
             shard_dir = os.path.join(out_dir, "shards")
             os.makedirs(shard_dir, exist_ok=True)
             for s, sh in enumerate(self.tier.shards):
@@ -257,16 +357,31 @@ class Pipeline:
         fde_path = os.path.join(out_dir, "fde.npz")
         fde = (persist.load_fde(fde_path)
                if os.path.exists(fde_path) else None)
-        shard_layouts = None
+        shard_layouts = segments = alive = None
+        mdir = os.path.join(out_dir, "mutation")
         shard_dir = os.path.join(out_dir, "shards")
-        if cfg.cluster.enabled() and os.path.isdir(shard_dir):
+        if cfg.mutation.active() and os.path.isdir(mdir):
+            z = np.load(os.path.join(mdir, "state.npz"), allow_pickle=False)
+            alive = z["alive"]
+            seg_counts = z["seg_counts"]
+            shard_layouts = [
+                persist.load_shard_layout(
+                    os.path.join(mdir, f"shard_{s}.npz"))
+                for s in range(cfg.cluster.n_shards)]
+            segments = [
+                [Segment(*persist.load_shard_layout(
+                    os.path.join(mdir, f"seg_{s}_{k}.npz")))
+                 for k in range(int(seg_counts[s]))]
+                for s in range(cfg.cluster.n_shards)]
+        elif cfg.cluster.enabled() and os.path.isdir(shard_dir):
             paths = [os.path.join(shard_dir, f"shard_{s}.npz")
                      for s in range(cfg.cluster.n_shards)]
             if all(os.path.exists(p) for p in paths):
                 shard_layouts = [persist.load_shard_layout(p) for p in paths]
         return cls._assemble(cfg, corpus, index, layout,
                              cost_model=cost_model, compute=compute,
-                             bits=bits, fde=fde, shard_layouts=shard_layouts)
+                             bits=bits, fde=fde, shard_layouts=shard_layouts,
+                             segments=segments, alive=alive)
 
     # -- lifecycle ----------------------------------------------------------
     def close(self):

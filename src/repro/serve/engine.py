@@ -11,6 +11,12 @@ import numpy as np
 
 from repro.serve.scheduler import BatchPolicy, ContinuousBatcher, Request
 
+# live-mutation / failure-recovery counters mirrored from the storage
+# cluster's stats dict into ServeStats (absent on an immutable tier)
+_MUT_KEYS = ("ingests", "ingested_docs", "deletes", "tombstones",
+             "compactions", "rebalances", "migration_bytes", "failovers",
+             "replicas_killed", "replicas_recovered", "recovery_bytes")
+
 
 @dataclass
 class ServeStats:
@@ -27,6 +33,18 @@ class ServeStats:
     cache_misses: int = 0
     shard_blocks: list = field(default_factory=list)   # per-shard device blocks
     shard_sim_s: list = field(default_factory=list)    # per-shard device time
+    # live-mutation / failure-recovery counters (zero on an immutable tier):
+    ingests: int = 0
+    ingested_docs: int = 0
+    deletes: int = 0
+    tombstones: int = 0
+    compactions: int = 0
+    rebalances: int = 0
+    migration_bytes: int = 0
+    failovers: int = 0                 # dead-primary batches absorbed
+    replicas_killed: int = 0
+    replicas_recovered: int = 0
+    recovery_bytes: int = 0            # replica re-sync traffic
 
     def percentile(self, p: float, sim: bool = True) -> float:
         xs = self.sim_latencies_ms if sim else self.latencies_ms
@@ -39,6 +57,9 @@ class ServeStats:
             if self.sim_latencies_ms else 0,
             "p50_ms": round(self.percentile(50), 2),
             "p99_ms": round(self.percentile(99), 2),
+            # wall clock (queueing + host), distinct from the device clock
+            "p50_wall_ms": round(self.percentile(50, sim=False), 2),
+            "p99_wall_ms": round(self.percentile(99, sim=False), 2),
             "mean_batch": round(float(np.mean(self.batch_sizes)), 2)
             if self.batch_sizes else 0,
             "mean_hit_rate": round(float(np.mean(self.hit_rates)), 4)
@@ -56,6 +77,17 @@ class ServeStats:
                 "arena_cache_hit_rate": round(self.cache_hits / total, 4)
                 if total else 0.0,
             }
+        mut = {"ingests": self.ingests, "ingested_docs": self.ingested_docs,
+               "deletes": self.deletes, "tombstones": self.tombstones,
+               "compactions": self.compactions,
+               "rebalances": self.rebalances,
+               "migration_bytes": self.migration_bytes,
+               "failovers": self.failovers,
+               "replicas_killed": self.replicas_killed,
+               "replicas_recovered": self.replicas_recovered,
+               "recovery_bytes": self.recovery_bytes}
+        if any(mut.values()):
+            out["mutation"] = mut
         return out
 
 
@@ -66,8 +98,15 @@ class RetrievalServer:
     def __init__(self, retriever, *, policy: BatchPolicy | None = None):
         self.retriever = retriever
         self.stats = ServeStats()
-        self.batcher = ContinuousBatcher(self._handle,
-                                         policy or BatchPolicy()).start()
+        tier_stats = getattr(getattr(retriever, "tier", None), "stats", {})
+        self._mut_base = {k: tier_stats.get(k, 0) for k in _MUT_KEYS}
+        # wall latency is recorded on the batcher loop when the request
+        # completes, so async submitters (query_async) are measured too —
+        # not just callers who block in query()
+        self.batcher = ContinuousBatcher(
+            self._handle, policy or BatchPolicy(),
+            on_complete=lambda r: self.stats.latencies_ms.append(
+                r.latency_s * 1e3)).start()
         self._rid = 0
 
     def _handle(self, batch: list[Request]):
@@ -104,6 +143,12 @@ class RetrievalServer:
         s.hedge_bytes += after["hedge_bytes"] - before["hedge_bytes"]
         s.cache_hits += after["cache_hits"] - before["cache_hits"]
         s.cache_misses += after["cache_misses"] - before["cache_misses"]
+        # mutation/recovery counters measure from server start, not per
+        # batch: ingest/delete/compact/recover run BETWEEN batches (they
+        # are control-plane calls, not queries), so windowed deltas would
+        # never see them. .get keeps plain clusters at zero.
+        for k in _MUT_KEYS:
+            setattr(s, k, after.get(k, 0) - self._mut_base.get(k, 0))
         shards = tier.per_shard_stats()
         if len(s.shard_blocks) != len(shards):
             s.shard_blocks = [0] * len(shards)
@@ -119,7 +164,6 @@ class RetrievalServer:
         self.batcher.submit(req)
         if not req.done.wait(timeout):
             raise TimeoutError("query timed out")
-        self.stats.latencies_ms.append(req.latency_s * 1e3)
         return req.result
 
     def query_async(self, cls_vec, bow_vecs, q_len) -> Request:

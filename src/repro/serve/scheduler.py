@@ -44,9 +44,11 @@ class BatchPolicy:
 class ContinuousBatcher:
     """Collects requests into batches and runs `handler(list[Request])`."""
 
-    def __init__(self, handler: Callable, policy: BatchPolicy):
+    def __init__(self, handler: Callable, policy: BatchPolicy, *,
+                 on_complete: Callable[[Request], None] | None = None):
         self.handler = handler
         self.policy = policy
+        self.on_complete = on_complete
         self.queue: Queue = Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -85,6 +87,13 @@ class ContinuousBatcher:
             self.handler(batch)
             for r in batch:
                 r.latency_s = time.monotonic() - r.arrival_s
+                # observe BEFORE the event fires: a waiter released by
+                # done.set() must find the request already recorded
+                if self.on_complete is not None:
+                    try:
+                        self.on_complete(r)
+                    except Exception:     # an observer must not kill the loop
+                        pass
                 r.done.set()
 
     def stop(self):

@@ -103,6 +103,18 @@ class ArenaCache:
                 self.bytes_used -= c.nbytes + b.nbytes
                 self.evictions += 1
 
+    def remove(self, doc_ids) -> int:
+        """Invalidate cached rows (deleted/rewritten docs must never be
+        served from memory again). Returns how many entries were dropped."""
+        dropped = 0
+        with self._lock:
+            for i in doc_ids:
+                ent = self._lru.pop(int(i), None)
+                if ent is not None:
+                    self.bytes_used -= ent[0].nbytes + ent[1].nbytes
+                    dropped += 1
+        return dropped
+
     def clear(self) -> None:
         with self._lock:
             self._lru.clear()

@@ -103,16 +103,23 @@ def build_shard_layout(layout: EmbeddingLayout,
 class ReplicaClock:
     """One replica's device clock: the shard tier's calibrated time scaled by
     a latency multiplier (a degraded replica is deliberately slow) and an
-    independent lognormal jitter stream (the straggler tail)."""
+    independent lognormal jitter draw (the straggler tail).
+
+    Jitter is keyed by ``(seed_key..., seq)`` — one stateless draw per batch
+    sequence number — so a replica's draw for batch ``seq`` is the same
+    whether it happens to serve as primary or as hedge target. That keeps
+    hedged clusters pointwise no slower than unhedged ones under primary
+    rotation (the primary's draw cannot depend on hedging configuration)."""
     mult: float = 1.0
     jitter_sigma: float = 0.0
-    rng: np.random.Generator | None = None
+    seed_key: tuple = ()
 
-    def draw(self) -> float:
+    def draw(self, seq: int = 0) -> float:
         """Multiplicative factor for one read on this replica."""
         f = self.mult
-        if self.jitter_sigma > 0.0 and self.rng is not None:
-            f *= float(np.exp(self.jitter_sigma * self.rng.standard_normal()))
+        if self.jitter_sigma > 0.0:
+            rng = np.random.default_rng([*self.seed_key, int(seq)])
+            f *= float(np.exp(self.jitter_sigma * rng.standard_normal()))
         return f
 
 
@@ -226,9 +233,7 @@ class StorageCluster:
             self.shard_of = np.full(layout.n_docs, -1, np.int32)
             for s, gids in enumerate(gid_lists):
                 self.shard_of[gids] = s
-            if (self.shard_of < 0).any():
-                raise ValueError("persisted shard layouts do not cover the "
-                                 "full doc-id space")
+            self._check_shard_cover()
         elif n_shards == 1:
             subs = [layout]                    # zero-copy: the shard IS the
             gid_lists = [np.arange(layout.n_docs, dtype=np.int64)]  # layout
@@ -255,15 +260,13 @@ class StorageCluster:
         # -- replica clocks + hedge threshold --------------------------------
         self.replicas = [[ReplicaClock(
             mult=float(mults[r]) if mults else 1.0,
-            jitter_sigma=jitter_sigma,
-            rng=(np.random.default_rng([seed, s, r])
-                 if jitter_sigma > 0.0 else None))
+            jitter_sigma=jitter_sigma, seed_key=(seed, s, r))
             for r in range(replication)] for s in range(n_shards)]
-        # hedge target: the healthiest secondary (lowest multiplier)
-        self._secondary = [min(range(1, replication),
-                               key=lambda r: (reps[r].mult, r))
-                           if replication > 1 else None
-                           for reps in self.replicas]
+        # primary rotation: batch ``seq`` reads replica ``seq % replication``
+        # on every shard; a dead replica's turn fails over to the healthiest
+        # alive peer (hedge timer fires, secondary serves, no bytes doubled)
+        self._batch_seq = 0
+        self._replica_alive = [[True] * replication for _ in range(n_shards)]
         self._hedge_on = hedge_quantile > 0.0 and replication > 1
         # the hedge delay is the hedge_quantile-quantile of the HEALTHY
         # (mult=1) latency distribution for this read: base_t * this factor
@@ -281,26 +284,131 @@ class StorageCluster:
         self.stats = {"reads": 0, "docs": 0, "doc_requests": 0, "blocks": 0,
                       "sim_seconds": 0.0, "batch_reads": 0, "io_runs": 0,
                       "dedup_docs": 0, "hedged_reads": 0, "hedge_wins": 0,
-                      "hedge_bytes": 0, "cache_hits": 0, "cache_misses": 0}
+                      "hedge_bytes": 0, "cache_hits": 0, "cache_misses": 0,
+                      "failovers": 0, "replicas_killed": 0,
+                      "replicas_recovered": 0, "recovery_bytes": 0,
+                      "recovery_seconds": 0.0}
+
+    # -- shard coverage (overridden by the mutation layer) -------------------
+    def _check_shard_cover(self) -> None:
+        if (self.shard_of < 0).any():
+            raise ValueError("persisted shard layouts do not cover the "
+                             "full doc-id space")
 
     # -- clocks --------------------------------------------------------------
-    def _shard_clock(self, s: int, base_t: float, n_blocks: int):
-        """One shard read on the device clock: primary replica draw, hedged
-        re-issue past the quantile delay. Returns
-        ``(effective_s, hedge_blocks, hedged, win)``."""
+    def _next_seq(self) -> int:
+        """One batch sequence number per read/read_batch call: keys the
+        stateless jitter draws and the primary rotation."""
+        with self._lock:
+            seq = self._batch_seq
+            self._batch_seq += 1
+            return seq
+
+    def _best_alive(self, s: int, exclude: int) -> int | None:
+        """The healthiest alive replica of shard ``s`` other than
+        ``exclude`` (lowest multiplier, lowest index breaks ties)."""
+        cands = [r for r in range(self.replication)
+                 if r != exclude and self._replica_alive[s][r]]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (self.replicas[s][r].mult, r))
+
+    def _shard_clock(self, s: int, base_t: float, n_blocks: int, seq: int):
+        """One shard read on the device clock: the rotating primary's draw,
+        hedged re-issue past the quantile delay, failover past a dead
+        primary. Returns ``(effective_s, hedge_blocks, hedged, win,
+        failover)``."""
         reps = self.replicas[s]
-        t1 = base_t * reps[0].draw()
+        p = seq % self.replication
+        if not self._replica_alive[s][p]:
+            # dead primary: it never answers, so the hedge timer (or the
+            # immediate connection failure when hedging is off) routes the
+            # read to the healthiest alive peer. No duplicate bytes move —
+            # the dead replica transferred nothing.
+            sec = self._best_alive(s, exclude=p)
+            if sec is None:
+                raise RuntimeError(f"no alive replica for shard {s}")
+            t_sec = base_t * reps[sec].draw(seq)
+            if self._hedge_on:
+                return base_t * self._hedge_factor + t_sec, 0, True, True, \
+                    True
+            return t_sec, 0, False, False, True
+        t1 = base_t * reps[p].draw(seq)
         if not self._hedge_on or n_blocks == 0:
-            return t1, 0, False, False
+            return t1, 0, False, False, False
+        sec = self._best_alive(s, exclude=p)
+        if sec is None:
+            return t1, 0, False, False, False
         hedge_after = base_t * self._hedge_factor
-        sec = reps[self._secondary[s]]
-        eff, hedged, win = hedge_clock(t1, lambda: base_t * sec.draw(),
-                                       hedge_after)
-        return eff, (n_blocks if hedged else 0), hedged, win
+        eff, hedged, win = hedge_clock(
+            t1, lambda: base_t * self.replicas[s][sec].draw(seq), hedge_after)
+        return eff, (n_blocks if hedged else 0), hedged, win, False
+
+    # -- replica failure injection / recovery --------------------------------
+    def _shard_disk_blocks(self, s: int) -> int:
+        """Blocks a fresh replica of shard ``s`` must copy to re-sync (the
+        whole on-disk image; the mutation layer adds its segments)."""
+        return int(self.shards[s].layout.offsets[:, 1].sum())
+
+    def kill_replica(self, shard: int, replica: int) -> None:
+        """Failure injection: mark one replica dead. Its rotation turns fail
+        over to the healthiest alive peer until ``recover_replica``."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        if not 0 <= replica < self.replication:
+            raise ValueError(f"replica {replica} out of range")
+        with self._lock:
+            alive = self._replica_alive[shard]
+            if not alive[replica]:
+                raise ValueError(
+                    f"replica {replica} of shard {shard} is already dead")
+            if sum(alive) == 1:
+                raise RuntimeError(
+                    f"cannot kill the last alive replica of shard {shard}")
+            alive[replica] = False
+            self.stats["replicas_killed"] += 1
+
+    def recover_replica(self, shard: int, replica: int) -> dict:
+        """Bring a killed replica back: re-sync its whole shard image from an
+        alive peer. Both sides of the copy are billed — ``recovery_bytes``
+        counts the image once (the bytes that crossed the wire) and
+        ``recovery_seconds`` charges the source read plus the symmetric
+        destination write on the shard's device clock, separate from the
+        query-path ``sim_seconds``."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        if not 0 <= replica < self.replication:
+            raise ValueError(f"replica {replica} out of range")
+        with self._lock:
+            if self._replica_alive[shard][replica]:
+                raise ValueError(
+                    f"replica {replica} of shard {shard} is alive")
+            nb = self._shard_disk_blocks(shard)
+            secs = 2.0 * self.shards[shard].spec.read_time(nb, self.qd)
+            self._replica_alive[shard][replica] = True
+            self.stats["replicas_recovered"] += 1
+            self.stats["recovery_bytes"] += nb * self.layout.block
+            self.stats["recovery_seconds"] += secs
+        return {"shard": shard, "replica": replica,
+                "bytes": nb * self.layout.block, "seconds": secs}
 
     def _check_open(self):
         if self._closed:
             raise RuntimeError("StorageCluster is closed")
+
+    # -- shard routing (overridden by the mutation layer) --------------------
+    def _shard_read_plan(self, s: int, gids: np.ndarray):
+        """Route one shard's slice of global doc ids to gatherable pieces.
+
+        Returns ``(pieces, base_t, n_blocks)``; each piece is ``(layout,
+        local_ids, sel)`` where ``sel`` indexes into ``gids``'s positions
+        (``None`` = all of them, in order). The base cluster serves every
+        row from the shard's own sub-layout in one piece; the mutation
+        layer splits rows across the base layout and append segments, each
+        billed as its own device read."""
+        local = self.local_of[gids]
+        base_t, nb = self.shards[s]._sim_time(local)
+        return [(self.shards[s].layout, local, None)], base_t, nb
 
     # -- reads ---------------------------------------------------------------
     def read(self, ids, t_max: int | None = None) -> ReadResult:
@@ -311,31 +419,37 @@ class StorageCluster:
         from the global blob, so a standalone caller may drop it (the
         ``Pipeline`` keeps it for persistence/side-table builds)."""
         self._check_open()
+        seq = self._next_seq()
         ids = np.asarray(ids, np.int64)
         t_max = t_max or self.t_max
         cls = np.zeros((len(ids), self.layout.d_cls), np.float32)
         bow = np.zeros((len(ids), t_max, self.layout.d_bow), np.float32)
         lens = np.zeros(len(ids), np.int32)
         sim, n_blocks, hedge_blocks, hedged, wins = 0.0, 0, 0, 0, 0
+        failovers = 0
         if len(ids) == 0:
             # preserve the single-tier empty-read floor (h2d base cost)
             sim, _ = self.shards[0]._sim_time(ids)
-            sim *= self.replicas[0][0].draw()
+            p = seq % self.replication
+            if not self._replica_alive[0][p]:
+                p = self._best_alive(0, exclude=p)
+            sim *= self.replicas[0][p].draw(seq)
         else:
             for s in range(self.n_shards):
                 rows = np.flatnonzero(self.shard_of[ids] == s)
                 if len(rows) == 0:
                     continue
-                local = self.local_of[ids[rows]]
-                base_t, nb = self.shards[s]._sim_time(local)
-                eff, hb, h, w = self._shard_clock(s, base_t, nb)
+                pieces, base_t, nb = self._shard_read_plan(s, ids[rows])
+                eff, hb, h, w, fo = self._shard_clock(s, base_t, nb, seq)
                 sim = max(sim, eff)
                 n_blocks += nb
                 hedge_blocks += hb
                 hedged += int(h)
                 wins += int(w)
-                gather_docs_at(self.shards[s].layout, local, rows, cls, bow,
-                               lens)
+                failovers += int(fo)
+                for lay, local_p, sel in pieces:
+                    rows_p = rows if sel is None else rows[sel]
+                    gather_docs_at(lay, local_p, rows_p, cls, bow, lens)
                 with self.shards[s]._lock:
                     st = self.shards[s].stats
                     st["reads"] += 1
@@ -352,14 +466,23 @@ class StorageCluster:
             self.stats["hedged_reads"] += hedged
             self.stats["hedge_wins"] += wins
             self.stats["hedge_bytes"] += hedge_blocks * self.layout.block
+            self.stats["failovers"] += failovers
         return ReadResult(cls, bow, lens, sim, n_blocks)
 
     def read_async(self, ids, t_max: int | None = None) -> Future:
         self._check_open()
         return self._pool.submit(self.read, ids, t_max)
 
-    def _gather_run(self, shard: StorageTier, local_ids, rows, arena):
-        gather_docs_at(shard.layout, local_ids, rows, *arena)
+    def _gather_run(self, layout: EmbeddingLayout, local_ids, rows, arena):
+        # the layout is captured at SUBMIT time: a concurrent compaction may
+        # swap the shard's layout attribute, but the blob this run gathers
+        # from is immutable, so in-flight batches keep serving the old image
+        gather_docs_at(layout, local_ids, rows, *arena)
+
+    def _cache_insert_ok(self, gid: int) -> bool:
+        """Deferred-insert guard: the mutation layer vetoes rows whose doc
+        was deleted between the gather and the flush."""
+        return True
 
     def _flush_cache_inserts(self) -> None:
         """Apply deferred cache inserts from earlier batches. Runs on the
@@ -390,6 +513,8 @@ class StorageCluster:
                 continue
             cls_a, bow_a, lens_a = arena
             for row, gid in zip(rows, gids):
+                if not self._cache_insert_ok(int(gid)):
+                    continue
                 self.arena_cache.put(int(gid), cls_a[row], bow_a[row],
                                      int(lens_a[row]))
 
@@ -410,6 +535,8 @@ class StorageCluster:
         t_max = t_max or self.t_max
         coalesce = self.coalesce if coalesce is None else coalesce
         lists = [np.asarray(x, np.int64).ravel() for x in per_query_ids]
+        if coalesce:
+            seq = self._next_seq()
         if not coalesce:
             # the seed-faithful serial baseline deliberately bypasses the
             # arena cache (the seed had none) — but earlier coalesced
@@ -453,6 +580,7 @@ class StorageCluster:
         run_of_row = np.full(u, -1, np.int64)
         futures: list[Future] = []
         sim, hedge_blocks, hedged, wins, io_blocks = 0.0, 0, 0, 0, 0
+        failovers = 0
         uncached_rows = np.flatnonzero(~cached)
         shard_of_rows = (self.shard_of[plan.arena_ids[uncached_rows]]
                          if len(uncached_rows) else
@@ -469,23 +597,25 @@ class StorageCluster:
             if len(rows_s) == 0:
                 continue
             gids_s = plan.arena_ids[rows_s]
-            local_s = self.local_of[gids_s]
-            base_t, nb = self.shards[s]._sim_time(local_s)
-            eff, hb, h, w = self._shard_clock(s, base_t, nb)
+            pieces, base_t, nb = self._shard_read_plan(s, gids_s)
+            eff, hb, h, w, fo = self._shard_clock(s, base_t, nb, seq)
             sim = max(sim, eff)
             io_blocks += nb
             hedge_blocks += hb
             hedged += int(h)
             wins += int(w)
-            chunk = run_chunk(len(rows_s), self.io_chunk_docs)
+            failovers += int(fo)
             n_runs = 0
-            for r0 in range(0, len(rows_s), chunk):
-                sl = slice(r0, r0 + chunk)
-                run_of_row[rows_s[sl]] = len(futures)
-                futures.append(self.shards[s]._pool.submit(
-                    self._gather_run, self.shards[s], local_s[sl],
-                    rows_s[sl], arena))
-                n_runs += 1
+            for lay, local_p, sel in pieces:
+                rows_p = rows_s if sel is None else rows_s[sel]
+                chunk = run_chunk(len(rows_p), self.io_chunk_docs)
+                for r0 in range(0, len(rows_p), chunk):
+                    sl = slice(r0, r0 + chunk)
+                    run_of_row[rows_p[sl]] = len(futures)
+                    futures.append(self.shards[s]._pool.submit(
+                        self._gather_run, lay, local_p[sl], rows_p[sl],
+                        arena))
+                    n_runs += 1
             with self.shards[s]._lock:
                 st = self.shards[s].stats
                 st["reads"] += 1
@@ -525,6 +655,7 @@ class StorageCluster:
             self.stats["hedged_reads"] += hedged
             self.stats["hedge_wins"] += wins
             self.stats["hedge_bytes"] += hedge_blocks * self.layout.block
+            self.stats["failovers"] += failovers
             if self.arena_cache.enabled:
                 self.stats["cache_hits"] += cache_hits
                 self.stats["cache_misses"] += len(uncached_rows)

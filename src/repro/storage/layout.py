@@ -131,6 +131,19 @@ class BitTable:
             self._lanes32 = to_uint32_lanes(self.packed)
         return self._lanes32
 
+    def append(self, bow_embs: list[np.ndarray]) -> None:
+        """Extend the table with newly ingested docs' tokens, in doc-id
+        order. Bit-packing concatenates per doc, so this is bit-identical
+        to re-packing the grown corpus from scratch; the cached uint32
+        re-view is invalidated."""
+        if not bow_embs:
+            return
+        add = pack_bits(list(bow_embs), dtype=str(self.packed.dtype))
+        self.packed = np.concatenate([self.packed, add.packed], axis=0)
+        self.starts = np.concatenate(
+            [self.starts, add.starts[1:] + self.starts[-1]])
+        self._lanes32 = None
+
     def gather(self, ids, t_max: int):
         """Padded uint32-lane gather: (len(ids), t_max, W32) + lengths."""
         ids = np.asarray(ids, np.int64)

@@ -1,0 +1,421 @@
+"""Live index mutation: online ingest/delete, tombstone semantics, segment
+compaction, shard rebalancing, replica failure recovery, persistence, and the
+no-mutation bitwise-identity guarantee (``repro.storage.mutation``)."""
+import functools
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.ivf import build_ivf, ivf_add
+from repro.data.synthetic import make_corpus
+from repro.pipeline import (MutationConfig, Pipeline, PipelineConfig,
+                            available_backends)
+from repro.storage.layout import pack
+from repro.storage.mutation import MutableStorageCluster
+from repro.storage.segments import concat_layouts, merge_rows
+
+from _hypothesis_compat import given, settings, st
+
+
+@functools.lru_cache(maxsize=1)
+def corpus():
+    return make_corpus(n_docs=400, n_queries=8, n_clusters=8, mean_len=12,
+                       max_len=24, seed=3)
+
+
+def base_cfg(mode="espn", *, mutation=False, cluster=False, **mut_kw):
+    cfg = PipelineConfig()
+    cfg.index.ncells = 16
+    cfg.retrieval.mode = mode
+    cfg.retrieval.nprobe = 8
+    cfg.retrieval.k = 10
+    cfg.retrieval.k_candidates = 30
+    cfg.mutation = MutationConfig(enabled=mutation, **mut_kw)
+    if cluster:
+        cfg.cluster.n_shards = 2
+        cfg.cluster.replication = 2
+        cfg.cluster.hedge_quantile = 0.9
+        cfg.cluster.jitter_sigma = 0.3
+        cfg.cluster.replica_mults = [1.0, 1.3]
+    return cfg
+
+
+def new_docs(rng, pipe, n):
+    cls = rng.standard_normal((n, pipe.layout.d_cls)).astype(np.float32)
+    cls /= np.linalg.norm(cls, axis=1, keepdims=True)
+    bows = []
+    for _ in range(n):
+        b = rng.standard_normal((int(rng.integers(3, 10)),
+                                 pipe.layout.d_bow)).astype(np.float32)
+        bows.append(b / np.linalg.norm(b, axis=1, keepdims=True))
+    return cls, bows
+
+
+# -- no-mutation identity ----------------------------------------------------
+
+@pytest.mark.parametrize("mode", sorted(available_backends()))
+def test_unmutated_mutable_cluster_is_bitwise_identical(mode):
+    """The mutable tier with zero mutations must reproduce the immutable
+    path bit for bit — ids, scores, device time, and bytes — for every
+    backend, on both the trivial and the sharded/hedged cluster config."""
+    for cluster in (False, True):
+        a = Pipeline.build(base_cfg(mode, cluster=cluster), corpus=corpus())
+        b = Pipeline.build(base_cfg(mode, mutation=True, cluster=cluster),
+                           corpus=corpus())
+        assert isinstance(b.tier, MutableStorageCluster)
+        ra, rb = a.search(), b.search()
+        for qa, qb in zip(ra.ranked, rb.ranked):
+            np.testing.assert_array_equal(qa.doc_ids, qb.doc_ids)
+            np.testing.assert_array_equal(qa.scores, qb.scores)
+        assert ra.breakdown.total_s == rb.breakdown.total_s
+        assert ra.breakdown.bytes_read == rb.breakdown.bytes_read
+        a.close()
+        b.close()
+
+
+# -- ingest ------------------------------------------------------------------
+
+def test_ingest_makes_docs_retrievable():
+    pipe = Pipeline.build(base_cfg(mutation=True), corpus=corpus())
+    rng = np.random.default_rng(1)
+    cls, bows = new_docs(rng, pipe, 3)
+    gids = pipe.ingest(cls, bows)
+    np.testing.assert_array_equal(gids, [400, 401, 402])
+    assert pipe.layout.n_docs == 403
+    # query each new doc with its own embeddings: it must rank first
+    q_bow = np.zeros((3, 24, pipe.layout.d_bow), np.float32)
+    for i, b in enumerate(bows):
+        q_bow[i, :len(b)] = b
+    q_lens = np.array([len(b) for b in bows], np.int32)
+    resp = pipe.search(cls, q_bow, q_lens)
+    for i, r in enumerate(resp.ranked):
+        assert r.doc_ids[0] == gids[i]
+    st_ = pipe.tier.stats
+    assert st_["ingests"] == 1 and st_["ingested_docs"] == 3
+    assert st_["ingest_bytes"] > 0 and st_["ingest_seconds"] > 0
+    pipe.close()
+
+
+def test_ingest_side_tiers_match_rebuild():
+    """Incrementally appended bit/FDE tables must equal a from-scratch
+    rebuild of the grown layout (the storage-quantized rows, not fp32)."""
+    from repro.core.fde import fde_from_layout
+    from repro.storage.layout import bits_from_layout
+
+    for mode in ("bitvec", "fde"):
+        pipe = Pipeline.build(base_cfg(mode, mutation=True), corpus=corpus())
+        rng = np.random.default_rng(2)
+        pipe.ingest(*new_docs(rng, pipe, 5))
+        if mode == "bitvec":
+            rebuilt = bits_from_layout(pipe.layout,
+                                       dtype=str(pipe.tier.bits.packed.dtype))
+            np.testing.assert_array_equal(pipe.tier.bits.packed,
+                                          rebuilt.packed)
+            np.testing.assert_array_equal(pipe.tier.bits.starts,
+                                          rebuilt.starts)
+        else:
+            rebuilt = fde_from_layout(pipe.layout, pipe.tier.fde.cfg,
+                                      dtype=str(pipe.tier.fde.vecs.dtype))
+            np.testing.assert_array_equal(pipe.tier.fde.vecs, rebuilt.vecs)
+        pipe.close()
+
+
+# -- delete / tombstones -----------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["espn", "bitvec", "fde"])
+def test_deleted_docs_never_surface(mode):
+    cfg = base_cfg(mode, mutation=True, cluster=True)
+    cfg.cluster.arena_cache_mb = 4       # deletion must also purge the cache
+    pipe = Pipeline.build(cfg, corpus=corpus())
+    r0 = pipe.search()
+    # the current top hit of every query, warmed into the arena cache above
+    victims = sorted({int(r.doc_ids[0]) for r in r0.ranked})
+    assert pipe.delete(victims) == len(victims)
+    for r in pipe.search().ranked:
+        assert not set(r.doc_ids.tolist()) & set(victims)
+        assert (r.doc_ids >= 0).all()
+    # double delete and out-of-range ids are rejected
+    with pytest.raises(ValueError):
+        pipe.delete([victims[0]])
+    with pytest.raises(ValueError):
+        pipe.delete([10**6])
+    assert pipe.tier.stats["tombstones"] == len(victims)
+    pipe.close()
+
+
+# -- compaction --------------------------------------------------------------
+
+def test_compaction_preserves_results_and_reclaims_blocks():
+    pipe = Pipeline.build(base_cfg(mutation=True, cluster=True),
+                          corpus=corpus())
+    rng = np.random.default_rng(4)
+    for _ in range(3):                   # three segments of churn
+        pipe.ingest(*new_docs(rng, pipe, 4))
+    pipe.delete(rng.choice(400, 25, replace=False))
+    before = pipe.search()
+    phys_before = sum(pipe.tier._shard_disk_blocks(s)
+                      for s in range(pipe.tier.n_shards))
+    rep = pipe.compact()
+    assert rep["segments_merged"] == 3
+    assert rep["blocks_reclaimed"] > 0
+    assert all(not segs for segs in pipe.tier.segments)
+    phys_after = sum(pipe.tier._shard_disk_blocks(s)
+                     for s in range(pipe.tier.n_shards))
+    assert phys_after == phys_before - rep["blocks_reclaimed"]
+    after = pipe.search()
+    for ra, rb in zip(before.ranked, after.ranked):
+        np.testing.assert_array_equal(ra.doc_ids, rb.doc_ids)
+        np.testing.assert_array_equal(ra.scores, rb.scores)
+    assert pipe.tier.stats["compactions"] == pipe.tier.n_shards
+    assert pipe.tier.stats["compaction_bytes"] > 0
+    pipe.close()
+
+
+def test_segment_reads_cost_more_than_compacted_reads():
+    """Read amplification: a batch spanning k segments pays k extra device
+    transactions (base latency each); compaction removes them."""
+    c = corpus()
+    layout = pack(c.cls, c.bow)
+    tier = MutableStorageCluster(layout, n_shards=1, coalesce=False)
+    rng = np.random.default_rng(5)
+    gid_lists = []
+    for _ in range(6):
+        cls = rng.standard_normal((3, layout.d_cls)).astype(np.float32)
+        bows = [rng.standard_normal((4, layout.d_bow)).astype(np.float32)
+                for _ in range(3)]
+        gid_lists.append(tier.ingest(cls, bows))
+    ids = np.concatenate([g[:1] for g in gid_lists])   # one doc per segment
+    r_pre = tier.read(ids)
+    tier.compact()
+    r_post = tier.read(ids)
+    np.testing.assert_array_equal(r_pre.bow, r_post.bow)  # same bytes...
+    assert r_post.sim_seconds < r_pre.sim_seconds         # ...fewer seeks
+    # six segment transactions collapse into one base read
+    base_lat = tier.shards[0].spec.base_latency_s
+    assert r_pre.sim_seconds - r_post.sim_seconds >= 4 * base_lat
+    tier.close()
+
+
+def test_background_compactor_runs():
+    c = corpus()
+    layout = pack(c.cls, c.bow)
+    tier = MutableStorageCluster(layout, n_shards=1,
+                                 compact_interval_s=0.02)
+    rng = np.random.default_rng(6)
+    cls = rng.standard_normal((2, layout.d_cls)).astype(np.float32)
+    bows = [rng.standard_normal((4, layout.d_bow)).astype(np.float32)
+            for _ in range(2)]
+    tier.ingest(cls, bows)
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline and not tier.stats["compactions"]:
+        time.sleep(0.02)
+    assert tier.stats["compactions"] > 0
+    assert not tier.segments[0]
+    tier.close()                         # joins the daemon
+
+
+# -- rebalancing -------------------------------------------------------------
+
+def test_rebalance_moves_mass_and_bills_both_sides():
+    pipe = Pipeline.build(base_cfg(mutation=True, cluster=True),
+                          corpus=corpus())
+    t = pipe.tier
+    # skew shard 0 by tombstoning half of its docs
+    on0 = np.flatnonzero(t.alive & (t.shard_of == 0))
+    pipe.delete(on0[: len(on0) // 2])
+    mass0 = t._live_block_mass()
+    skew0 = mass0.max() - mass0.min()
+    rep = pipe.rebalance()
+    assert rep["moved_docs"] > 0
+    assert rep["src"] != rep["dst"]
+    mass1 = t._live_block_mass()
+    assert mass1.max() - mass1.min() < skew0
+    assert int(mass1.sum()) == int(mass0.sum())          # nothing lost
+    assert t.stats["migration_bytes"] == \
+        2 * rep["moved_blocks"] * t.layout.block
+    assert t.stats["migration_seconds"] > 0
+    # results unchanged by data placement
+    r = pipe.search()
+    assert all(len(q.doc_ids) > 0 for q in r.ranked)
+    pipe.close()
+
+
+# -- replica failure / recovery ----------------------------------------------
+
+def test_replica_kill_is_absorbed_and_recovery_is_billed():
+    healthy = Pipeline.build(base_cfg(mutation=True, cluster=True),
+                             corpus=corpus())
+    degraded = Pipeline.build(base_cfg(mutation=True, cluster=True),
+                              corpus=corpus())
+    degraded.kill_replica(0, 0)
+    rh, rd = healthy.search(), degraded.search()
+    for qa, qb in zip(rh.ranked, rd.ranked):       # data path is unaffected
+        np.testing.assert_array_equal(qa.doc_ids, qb.doc_ids)
+        np.testing.assert_array_equal(qa.scores, qb.scores)
+    st_ = degraded.tier.stats
+    assert st_["replicas_killed"] == 1
+    assert st_["failovers"] > 0
+    with pytest.raises(RuntimeError):              # can't kill the last copy
+        degraded.kill_replica(0, 1)
+    rep = degraded.recover_replica(0, 0)
+    nb = degraded.tier._shard_disk_blocks(0)
+    assert rep["bytes"] == nb * degraded.layout.block
+    assert st_["recovery_bytes"] == rep["bytes"]
+    assert st_["recovery_seconds"] == rep["seconds"] > 0
+    assert st_["replicas_recovered"] == 1
+    with pytest.raises(ValueError):                # already alive
+        degraded.recover_replica(0, 0)
+    healthy.close()
+    degraded.close()
+
+
+# -- persistence -------------------------------------------------------------
+
+def test_save_load_mutable_pipeline_mid_churn(tmp_path):
+    pipe = Pipeline.build(base_cfg(mutation=True, cluster=True),
+                          corpus=corpus())
+    rng = np.random.default_rng(8)
+    gids = pipe.ingest(*new_docs(rng, pipe, 6))
+    pipe.delete(np.concatenate([gids[:2], [0, 7]]))
+    pipe.compact(shard=0)                # mixed state: shard 1 keeps segments
+    out = pipe.save(str(tmp_path / "art"))
+    assert os.path.isdir(os.path.join(out, "mutation"))
+    assert not os.path.isdir(os.path.join(out, "shards"))
+    pipe2 = Pipeline.load(out)
+    assert isinstance(pipe2.tier, MutableStorageCluster)
+    np.testing.assert_array_equal(pipe2.tier.alive, pipe.tier.alive)
+    assert [len(s) for s in pipe2.tier.segments] == \
+        [len(s) for s in pipe.tier.segments]
+    ra, rb = pipe.search(), pipe2.search()
+    for qa, qb in zip(ra.ranked, rb.ranked):
+        np.testing.assert_array_equal(qa.doc_ids, qb.doc_ids)
+        np.testing.assert_array_equal(qa.scores, qb.scores)
+    # the restored stack keeps mutating
+    pipe2.ingest(*new_docs(rng, pipe2, 2))
+    pipe.close()
+    pipe2.close()
+
+
+def test_with_mode_carries_mutation_state():
+    pipe = Pipeline.build(base_cfg(mutation=True, cluster=True),
+                          corpus=corpus())
+    rng = np.random.default_rng(9)
+    gids = pipe.ingest(*new_docs(rng, pipe, 4))
+    pipe.delete(gids[:1])
+    other = pipe.with_mode("bitvec")
+    assert isinstance(other.tier, MutableStorageCluster)
+    np.testing.assert_array_equal(other.tier.alive, pipe.tier.alive)
+    for r in other.search().ranked:
+        assert int(gids[0]) not in r.doc_ids.tolist()
+    other.close()
+    pipe.close()
+
+
+def test_mutation_config_roundtrips():
+    cfg = base_cfg(mutation=True, auto_compact_segments=4,
+                   rebalance_skew=1.5)
+    d = cfg.to_dict()
+    cfg2 = PipelineConfig.from_dict(d)
+    assert cfg2.mutation == cfg.mutation
+    assert cfg2.mutation.active()
+    import argparse
+    ap = PipelineConfig.add_cli_args(argparse.ArgumentParser())
+    cfg3 = PipelineConfig.from_cli(ap.parse_args([
+        "--mutation", "--auto-compact-segments", "4",
+        "--auto-compact-dead-frac", "0.3", "--compact-interval-s", "0.5",
+        "--rebalance-skew", "1.5"]))
+    m = cfg3.mutation
+    assert m.enabled and m.auto_compact_segments == 4
+    assert m.auto_compact_dead_frac == 0.3
+    assert m.compact_interval_s == 0.5 and m.rebalance_skew == 1.5
+    assert not PipelineConfig().mutation.active()
+
+
+# -- segment plumbing --------------------------------------------------------
+
+def test_concat_and_merge_round_trip_rows():
+    c = corpus()
+    layout = pack(c.cls[:50], c.bow[:50])
+    a = pack(c.cls[:20], c.bow[:20])
+    b = pack(c.cls[20:50], c.bow[20:50])
+    cat = concat_layouts([a, b])
+    assert cat.n_docs == 50
+    from repro.storage.layout import unpack_doc
+    for i in (0, 19, 20, 49):
+        cls_w, bow_w = unpack_doc(layout, i)
+        cls_g, bow_g = unpack_doc(cat, i)
+        np.testing.assert_array_equal(cls_w, cls_g)
+        np.testing.assert_array_equal(bow_w, bow_g)
+    merged, gids = merge_rows(
+        [(a, np.array([3, 5]), np.array([3, 5])),
+         (b, np.array([0, 9]), np.array([20, 29]))], like=layout)
+    np.testing.assert_array_equal(gids, [3, 5, 20, 29])
+    for row, g in enumerate(gids):
+        np.testing.assert_array_equal(unpack_doc(merged, row)[1],
+                                      unpack_doc(layout, int(g))[1])
+
+
+# -- churn property test: incremental == rebuild oracle ----------------------
+
+def _rebuild_oracle(mode, all_cls, all_bows, ingest_batches, alive):
+    """The from-scratch stack: pack every doc ever seen, rebuild the side
+    tiers from the grown layout, replay the IVF as build(original) +
+    ivf_add(each ingest batch in order), and apply the same tombstones.
+    An immutable tier masks the dead via the ``alive`` attribute hook."""
+    cfg = base_cfg(mode)
+    n0 = len(all_cls) - sum(len(b[0]) for b in ingest_batches)
+    index = build_ivf(all_cls[:n0], ncells=16, iters=cfg.index.iters,
+                      quant=cfg.index.quant,
+                      train_sample=cfg.index.train_sample)
+    start = n0
+    for cls_b, _ in ingest_batches:
+        ivf_add(index, cls_b, np.arange(start, start + len(cls_b)))
+        start += len(cls_b)
+    layout = pack(all_cls, all_bows, dtype=np.dtype(cfg.storage.dtype),
+                  block=cfg.storage.block)
+    oracle = Pipeline.from_artifacts(cfg, index=index, layout=layout)
+    oracle.tier.alive = alive.copy()
+    return oracle
+
+
+@settings(max_examples=6)
+@given(seed=st.integers(0, 10_000),
+       mode=st.sampled_from(["espn", "bitvec", "fde"]),
+       compact_when=st.sampled_from(["never", "mid", "end"]))
+def test_churn_matches_rebuild_oracle(seed, mode, compact_when):
+    """Any interleaving of ingests, deletes, and compactions must rank
+    exactly like a stack rebuilt from scratch over the surviving docs."""
+    c = corpus()
+    rng = np.random.default_rng(seed)
+    pipe = Pipeline.build(base_cfg(mode, mutation=True, cluster=True),
+                          corpus=c)
+    batches = []
+    deleted: set[int] = set()
+    for step in range(2):
+        docs = new_docs(rng, pipe, int(rng.integers(2, 6)))
+        batches.append(docs)
+        gids = pipe.ingest(*docs)
+        kill = rng.random(len(gids)) < 0.3       # some ingested docs die too
+        dead = set(gids[kill].tolist()) | set(
+            rng.choice(400, int(rng.integers(1, 20)),
+                       replace=False).tolist())
+        dead -= deleted                          # never tombstone twice
+        deleted |= dead
+        pipe.delete(sorted(dead))
+        if compact_when == "mid" and step == 0:
+            pipe.compact()
+    if compact_when == "end":
+        pipe.compact()
+    all_cls = np.concatenate([c.cls] + [b[0] for b in batches])
+    all_bows = list(c.bow) + [bw for b in batches for bw in b[1]]
+    oracle = _rebuild_oracle(mode, all_cls, all_bows, batches,
+                             pipe.tier.alive)
+    q = (c.queries_cls, c.queries_bow, c.query_lens)
+    ra, rb = pipe.search(*q), oracle.search(*q)
+    for qa, qb in zip(ra.ranked, rb.ranked):
+        np.testing.assert_array_equal(qa.doc_ids, qb.doc_ids)
+        np.testing.assert_array_equal(qa.scores, qb.scores)
+    pipe.close()
+    oracle.close()

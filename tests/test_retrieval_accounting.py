@@ -170,3 +170,60 @@ def test_latency_accounting_invariants(base, mode):
     assert (pipe.tier.fde is not None) == cls_.needs_fde_table
     if pipe is not base:
         pipe.close()
+
+
+# -- the same invariants on a mutated (segmented + tombstoned) tier ----------
+
+@pytest.fixture(scope="module")
+def churned(small_corpus):
+    """A mutable pipeline mid-churn: two ingest segments live, 40 docs
+    tombstoned, nothing compacted — the worst case for accounting."""
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64),
+        retrieval=RetrievalConfig(mode="espn", nprobe=16, k_candidates=50,
+                                  prefetch_step=0.3))
+    cfg.index.ncells = 32
+    cfg.mutation.enabled = True
+    pipe = Pipeline.build(cfg, corpus=small_corpus)
+    rng = np.random.default_rng(11)
+    for _ in range(2):
+        cls = rng.standard_normal((12, pipe.layout.d_cls)).astype(np.float32)
+        cls /= np.linalg.norm(cls, axis=1, keepdims=True)
+        bows = [rng.standard_normal((int(rng.integers(4, 12)),
+                                     pipe.layout.d_bow)).astype(np.float32)
+                for _ in range(12)]
+        pipe.ingest(cls, bows)
+    pipe.delete(rng.choice(small_corpus.n_docs, 40, replace=False))
+    yield pipe
+    pipe.close()
+
+
+@pytest.mark.parametrize("mode", sorted(available_backends()))
+def test_segment_accounting_invariants(churned, mode):
+    """Segment reads (extra device transactions) and tombstone masking must
+    not break the latency-sum, byte-billing, or request-count contracts of
+    any backend — and dead ids must never reach a result list."""
+    pipe = churned if mode == "espn" else churned.with_mode(mode)
+    c = pipe.corpus
+    before = dict(pipe.tier.stats)
+    resp = pipe.search(c.queries_cls[:6], c.queries_bow[:6], c.query_lens[:6])
+    bd = resp.breakdown
+    assert bd.total_s == pytest.approx(
+        bd.encode_s + bd.ann_s + bd.critical_io_s + bd.rerank_s + 0.2e-3)
+    assert bd.dedup_bytes_saved >= 0
+    assert bd.bytes_read + bd.dedup_bytes_saved == sum(
+        r.bow_bytes_read for r in resp.ranked)
+    reranked = sum(r.n_reranked for r in resp.ranked)
+    requested = pipe.tier.stats["doc_requests"] - before["doc_requests"]
+    docs_read = pipe.tier.stats["docs"] - before["docs"]
+    assert docs_read <= requested
+    if mode == "espn":
+        assert requested >= reranked
+    else:
+        assert requested == reranked
+    alive = pipe.tier.alive
+    for r in resp.ranked:
+        assert (r.doc_ids >= 0).all()
+        assert alive[r.doc_ids].all()
+    if pipe is not churned:
+        pipe.close()

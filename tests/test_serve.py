@@ -63,5 +63,76 @@ def test_retrieval_server_end_to_end(small_corpus):
     s = srv.stats.summary()
     assert s["n"] == 12
     assert s["p99_ms"] > 0
+    # async submitters are measured too: the wall clock is recorded by the
+    # batcher's completion hook, not by blocking query() callers
+    assert len(srv.stats.latencies_ms) == 12
+    assert s["p99_wall_ms"] >= s["p50_wall_ms"] > 0
+    assert "mutation" not in s                   # nothing mutated: no noise
+    srv.shutdown()
+    pipe.close()
+
+
+def test_batcher_on_complete_runs_before_done():
+    seen = []
+
+    def handler(batch):
+        for r in batch:
+            r.result = r.payload
+
+    b = ContinuousBatcher(handler, BatchPolicy(max_batch=2, max_wait_s=0.01),
+                          on_complete=lambda r: seen.append(r.rid)).start()
+    reqs = [Request(i, i) for i in range(4)]
+    for r in reqs:
+        b.submit(r)
+    for r in reqs:
+        assert r.done.wait(5)
+        assert r.rid in seen                     # recorded before done fired
+        assert r.latency_s > 0
+    b.stop()
+    assert sorted(seen) == [0, 1, 2, 3]
+
+
+def test_server_surfaces_mutation_and_recovery_counters(small_corpus):
+    from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                                StorageConfig)
+
+    c = small_corpus
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64),
+        retrieval=RetrievalConfig(mode="espn", nprobe=16, k_candidates=50,
+                                  prefetch_step=0.3))
+    cfg.index.ncells = 32
+    cfg.index.iters = 4
+    cfg.mutation.enabled = True
+    cfg.cluster.n_shards = 2
+    cfg.cluster.replication = 2
+    pipe = Pipeline.build(cfg, corpus=c)
+    srv = pipe.serve(policy=BatchPolicy(max_batch=8, max_wait_s=0.02))
+    pipe.kill_replica(0, 1)              # counters measure from server start
+    half = [srv.query_async(c.queries_cls[i], c.queries_bow[i],
+                            int(c.query_lens[i])) for i in range(6)]
+    for r in half:
+        assert r.done.wait(30)
+    # mutate and recover mid-serve: the deltas land in the serve window
+    rng = np.random.default_rng(5)
+    cls = rng.standard_normal((3, pipe.layout.d_cls)).astype(np.float32)
+    bows = [rng.standard_normal((5, pipe.layout.d_bow)).astype(np.float32)
+            for _ in range(3)]
+    gids = pipe.ingest(cls, bows)
+    pipe.delete(gids[:1])
+    pipe.compact()
+    pipe.recover_replica(0, 1)
+    rest = [srv.query_async(c.queries_cls[i], c.queries_bow[i],
+                            int(c.query_lens[i])) for i in range(6, 12)]
+    for r in rest:
+        assert r.done.wait(30)
+    s = srv.stats.summary()
+    m = s["mutation"]
+    assert m["ingests"] == 1 and m["ingested_docs"] == 3
+    assert m["deletes"] == 1 and m["tombstones"] == 1
+    assert m["compactions"] == 2                 # one per shard
+    assert m["replicas_killed"] == 1 and m["replicas_recovered"] == 1
+    assert m["recovery_bytes"] > 0
+    assert m["failovers"] > 0                    # first half ran degraded
     srv.shutdown()
     pipe.close()
