@@ -1,0 +1,244 @@
+"""SLO-aware serving: open-loop workload replay vs scheduling policy, plus
+autoscaler failure recovery on the simulated device clock.
+
+Two sections, both in ``BENCH_serve_slo.json``:
+
+* **policy sweep** — the workload generator (``repro.serve.workload``)
+  replays Zipf-affinity traffic against the full serving stack (gds backend
+  over a 2-shard replicated cluster) at arrival points calibrated from the
+  measured service capacity: a ``poisson`` point under capacity and a
+  ``bursty`` multi-tenant point well over it. Each point runs three
+  policies — ``static`` (FIFO ``BatchPolicy``), ``deadline`` (EDF +
+  admission shedding ``SLOPolicy``) and ``deadline+autoscaler`` — and
+  records offered/served/shed/violations and ``goodput_under_slo``. The CI
+  gate asserts the deadline-aware policy strictly beats static goodput at
+  the bursty overload point and that sheds are never counted as served.
+
+* **autoscaler recovery** — a replicated cluster (fast primary, slow
+  secondary) is driven on the *simulated* clock; the fast replica of shard
+  0 is killed mid-trace, p99 shoots past the SLO, and the feedback
+  controller must bring it back by reviving the replica (PR-6 recovery
+  plumbing). The gate asserts p99(after kill) > SLO >= p99(final window)
+  and that a ``recover_replica`` action fired.
+
+    REPRO_BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run --only serve-slo
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+
+# -- shared stack -------------------------------------------------------------
+def _build_pipeline(corpus, index, layout):
+    from repro.pipeline import Pipeline, PipelineConfig
+    from repro.pipeline.config import ClusterConfig
+
+    cfg = PipelineConfig()
+    cfg.retrieval.mode = "gds"
+    cfg.retrieval.nprobe = 8
+    cfg.retrieval.k_candidates = 50
+    cfg.storage.t_max = 64
+    cfg.cluster = ClusterConfig(n_shards=2, replication=2,
+                                hedge_quantile=0.9, jitter_sigma=0.25,
+                                replica_mults=[1.0, 3.0], arena_cache_mb=8.0)
+    return Pipeline.from_artifacts(cfg, index=index, layout=layout,
+                                   corpus=corpus)
+
+
+def _calibrate(backend, corpus, batch: int) -> dict:
+    """Measure handler service time (wall) and per-query simulated device
+    share at batch sizes 1 and ``batch`` — seeds every server's ServiceModel
+    identically and fixes the sweep's operating points."""
+    out = {"obs": []}
+    for b in (1, batch):
+        wall = sim = 0.0
+        for _ in range(2):                      # first pass warms caches/JIT
+            t0 = time.monotonic()
+            resp = backend.query_batch(corpus.queries_cls[:b],
+                                       corpus.queries_bow[:b],
+                                       corpus.query_lens[:b])
+            wall = time.monotonic() - t0
+            bd = resp.breakdown
+            sim = bd.total_s / b + bd.encode_s * (b - 1) / b
+        out["obs"].append((b, wall))
+        out[b] = {"wall_s": wall, "sim_ms_per_q": sim * 1e3}
+    svc = out[batch]
+    out["capacity_qps"] = batch / max(svc["wall_s"], 1e-6)
+    # a lone request's end-to-end SLO latency: one batch of wall + its sim
+    # share; the SLO grants 3x that to absorb normal queueing
+    out["base_ms"] = svc["wall_s"] * 1e3 + svc["sim_ms_per_q"]
+    out["slo_ms"] = max(3.0 * out["base_ms"], 10.0)
+    return out
+
+
+def _make_server(backend, policy_name: str, batch: int, slo_ms: float,
+                 calib: dict, tier=None):
+    from repro.serve.engine import RetrievalServer
+    from repro.serve.scheduler import BatchPolicy
+    from repro.serve.slo import SLOPolicy
+
+    scaler = None
+    if policy_name == "static":
+        policy = BatchPolicy(max_batch=batch, max_wait_s=0.004)
+    else:
+        policy = SLOPolicy(max_batch=batch, max_wait_s=0.004, slo_ms=slo_ms)
+        if policy_name == "deadline+autoscaler":
+            from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
+            scaler = Autoscaler(tier, AutoscalerConfig(
+                slo_ms=slo_ms, window=32, min_fill=16, interval_s=0.2))
+    srv = RetrievalServer(backend, policy=policy, autoscaler=scaler)
+    for b, secs in calib["obs"]:     # pre-warm the service-time model so
+        srv.batcher.service.observe(b, secs)  # admission forecasts work
+    return srv
+
+
+def _run_point(pipe, corpus, process: str, rate_qps: float, slo_ms: float,
+               batch: int, calib: dict, seed: int) -> list[dict]:
+    from repro.serve import workload as W
+
+    duration = min(1.5, max(0.5, 600.0 / max(rate_qps, 1.0)))
+    tenants = []
+    if process == "bursty":          # multi-tenant mix at the overload point
+        tenants = [W.TenantSpec("online", 0.7 * rate_qps, slo_ms),
+                   W.TenantSpec("batch", 0.3 * rate_qps, 3.0 * slo_ms)]
+    cfg = W.WorkloadConfig(duration_s=duration, process=process,
+                           rate_qps=rate_qps, slo_ms=slo_ms, seed=seed)
+    cfg.tenants = tenants
+    w = W.generate(cfg, corpus)
+    rows = []
+    for policy_name in ("static", "deadline", "deadline+autoscaler"):
+        srv = _make_server(pipe.backend, policy_name, batch, slo_ms, calib,
+                           tier=pipe.tier)
+        reqs = W.replay(srv, w)
+        W.drain(reqs, timeout_s=60.0)
+        srv.shutdown()
+        s = srv.stats.summary()
+        slo = s.get("slo", {})
+        rows.append({
+            "process": process, "policy": policy_name,
+            "rate_qps": round(rate_qps, 1), "arrivals": w.n,
+            "duration_s": round(duration, 3),
+            "offered": slo.get("offered", 0),
+            "served": s["n"],
+            "served_in_slo": slo.get("served_in_slo", 0),
+            "violations": slo.get("violations", 0),
+            "shed": slo.get("shed", 0),
+            "timeouts": slo.get("timeouts", 0),
+            "goodput_under_slo": slo.get("goodput_under_slo", 0.0),
+            "slo_p50_ms": slo.get("slo_p50_ms", 0.0),
+            "slo_p99_ms": slo.get("slo_p99_ms", 0.0),
+            "mean_batch": s["mean_batch"],
+            "autoscaler_actions": len(srv.autoscaler.actions)
+            if srv.autoscaler else 0,
+            "tenants": slo.get("tenants", {}),
+        })
+        common.row(f"serve_{process}_{policy_name}",
+                   rows[-1]["slo_p99_ms"] * 1e3,
+                   f"goodput={rows[-1]['goodput_under_slo']} "
+                   f"shed={rows[-1]['shed']} "
+                   f"viol={rows[-1]['violations']}")
+    return rows
+
+
+# -- autoscaler failure recovery (simulated clock) ----------------------------
+def _recovery_scenario(layout) -> dict:
+    from benchmarks.bench_cluster_scaling import _trace
+    from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
+    from repro.storage.cluster import StorageCluster
+
+    # fast replica 0, much slower replica 1: hedging keeps the healthy p99
+    # near the fast clock, so losing replica 0 (every shard-0 read now rides
+    # the 5x peer, and there is no one left to hedge to) is a sharp cliff
+    cluster = StorageCluster(
+        layout, n_shards=2, replication=2, replica_mults=[1.0, 5.0],
+        hedge_quantile=0.9, jitter_sigma=0.15, seed=0,
+        arena_cache_bytes=0, t_max=64)
+    n = 32 if common.FAST else 96
+    trace = _trace(layout.n_docs, 3 * n, batch=8, k=24, seed=11)
+
+    def run(batches):
+        lats = []
+        for lists in batches:
+            res = cluster.read_batch(lists)
+            res.wait_all()
+            lats.append(res.sim_seconds * 1e3)
+        return lats
+
+    base = run(trace[:n])
+    p99_base = float(np.percentile(base, 99))
+    slo_ms = 2.0 * p99_base           # between healthy and failed-over p99
+
+    scaler = Autoscaler(cluster, AutoscalerConfig(
+        slo_ms=slo_ms, window=12, min_fill=6, interval_s=0.0))
+    cluster.kill_replica(0, 0)        # lose the FAST replica of shard 0
+    sim_t = 0.0
+    degraded, recovered = [], []
+    for lists in trace[n:]:
+        res = cluster.read_batch(lists)
+        res.wait_all()
+        ms = res.sim_seconds * 1e3
+        sim_t += res.sim_seconds
+        healed = any(a["action"] == "recover_replica" for a in scaler.actions)
+        (recovered if healed else degraded).append(ms)
+        scaler.observe(ms)
+        scaler.maybe_step(now=sim_t)  # controller runs on the simulated clock
+        if len(recovered) >= n:
+            break
+    st = dict(cluster.stats)
+    cluster.close()
+    tail = recovered[-12:] if recovered else []
+    out = {
+        "slo_ms": round(slo_ms, 4),
+        "p99_baseline_ms": round(p99_base, 4),
+        "p99_after_kill_ms": round(float(np.percentile(degraded, 99)), 4)
+        if degraded else 0.0,
+        "p99_final_ms": round(float(np.percentile(tail, 99)), 4)
+        if tail else float("inf"),
+        "batches_to_recover": len(degraded),
+        "actions": scaler.actions,
+        "recovery_bytes": st["recovery_bytes"],
+        "replicas_recovered": st["replicas_recovered"],
+    }
+    common.row("serve_autoscaler_recovery", out["p99_after_kill_ms"] * 1e3,
+               f"slo={out['slo_ms']}ms kill_p99={out['p99_after_kill_ms']}ms "
+               f"final_p99={out['p99_final_ms']}ms "
+               f"recover_in={out['batches_to_recover']}")
+    return out
+
+
+def main() -> None:
+    corpus = common.scoring_corpus()
+    index = common.scoring_index(corpus)
+    layout = common.scoring_layout(corpus)
+    pipe = _build_pipeline(corpus, index, layout)
+    batch = 8
+    calib = _calibrate(pipe.backend, corpus, batch)
+    slo_ms = calib["slo_ms"]
+    cap = calib["capacity_qps"]
+    common.row("serve_calibration", calib["base_ms"] * 1e3,
+               f"capacity={cap:.0f}qps slo={slo_ms:.1f}ms")
+
+    sweep = []
+    sweep += _run_point(pipe, corpus, "poisson", 0.5 * cap, slo_ms, batch,
+                        calib, seed=5)
+    sweep += _run_point(pipe, corpus, "bursty", 1.5 * cap, slo_ms, batch,
+                        calib, seed=6)
+    pipe.close()
+
+    recovery = _recovery_scenario(layout)
+    common.emit_json("BENCH_serve_slo.json", {
+        "calibration": {"capacity_qps": round(cap, 1),
+                        "slo_ms": round(slo_ms, 3),
+                        "base_ms": round(calib["base_ms"], 3),
+                        "batch": batch},
+        "sweep": sweep,
+        "recovery": recovery,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Machine-checked assertions over the ``BENCH_*.json`` artifacts.
+
+One checker per artifact, runnable locally exactly as CI runs it:
+
+    REPRO_BENCH_SMOKE=1 python -m benchmarks.run --only serve-slo
+    python -m benchmarks.check_gates --only serve-slo
+
+``--only`` takes a substring of the gate name (batch-io | cluster |
+mutation | serve-slo); with no filter every gate whose artifact file is
+present runs, and it is an error if none is found. ``--dir`` points at the
+artifact directory (default: ``REPRO_BENCH_OUT_DIR`` or the working
+directory). A failed assertion exits non-zero with the offending row in the
+message — these are regression gates, not statistics: each one encodes an
+inequality the corresponding subsystem must keep true (coalescing never
+loses to serial I/O, hedging never loses the degraded p99, compaction claws
+back tail latency, deadline-aware scheduling beats FIFO goodput under
+overload).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GATES: dict[str, tuple[str, object]] = {}
+
+
+def gate(name: str, artifact: str):
+    def deco(fn):
+        GATES[name] = (artifact, fn)
+        return fn
+    return deco
+
+
+@gate("batch-io", "BENCH_batch_io.json")
+def check_batch_io(bench: dict) -> str:
+    """Coalesced batch reads: never slower than serial, identical rankings,
+    and real dedup savings on duplicate-heavy batches."""
+    sweep = bench["sweep"]
+    dup = [r for r in sweep if r["duplicate_heavy"]]
+    assert dup, "no duplicate-heavy rows in BENCH_batch_io.json"
+    for r in sweep:
+        assert r["rankings_equal"], r
+        assert r["coalesced"]["sim_seconds"] <= \
+            r["serial"]["sim_seconds"] + 1e-12, r
+    for r in dup:
+        assert r["coalesced"]["dedup_bytes_saved"] > 0, r
+    return (f"{len(sweep)} rows, best io_speedup "
+            f"{max(r['io_speedup'] for r in sweep):.2f}x")
+
+
+@gate("cluster", "BENCH_cluster.json")
+def check_cluster(bench: dict) -> str:
+    """Hedged reads beat unhedged p99 on the degraded-primary grid; the
+    cross-batch arena cache hits on the repeat-heavy trace."""
+    grid = bench["grid"]
+    by = {(r["shards"], r["replication"], r["hedge_quantile"]): r
+          for r in grid}
+    hedged = [r for r in grid if r["hedge_quantile"] > 0]
+    assert hedged, "no hedged rows in BENCH_cluster.json"
+    for r in hedged:
+        base = by[(r["shards"], r["replication"], 0.0)]
+        assert r["p99_ms"] <= base["p99_ms"] + 1e-9, (r, base)
+        assert r["hedge_wins"] > 0 and r["hedge_bytes"] > 0, r
+    assert all(r["cache_hit_rate"] > 0 for r in grid), grid
+    warm = [e for e in bench["e2e"] if e["pass"] == "warm"][0]
+    assert warm["cache_hits"] > 0, warm
+    return (f"{len(grid)} rows, hedged p99 "
+            f"{min(r['p99_ms'] for r in hedged):.3f}ms, cache hit rate "
+            f"{grid[0]['cache_hit_rate']:.2f}")
+
+
+@gate("mutation", "BENCH_mutation.json")
+def check_mutation(bench: dict) -> str:
+    """Compaction claws back tail latency and read amplification; a churned
+    index ranks identically to a from-scratch rebuild."""
+    io = bench["io"]
+    assert io["post_p99_ms"] <= io["pre_p99_ms"] + 1e-9, io
+    assert io["read_amp_pre_compaction"] > io["read_amp_post_compaction"], io
+    assert io["churn"]["blocks_reclaimed"] > 0, io["churn"]
+    assert io["recovery"]["recovery_bytes"] > 0, io["recovery"]
+    assert io["recovery"]["failovers"] > 0, io["recovery"]
+    p = bench["parity"]
+    assert p["rankings_identical"], p
+    assert p["mrr10_churned"] == p["mrr10_rebuild"], p
+    return (f"read amp {io['read_amp_pre_compaction']:.2f}x -> "
+            f"{io['read_amp_post_compaction']:.2f}x, p99 "
+            f"{io['pre_p99_ms']:.3f}ms -> {io['post_p99_ms']:.3f}ms")
+
+
+@gate("serve-slo", "BENCH_serve_slo.json")
+def check_serve_slo(bench: dict) -> str:
+    """Deadline-aware scheduling strictly beats static FIFO goodput at the
+    bursty overload point; sheds are never counted as served; the
+    autoscaler brings p99 back under the SLO after a replica kill."""
+    sweep = bench["sweep"]
+    by = {(r["process"], r["policy"]): r for r in sweep}
+    for r in sweep:
+        # terminal states are disjoint and complete: a shed request must
+        # never appear in the served/violation ledger
+        assert r["served_in_slo"] + r["violations"] + r["shed"] \
+            + r["timeouts"] == r["offered"], r
+        assert r["served"] == r["offered"] - r["shed"] - r["timeouts"], r
+        assert 0.0 <= r["goodput_under_slo"] <= 1.0, r
+    static = by[("bursty", "static")]
+    deadline = by[("bursty", "deadline")]
+    assert deadline["goodput_under_slo"] > static["goodput_under_slo"], \
+        (static, deadline)
+    rec = bench["recovery"]
+    assert rec["p99_after_kill_ms"] > rec["slo_ms"], rec
+    assert rec["p99_final_ms"] <= rec["slo_ms"], rec
+    assert any(a["action"] == "recover_replica" for a in rec["actions"]), rec
+    assert rec["recovery_bytes"] > 0, rec
+    return (f"bursty goodput {static['goodput_under_slo']:.3f} (static) -> "
+            f"{deadline['goodput_under_slo']:.3f} (deadline), recovery p99 "
+            f"{rec['p99_after_kill_ms']:.3f}ms -> "
+            f"{rec['p99_final_ms']:.3f}ms vs slo {rec['slo_ms']:.3f}ms")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="substring filter on the gate name "
+                         f"({' | '.join(GATES)})")
+    ap.add_argument("--dir", default=None,
+                    help="artifact directory (default: REPRO_BENCH_OUT_DIR "
+                         "or cwd)")
+    args = ap.parse_args(argv)
+    out_dir = args.dir or os.environ.get("REPRO_BENCH_OUT_DIR", ".")
+
+    selected = {n: v for n, v in GATES.items()
+                if args.only is None or args.only in n}
+    if not selected:
+        print(f"no gate matches --only {args.only!r}; "
+              f"known: {', '.join(GATES)}", file=sys.stderr)
+        return 2
+    ran = 0
+    for name, (artifact, fn) in selected.items():
+        path = os.path.join(out_dir, artifact)
+        if not os.path.exists(path):
+            if args.only is not None:
+                print(f"{name}: missing artifact {path} — run the "
+                      "matching `python -m benchmarks.run --only ...` "
+                      "suite first", file=sys.stderr)
+                return 2
+            continue                       # unfiltered run: skip absent suites
+        with open(path) as f:
+            bench = json.load(f)
+        detail = fn(bench)
+        ran += 1
+        print(f"{name} gate ok: {detail}")
+    if not ran:
+        print(f"no BENCH_*.json artifacts found under {out_dir!r}",
+              file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,7 @@ SUITES = [
     ("figs8-10:batch-scaling", "benchmarks.bench_batch_scaling"),
     ("beyond:cluster-scaling", "benchmarks.bench_cluster_scaling"),
     ("beyond:mutation-churn", "benchmarks.bench_mutation_churn"),
+    ("beyond:serve-slo", "benchmarks.bench_serve_slo"),
     ("kernels", "benchmarks.bench_kernels"),
     ("beyond:espn-embedding-offload", "benchmarks.bench_espn_embedding"),
     ("beyond:disk-ivf-full-offload", "benchmarks.bench_disk_ivf"),

@@ -38,15 +38,19 @@ def main():
     reqs = [server.query_async(c.queries_cls[i], c.queries_bow[i],
                                int(c.query_lens[i]))
             for i in range(cfg.corpus.n_queries)]
-    ranked = []
-    for r in reqs:
+    ranked, qrels = [], []
+    for i, r in enumerate(reqs):
         r.done.wait(60)
+        if r.shed:                     # admission control (--slo-ms): the
+            continue                   # request has no result by design
         ranked.append(r.result.doc_ids)
+        qrels.append(c.qrels[i])
     wall = time.time() - t0
 
     print(f"wall={wall:.2f}s  stats={server.stats.summary()}")
-    print(f"MRR@10={mrr_at_k(ranked, c.qrels, 10):.4f}  "
-          f"R@100={recall_at_k(ranked, c.qrels, 100):.4f}")
+    if ranked:
+        print(f"MRR@10={mrr_at_k(ranked, qrels, 10):.4f}  "
+              f"R@100={recall_at_k(ranked, qrels, 100):.4f}")
     server.shutdown()
     pipe.close()
 

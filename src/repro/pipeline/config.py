@@ -157,8 +157,24 @@ class MutationConfig:
 
 @dataclass
 class ServeConfig:
-    max_batch: int = 12
+    """Serving policy (``repro.serve``). ``slo_ms=0`` keeps the static
+    ``BatchPolicy``; setting it builds a deadline-aware ``SLOPolicy`` (EDF
+    dispatch, slack-aware early dispatch, queue-depth dynamic batch sizing,
+    load-shedding admission control), and ``autoscale`` attaches the
+    hedge/replica feedback controller (requires a cluster tier)."""
+    max_batch: int = 12                # dispatch cap (paper eq. 4 threshold)
     max_wait_s: float = 0.005
+    slo_ms: float = 0.0                # per-request deadline budget
+                                       # (0 = no SLO: static policy)
+    deadline_aware: bool = True        # EDF + slack-aware dispatch
+    dynamic_batch: bool = True         # size batches from queue depth
+    shed: bool = True                  # admission control (predicted misses
+                                       # rejected, counted as shed)
+    shed_margin: float = 1.0           # forecast multiplier before shedding
+    slack_frac: float = 0.25           # dispatch when slack < frac * budget
+    autoscale: bool = False            # p99-vs-SLO hedge/replica controller
+    autoscale_window: int = 64         # sliding latency window (requests)
+    autoscale_interval_s: float = 0.25  # min seconds between decisions
 
 
 @dataclass
@@ -294,6 +310,28 @@ class PipelineConfig:
                              "live block mass exceeds this (0 = off)")
         ap.add_argument("--max-batch", type=int, default=v.max_batch)
         ap.add_argument("--max-wait-s", type=float, default=v.max_wait_s)
+        ap.add_argument("--slo-ms", type=float, default=v.slo_ms,
+                        help="per-request deadline budget in ms (0 = no "
+                             "SLO: static batching policy)")
+        ap.add_argument("--static-serve", action="store_true",
+                        help="with --slo-ms: keep the static policy "
+                             "(no EDF / shedding / dynamic batch) — the "
+                             "SLO is still measured, just not acted on")
+        ap.add_argument("--shed-margin", type=float, default=v.shed_margin,
+                        help="admission forecast multiplier (<1 optimistic, "
+                             ">1 conservative)")
+        ap.add_argument("--slack-frac", type=float, default=v.slack_frac,
+                        help="dispatch early when a deadline's slack drops "
+                             "under this fraction of its budget")
+        ap.add_argument("--autoscale", action="store_true",
+                        help="attach the p99-vs-SLO hedge/replica "
+                             "autoscaler (requires cluster knobs)")
+        ap.add_argument("--autoscale-window", type=int,
+                        default=v.autoscale_window,
+                        help="autoscaler sliding latency window (requests)")
+        ap.add_argument("--autoscale-interval-s", type=float,
+                        default=v.autoscale_interval_s,
+                        help="minimum seconds between autoscaler decisions")
         return ap
 
     @classmethod
@@ -342,4 +380,14 @@ class PipelineConfig:
                 compact_interval_s=args.compact_interval_s,
                 rebalance_skew=args.rebalance_skew),
             serve=ServeConfig(max_batch=args.max_batch,
-                              max_wait_s=args.max_wait_s))
+                              max_wait_s=args.max_wait_s,
+                              slo_ms=args.slo_ms,
+                              deadline_aware=not args.static_serve,
+                              dynamic_batch=not args.static_serve,
+                              shed=not args.static_serve,
+                              shed_margin=args.shed_margin,
+                              slack_frac=args.slack_frac,
+                              autoscale=args.autoscale,
+                              autoscale_window=args.autoscale_window,
+                              autoscale_interval_s=(
+                                  args.autoscale_interval_s)))

@@ -255,12 +255,40 @@ class Pipeline:
 
     def serve(self, policy=None):
         """Start a continuous-batching ``RetrievalServer`` over this stack.
-        Caller owns shutdown()."""
+        ``cfg.serve.slo_ms > 0`` builds the deadline-aware ``SLOPolicy``
+        (EDF + admission control) instead of the static ``BatchPolicy``, and
+        ``cfg.serve.autoscale`` attaches the hedge/replica feedback
+        controller (cluster tier required). Caller owns shutdown()."""
         from repro.serve.engine import RetrievalServer
         from repro.serve.scheduler import BatchPolicy
-        policy = policy or BatchPolicy(max_batch=self.cfg.serve.max_batch,
-                                       max_wait_s=self.cfg.serve.max_wait_s)
-        return RetrievalServer(self.backend, policy=policy)
+        sc = self.cfg.serve
+        if policy is None:
+            if sc.slo_ms > 0:
+                from repro.serve.slo import SLOPolicy
+                policy = SLOPolicy(
+                    max_batch=sc.max_batch, max_wait_s=sc.max_wait_s,
+                    slo_ms=sc.slo_ms, deadline_aware=sc.deadline_aware,
+                    dynamic_batch=sc.dynamic_batch, shed=sc.shed,
+                    shed_margin=sc.shed_margin, slack_frac=sc.slack_frac)
+            else:
+                policy = BatchPolicy(max_batch=sc.max_batch,
+                                     max_wait_s=sc.max_wait_s)
+        scaler = None
+        if sc.autoscale:
+            if not isinstance(self.tier, StorageCluster):
+                raise RuntimeError(
+                    "autoscaling requires the cluster tier; set cluster "
+                    "knobs (e.g. --replication 2) when building")
+            slo = sc.slo_ms or getattr(policy, "slo_ms", 0.0)
+            if not slo:
+                raise RuntimeError("autoscaling needs an SLO; set "
+                                   "cfg.serve.slo_ms (--slo-ms)")
+            from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
+            scaler = Autoscaler(self.tier, AutoscalerConfig(
+                slo_ms=slo, window=sc.autoscale_window,
+                interval_s=sc.autoscale_interval_s))
+        return RetrievalServer(self.backend, policy=policy,
+                               autoscaler=scaler)
 
     def with_mode(self, mode: str, **retrieval_overrides) -> "Pipeline":
         """A new ``Pipeline`` sharing this one's corpus / index / layout but

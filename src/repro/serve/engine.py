@@ -2,6 +2,13 @@
 ESPNRetriever pipeline, with per-request latency accounting that combines the
 real wall clock (queueing, host work) and the calibrated device clock
 (SSD + accelerator, DESIGN §5).
+
+SLO accounting (see ``repro.serve.slo`` for the semantics): every request
+may carry a deadline; its observed SLO latency is wall (queueing + host)
+plus its simulated device share. Terminal states are disjoint — served in
+SLO, violation, shed (admission control; never handed to the handler),
+timeout (the caller abandoned; never recorded as served). The headline
+metric is ``goodput_under_slo = served_in_slo / offered``.
 """
 from __future__ import annotations
 
@@ -19,12 +26,44 @@ _MUT_KEYS = ("ingests", "ingested_docs", "deletes", "tombstones",
 
 
 @dataclass
+class TenantStats:
+    """Per-tenant SLO ledger (one per distinct ``Request.tenant``)."""
+    offered: int = 0
+    served: int = 0
+    shed: int = 0
+    violations: int = 0
+    in_slo: int = 0
+    slo_latencies_ms: list = field(default_factory=list)
+
+    def goodput_under_slo(self) -> float:
+        return self.in_slo / self.offered if self.offered else 0.0
+
+    def summary(self) -> dict:
+        xs = self.slo_latencies_ms
+        return {"offered": self.offered, "served": self.served,
+                "shed": self.shed, "violations": self.violations,
+                "goodput_under_slo": round(self.goodput_under_slo(), 4),
+                "slo_p50_ms": round(float(np.percentile(xs, 50)), 3)
+                if xs else 0.0,
+                "slo_p99_ms": round(float(np.percentile(xs, 99)), 3)
+                if xs else 0.0}
+
+
+@dataclass
 class ServeStats:
     n_requests: int = 0
     latencies_ms: list = field(default_factory=list)
     sim_latencies_ms: list = field(default_factory=list)
     batch_sizes: list = field(default_factory=list)
     hit_rates: list = field(default_factory=list)
+    # SLO ledger (zero / empty when no request carried a deadline):
+    offered: int = 0                   # everything submitted, sheds included
+    shed: int = 0                      # rejected at admission, never served
+    timeouts: int = 0                  # callers that abandoned query()
+    slo_violations: int = 0            # served, but past the deadline
+    served_in_slo: int = 0             # the goodput numerator
+    slo_latencies_ms: list = field(default_factory=list)  # wall + sim share
+    tenants: dict = field(default_factory=dict)           # name -> TenantStats
     # storage-cluster counters (zero when serving a single StorageTier):
     hedged_reads: int = 0
     hedge_wins: int = 0
@@ -46,8 +85,24 @@ class ServeStats:
     replicas_recovered: int = 0
     recovery_bytes: int = 0            # replica re-sync traffic
 
+    def tenant(self, name: str) -> TenantStats:
+        t = self.tenants.get(name)
+        if t is None:
+            t = self.tenants[name] = TenantStats()
+        return t
+
+    def goodput_under_slo(self) -> float:
+        """Fraction of OFFERED load served within its SLO — sheds and
+        timeouts count against it; a no-deadline request counts as in-SLO
+        when served (its SLO is vacuous)."""
+        return self.served_in_slo / self.offered if self.offered else 0.0
+
     def percentile(self, p: float, sim: bool = True) -> float:
         xs = self.sim_latencies_ms if sim else self.latencies_ms
+        return float(np.percentile(xs, p)) if xs else 0.0
+
+    def slo_percentile(self, p: float) -> float:
+        xs = self.slo_latencies_ms
         return float(np.percentile(xs, p)) if xs else 0.0
 
     def summary(self) -> dict:
@@ -65,6 +120,19 @@ class ServeStats:
             "mean_hit_rate": round(float(np.mean(self.hit_rates)), 4)
             if self.hit_rates else None,
         }
+        if self.slo_latencies_ms or self.shed or self.timeouts:
+            out["slo"] = {
+                "offered": self.offered,
+                "served_in_slo": self.served_in_slo,
+                "violations": self.slo_violations,
+                "shed": self.shed,
+                "timeouts": self.timeouts,
+                "goodput_under_slo": round(self.goodput_under_slo(), 4),
+                "slo_p50_ms": round(self.slo_percentile(50), 3),
+                "slo_p99_ms": round(self.slo_percentile(99), 3),
+                "tenants": {name: t.summary()
+                            for name, t in sorted(self.tenants.items())},
+            }
         if self.shard_blocks:
             total = self.cache_hits + self.cache_misses
             out |= {
@@ -93,20 +161,32 @@ class ServeStats:
 
 class RetrievalServer:
     """Continuous batching in front of anything with ``query_batch`` — an
-    ``ESPNRetriever`` or a ``repro.pipeline`` RetrievalBackend."""
+    ``ESPNRetriever`` or a ``repro.pipeline`` RetrievalBackend.
 
-    def __init__(self, retriever, *, policy: BatchPolicy | None = None):
+    ``policy`` may be the static ``BatchPolicy`` or a deadline-aware
+    ``repro.serve.slo.SLOPolicy`` (EDF dispatch + admission control);
+    ``autoscaler`` (``repro.serve.autoscaler.Autoscaler``) is fed every
+    completed request's SLO latency and stepped once per batch.
+    """
+
+    def __init__(self, retriever, *, policy: BatchPolicy | None = None,
+                 autoscaler=None):
         self.retriever = retriever
+        self.policy = policy or BatchPolicy()
+        self.autoscaler = autoscaler
         self.stats = ServeStats()
         tier_stats = getattr(getattr(retriever, "tier", None), "stats", {})
         self._mut_base = {k: tier_stats.get(k, 0) for k in _MUT_KEYS}
         # wall latency is recorded on the batcher loop when the request
         # completes, so async submitters (query_async) are measured too —
         # not just callers who block in query()
-        self.batcher = ContinuousBatcher(
-            self._handle, policy or BatchPolicy(),
-            on_complete=lambda r: self.stats.latencies_ms.append(
-                r.latency_s * 1e3)).start()
+        self.batcher = ContinuousBatcher(self._handle, self.policy,
+                                         on_complete=self._on_complete)
+        if getattr(self.policy, "shed", False):
+            from repro.serve.slo import AdmissionController
+            self.batcher.admission = AdmissionController(
+                self.batcher.service, self.policy)
+        self.batcher.start()
         self._rid = 0
 
     def _handle(self, batch: list[Request]):
@@ -124,10 +204,41 @@ class RetrievalServer:
             + resp.breakdown.encode_s * (len(batch) - 1) / len(batch)
         for r, ranked in zip(batch, resp.ranked):
             r.result = ranked
+            r.sim_ms = per_query_sim * 1e3
             self.stats.sim_latencies_ms.append(per_query_sim * 1e3)
         self.stats.batch_sizes.append(len(batch))
         self.stats.hit_rates.append(resp.breakdown.hit_rate)
         self.stats.n_requests += len(batch)
+
+    def _on_complete(self, r: Request) -> None:
+        """Batcher completion hook (runs before ``done`` fires). Abandoned
+        requests are skipped entirely — the caller already raised
+        TimeoutError and was counted there; recording its wall latency now
+        would bill a request nobody is waiting for."""
+        if r.abandoned:
+            return
+        s = self.stats
+        wall_ms = r.latency_s * 1e3
+        s.latencies_ms.append(wall_ms)
+        t = s.tenant(r.tenant)
+        t.served += 1
+        slo_ms = wall_ms + r.sim_ms        # device clock rides on top of wall
+        if r.deadline_s is not None:
+            budget_ms = (r.deadline_s - r.arrival_s) * 1e3
+            s.slo_latencies_ms.append(slo_ms)
+            t.slo_latencies_ms.append(slo_ms)
+            if slo_ms <= budget_ms:
+                s.served_in_slo += 1
+                t.in_slo += 1
+            else:
+                s.slo_violations += 1
+                t.violations += 1
+        else:
+            s.served_in_slo += 1           # no deadline: served is good
+            t.in_slo += 1
+        if self.autoscaler is not None:
+            self.autoscaler.observe(slo_ms)
+            self.autoscaler.maybe_step()
 
     def _record_cluster(self, tier, before: dict,
                         before_shards: list[dict]) -> None:
@@ -157,21 +268,48 @@ class RetrievalServer:
             s.shard_blocks[i] += st["blocks"] - st0["blocks"]
             s.shard_sim_s[i] += st["sim_seconds"] - st0["sim_seconds"]
 
-    def query(self, cls_vec, bow_vecs, q_len, timeout: float = 30.0):
+    # -- submission ----------------------------------------------------------
+    def _submit(self, cls_vec, bow_vecs, q_len, tenant: str,
+                slo_ms: float | None) -> Request:
         self._rid += 1
+        if slo_ms is None:
+            default = getattr(self.policy, "slo_ms", 0.0)
+            slo_ms = default if default and default > 0 else None
         req = Request(self._rid, {"cls": cls_vec, "bow": bow_vecs,
-                                  "len": q_len})
-        self.batcher.submit(req)
+                                  "len": q_len}, tenant=tenant)
+        if slo_ms is not None:
+            req.deadline_s = req.arrival_s + slo_ms / 1e3
+        s = self.stats
+        s.offered += 1
+        t = s.tenant(tenant)
+        t.offered += 1
+        if not self.batcher.submit(req):
+            s.shed += 1
+            t.shed += 1
+        return req
+
+    def query(self, cls_vec, bow_vecs, q_len, timeout: float = 30.0, *,
+              tenant: str = "default", slo_ms: float | None = None):
+        req = self._submit(cls_vec, bow_vecs, q_len, tenant, slo_ms)
+        if req.shed:
+            raise ShedError(f"request {req.rid} shed by admission control")
         if not req.done.wait(timeout):
+            # mark BEFORE counting: the batcher's completion hook skips
+            # abandoned requests, so this caller is billed exactly once —
+            # as a timeout here, never as a served wall latency later
+            req.abandoned = True
+            self.stats.timeouts += 1
             raise TimeoutError("query timed out")
         return req.result
 
-    def query_async(self, cls_vec, bow_vecs, q_len) -> Request:
-        self._rid += 1
-        req = Request(self._rid, {"cls": cls_vec, "bow": bow_vecs,
-                                  "len": q_len})
-        self.batcher.submit(req)
-        return req
+    def query_async(self, cls_vec, bow_vecs, q_len, *,
+                    tenant: str = "default",
+                    slo_ms: float | None = None) -> Request:
+        return self._submit(cls_vec, bow_vecs, q_len, tenant, slo_ms)
 
     def shutdown(self):
         self.batcher.stop()
+
+
+class ShedError(RuntimeError):
+    """A blocking ``query()`` was rejected by admission control."""

@@ -1,10 +1,25 @@
 """Request scheduling for the retrieval server: deadline-aware continuous
 batching + hedged storage reads (straggler mitigation).
 
-Batching policy: dispatch when either `max_batch` requests are queued or the
-oldest request has waited `max_wait_s` (keeps p99 bounded at low load while
-reaching the SSD's batch-throughput regime at high load — the batch-threshold
-math of paper eq. 4 decides `max_batch`).
+Batching policy: dispatch when either ``max_batch`` requests are queued or
+the oldest request has exhausted its ``max_wait_s`` window (keeps p99 bounded
+at low load while reaching the SSD's batch-throughput regime at high load —
+the batch-threshold math of paper eq. 4 decides ``max_batch``; see
+``repro.serve.slo.eq4_max_batch``).
+
+With a deadline-aware policy (``repro.serve.slo.SLOPolicy``) the batcher
+additionally:
+
+* orders dispatch by earliest deadline first (EDF) instead of FIFO,
+* dispatches early when the most urgent request's slack is about to burn
+  (deadline minus predicted service time drops under a slack guard),
+* sizes each batch from the observed queue depth (``dynamic_batch``),
+  capped by ``max_batch`` (the eq. 4 threshold) and shrunk when the
+  predicted batch service time no longer fits the tightest deadline,
+* sheds requests at admission when the queue-depth/service-time forecast
+  says they would miss their deadline anyway (``admission`` hook, see
+  ``repro.serve.slo.AdmissionController``) — shed requests complete
+  immediately with ``shed=True`` and are never handed to the handler.
 
 Hedged reads are implemented by the storage cluster
 (``repro.storage.cluster.StorageCluster``): every batch the scheduler
@@ -15,6 +30,7 @@ cluster, lagging shard reads are re-issued on a replica after the
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from dataclasses import dataclass, field
@@ -27,29 +43,98 @@ class Request:
     rid: int
     payload: Any
     arrival_s: float = field(default_factory=time.monotonic)
+    deadline_s: float | None = None    # absolute monotonic deadline (no SLO
+                                       # when None: FIFO traffic)
+    tenant: str = "default"
     done: threading.Event = field(init=False, repr=False)
     result: Any = field(init=False, default=None)
     latency_s: float = field(init=False, default=0.0)
+    sim_ms: float = field(init=False, default=0.0)   # device-clock share
+    shed: bool = field(init=False, default=False)    # rejected at admission
+    abandoned: bool = field(init=False, default=False)  # caller timed out
 
     def __post_init__(self):
         self.done = threading.Event()
 
+    @property
+    def slo_budget_s(self) -> float | None:
+        """The deadline budget this request arrived with (None = no SLO)."""
+        if self.deadline_s is None:
+            return None
+        return self.deadline_s - self.arrival_s
+
 
 @dataclass
 class BatchPolicy:
+    """Static continuous-batching policy (FIFO, fixed batch cap)."""
     max_batch: int = 12           # ESPN batch threshold (paper eq. 4)
     max_wait_s: float = 0.004
+    # deadline-aware knobs: inert on the static policy; SLOPolicy
+    # (repro.serve.slo) flips them on
+    deadline_aware: bool = False  # EDF ordering + slack-aware early dispatch
+    dynamic_batch: bool = False   # size batches from observed queue depth
+    min_batch: int = 1            # dynamic sizing floor
+    slack_frac: float = 0.25      # dispatch when slack < frac * SLO budget
+
+
+class ServiceModel:
+    """Decaying least-squares estimate of batch service time vs batch size.
+
+    ``observe(batch, secs)`` feeds one handler invocation; ``predict(b)``
+    returns the expected wall seconds for a batch of ``b`` as
+    ``fixed + b * per_request`` (clamped non-negative). Used by the batcher
+    for slack-aware dispatch / dynamic sizing and by the admission
+    controller's wait forecast. Writes happen on the batcher loop; readers
+    (submitting threads) tolerate torn reads — a stale forecast only shifts
+    a shed decision by one batch.
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = alpha
+        self.n = 0
+        self._b = self._s = self._bb = self._bs = 0.0
+
+    def observe(self, batch: int, secs: float) -> None:
+        a = self.alpha if self.n else 1.0
+        self.n += 1
+        self._b += a * (batch - self._b)
+        self._s += a * (secs - self._s)
+        self._bb += a * (batch * batch - self._bb)
+        self._bs += a * (batch * secs - self._bs)
+
+    def predict(self, batch: int) -> float:
+        """Expected service seconds for one batch of ``batch`` requests."""
+        if not self.n:
+            return 0.0
+        var = self._bb - self._b * self._b
+        if var <= 1e-12:                 # only one batch size seen so far
+            return self._s
+        slope = max((self._bs - self._b * self._s) / var, 0.0)
+        fixed = max(self._s - slope * self._b, 0.0)
+        return fixed + slope * batch
+
+    def predict_wait(self, depth: int, target: int) -> float:
+        """Queueing delay for ``depth`` requests ahead of a newcomer when
+        batches of ``target`` are dispatched back to back."""
+        if not self.n or depth <= 0 or target <= 0:
+            return 0.0
+        return math.ceil(depth / target) * self.predict(target)
 
 
 class ContinuousBatcher:
     """Collects requests into batches and runs `handler(list[Request])`."""
 
     def __init__(self, handler: Callable, policy: BatchPolicy, *,
-                 on_complete: Callable[[Request], None] | None = None):
+                 on_complete: Callable[[Request], None] | None = None,
+                 admission=None):
         self.handler = handler
         self.policy = policy
         self.on_complete = on_complete
+        self.admission = admission       # .admit(req, depth, now) -> bool
+        self.service = ServiceModel()
         self.queue: Queue = Queue()
+        self._pending: list[Request] = []   # drained, not yet dispatched
+        self._inflight = 0
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self.batches: list[int] = []
@@ -58,33 +143,122 @@ class ContinuousBatcher:
         self._thread.start()
         return self
 
-    def submit(self, req: Request):
+    def depth(self) -> int:
+        """Requests ahead of a newcomer: queued + drained + in flight."""
+        return self.queue.qsize() + len(self._pending) + self._inflight
+
+    def submit(self, req: Request) -> bool:
+        """Enqueue ``req``; returns False when admission control sheds it
+        (``req.shed`` set, ``done`` fired, handler never sees it)."""
+        if (self.admission is not None and req.deadline_s is not None
+                and not self.admission.admit(req, self.depth(),
+                                             time.monotonic())):
+            req.shed = True
+            req.done.set()
+            return False
         self.queue.put(req)
+        return True
+
+    # -- collection ----------------------------------------------------------
+    def _drain(self) -> None:
+        """Move everything already queued into the pending buffer without
+        blocking (a backlog must form full batches, not batches of one)."""
+        while True:
+            try:
+                self._pending.append(self.queue.get_nowait())
+            except Empty:
+                return
+
+    def _window_end(self, oldest_arrival_s: float, pickup_s: float) -> float:
+        """Dispatch deadline for the current batch window.
+
+        Clamped to ``min(arrival + max_wait, pickup + max_wait)``: the wait
+        budget is measured from whichever is earlier, so a request that
+        already aged in the queue before being picked up spends LESS of the
+        window, never more.
+        """
+        return min(oldest_arrival_s, pickup_s) + self.policy.max_wait_s
+
+    def _target_batch(self) -> int:
+        """Dispatch size: the static cap, or (dynamic) the observed queue
+        depth clamped to [min_batch, max_batch] and shrunk while the
+        predicted service time overruns the tightest deadline's slack —
+        queue depth asks for throughput, eq. 4's ``max_batch`` caps it, the
+        SLO slack gets the veto."""
+        pol = self.policy
+        if not pol.dynamic_batch:
+            return pol.max_batch
+        depth = len(self._pending) + self.queue.qsize()
+        t = max(pol.min_batch, min(pol.max_batch, depth))
+        deadlines = [r.deadline_s for r in self._pending
+                     if r.deadline_s is not None]
+        if deadlines and self.service.n:
+            slack = min(deadlines) - time.monotonic()
+            while t > pol.min_batch and self.service.predict(t) > slack > 0:
+                t -= 1
+        return t
+
+    def _urgency_deadline(self) -> float:
+        """Absolute time at which the most urgent pending request's slack
+        burns (dispatch must not wait past it). +inf when no deadlines."""
+        pol = self.policy
+        out = math.inf
+        est = self.service.predict(max(len(self._pending), 1))
+        for r in self._pending:
+            if r.deadline_s is None:
+                continue
+            guard = pol.slack_frac * (r.deadline_s - r.arrival_s)
+            out = min(out, r.deadline_s - est - guard)
+        return out
 
     def _collect(self) -> list[Request]:
-        try:
-            first = self.queue.get(timeout=0.05)
-        except Empty:
-            return []
-        batch = [first]
-        deadline = first.arrival_s + self.policy.max_wait_s
-        while len(batch) < self.policy.max_batch:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
+        pol = self.policy
+        if not self._pending:
+            try:
+                self._pending.append(self.queue.get(timeout=0.05))
+            except Empty:
+                return []
+        self._drain()
+        pickup = time.monotonic()
+        oldest = min(r.arrival_s for r in self._pending)
+        window_end = self._window_end(oldest, pickup)
+        while True:
+            now = time.monotonic()
+            if len(self._pending) >= self._target_batch():
+                break
+            until = window_end
+            if pol.deadline_aware:
+                until = min(until, self._urgency_deadline())
+            if now >= until:
                 break
             try:
-                batch.append(self.queue.get(timeout=remaining))
+                self._pending.append(self.queue.get(timeout=until - now))
             except Empty:
                 break
-        return batch
+            self._drain()
+        if pol.deadline_aware:
+            # EDF: tightest deadline first; FIFO among no-deadline traffic
+            self._pending.sort(key=lambda r: (
+                r.deadline_s if r.deadline_s is not None else math.inf,
+                r.arrival_s))
+        target = self._target_batch()
+        batch, self._pending = self._pending[:target], self._pending[target:]
+        live = [r for r in batch if not r.abandoned]
+        for r in batch:                  # caller already raised: don't spend
+            if r.abandoned:              # a batch slot on it
+                r.done.set()
+        return live
 
     def _loop(self):
         while not self._stop.is_set():
             batch = self._collect()
             if not batch:
                 continue
+            self._inflight = len(batch)
             self.batches.append(len(batch))
+            t0 = time.monotonic()
             self.handler(batch)
+            self.service.observe(len(batch), time.monotonic() - t0)
             for r in batch:
                 r.latency_s = time.monotonic() - r.arrival_s
                 # observe BEFORE the event fires: a waiter released by
@@ -95,6 +269,7 @@ class ContinuousBatcher:
                     except Exception:     # an observer must not kill the loop
                         pass
                 r.done.set()
+            self._inflight = 0
 
     def stop(self):
         self._stop.set()

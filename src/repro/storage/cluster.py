@@ -392,6 +392,27 @@ class StorageCluster:
         return {"shard": shard, "replica": replica,
                 "bytes": nb * self.layout.block, "seconds": secs}
 
+    def replica_status(self) -> list[list[bool]]:
+        """Alive mask per shard x replica (the autoscaler's view of what it
+        can recover or kill)."""
+        with self._lock:
+            return [list(a) for a in self._replica_alive]
+
+    def set_hedge_quantile(self, hedge_quantile: float) -> None:
+        """Re-tune hedging at runtime (the autoscaler's knob): recomputes
+        the hedge delay factor from the healthy latency distribution, same
+        math as construction. Lower quantile = hedge earlier = more
+        duplicate bytes traded for tail latency."""
+        if not 0.0 <= hedge_quantile < 1.0:
+            raise ValueError("hedge_quantile must be in [0, 1)")
+        with self._lock:
+            self.hedge_quantile = hedge_quantile
+            self._hedge_on = hedge_quantile > 0.0 and self.replication > 1
+            self._hedge_factor = (
+                float(np.exp(self.jitter_sigma
+                             * NormalDist().inv_cdf(hedge_quantile)))
+                if self._hedge_on and self.jitter_sigma > 0.0 else 1.0)
+
     def _check_open(self):
         if self._closed:
             raise RuntimeError("StorageCluster is closed")

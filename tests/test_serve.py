@@ -92,6 +92,90 @@ def test_batcher_on_complete_runs_before_done():
     assert sorted(seen) == [0, 1, 2, 3]
 
 
+def test_window_end_clamps_to_pickup_time():
+    b = ContinuousBatcher(lambda batch: None,
+                          BatchPolicy(max_batch=4, max_wait_s=0.01))
+    # request aged in the queue: budget measured from its arrival (earlier)
+    assert b._window_end(100.0, 105.0) == pytest.approx(100.01)
+    # fresh request: budget measured from pickup
+    assert b._window_end(105.0, 100.0) == pytest.approx(100.01)
+
+
+def test_backlog_dispatches_full_batches_not_singletons():
+    # regression: the dispatch window used to be measured from the OLDEST
+    # request's arrival only, so once a backlog aged past max_wait every
+    # pickup saw an already-expired window and dispatched batches of one
+    seen = []
+
+    def handler(batch):
+        seen.append(len(batch))
+        for r in batch:
+            r.result = r.payload
+
+    b = ContinuousBatcher(handler, BatchPolicy(max_batch=4, max_wait_s=0.002))
+    reqs = [Request(i, i) for i in range(8)]
+    for r in reqs:
+        b.submit(r)
+    time.sleep(0.05)                 # age the whole backlog past max_wait
+    b.start()
+    for r in reqs:
+        assert r.done.wait(5)
+    b.stop()
+    assert seen == [4, 4]
+
+
+def test_query_timeout_not_billed_as_served():
+    import numpy as np
+    from types import SimpleNamespace
+
+    from repro.serve.engine import RetrievalServer
+
+    class SlowRetriever:
+        def query_batch(self, q_cls, q_bow, q_lens, **kw):
+            time.sleep(0.2)
+            bd = SimpleNamespace(total_s=0.001, encode_s=0.0, hit_rate=1.0)
+            return SimpleNamespace(ranked=[[(0, 1.0)]] * len(q_cls),
+                                   breakdown=bd)
+
+    srv = RetrievalServer(SlowRetriever(),
+                          policy=BatchPolicy(max_batch=2, max_wait_s=0.001))
+    q = np.zeros(4, np.float32)
+    bow = np.zeros((2, 4), np.float32)
+    with pytest.raises(TimeoutError):
+        srv.query(q, bow, 2, timeout=0.01)
+    # regression: the timed-out request used to be recorded as a served
+    # wall latency when its batch eventually completed
+    deadline = time.monotonic() + 5
+    while srv.stats.n_requests == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert srv.stats.timeouts == 1
+    assert srv.stats.latencies_ms == []          # abandoned: never billed
+    r = srv.query(q, bow, 2, timeout=5.0)        # the server still works
+    assert r is not None
+    assert len(srv.stats.latencies_ms) == 1
+    srv.shutdown()
+
+
+def test_abandoned_request_dropped_before_dispatch():
+    seen = []
+
+    def handler(batch):
+        seen.extend(r.rid for r in batch)
+        for r in batch:
+            r.result = r.payload
+
+    b = ContinuousBatcher(handler, BatchPolicy(max_batch=4, max_wait_s=0.005))
+    live, gone = Request(0, 0), Request(1, 1)
+    gone.abandoned = True
+    b.submit(live)
+    b.submit(gone)
+    b.start()
+    assert live.done.wait(5)
+    assert gone.done.wait(5)         # completes without a handler slot
+    b.stop()
+    assert seen == [0]
+
+
 def test_server_surfaces_mutation_and_recovery_counters(small_corpus):
     from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
                                 StorageConfig)

@@ -1,0 +1,310 @@
+"""SLO-aware serving: workload generator, EDF scheduling, admission
+control, autoscaler feedback, ServeConfig round-trips."""
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serve import workload as W
+from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
+from repro.serve.engine import RetrievalServer
+from repro.serve.scheduler import BatchPolicy, ContinuousBatcher, Request
+from repro.serve.slo import AdmissionController, SLOPolicy, eq4_max_batch
+
+
+class FakeRetriever:
+    """Fixed-cost handler: real wall sleep + a fixed simulated device bill."""
+
+    def __init__(self, delay_s=0.01, sim_s=0.001):
+        self.delay_s = delay_s
+        self.sim_s = sim_s
+
+    def query_batch(self, q_cls, q_bow, q_lens, **kw):
+        time.sleep(self.delay_s)
+        bd = SimpleNamespace(total_s=self.sim_s, encode_s=0.0, hit_rate=1.0)
+        return SimpleNamespace(ranked=[[(i, 1.0)] for i in range(len(q_cls))],
+                               breakdown=bd)
+
+
+def _query(d_cls=8, d_bow=8, t=4):
+    return np.zeros(d_cls, np.float32), np.zeros((t, d_bow), np.float32), t
+
+
+# -- workload generator ------------------------------------------------------
+
+def test_workload_seed_reproducibility(small_corpus):
+    cfg = W.WorkloadConfig(duration_s=1.0, process="bursty", rate_qps=300,
+                           seed=3)
+    w1 = W.generate(cfg, small_corpus)
+    w2 = W.generate(cfg, small_corpus)
+    assert [a.t_s for a in w1.arrivals] == [a.t_s for a in w2.arrivals]
+    assert np.array_equal(w1.q_cls, w2.q_cls)
+    assert np.array_equal(w1.q_bow, w2.q_bow)
+    assert np.array_equal(w1.target_docs, w2.target_docs)
+    w3 = W.generate(W.WorkloadConfig(duration_s=1.0, process="bursty",
+                                     rate_qps=300, seed=4), small_corpus)
+    assert [a.t_s for a in w3.arrivals] != [a.t_s for a in w1.arrivals]
+
+
+def test_workload_zipf_affinity_skews_hot_docs(small_corpus):
+    cfg = W.WorkloadConfig(duration_s=2.0, rate_qps=400, zipf_alpha=1.1,
+                           seed=0)
+    w = W.generate(cfg, small_corpus)
+    counts = np.bincount(w.target_docs, minlength=small_corpus.n_docs)
+    top10 = np.sort(counts)[-10:].sum()
+    # 10 of 2000 docs draw far more than their uniform share (10/2000)
+    assert top10 / w.n > 0.15
+    # queries are unit-normalized and shaped for np.stack in the handler
+    assert w.q_bow.shape == (w.n, cfg.q_len, small_corpus.bow[0].shape[1])
+    norms = np.linalg.norm(w.q_cls, axis=1)
+    assert np.allclose(norms, 1.0, atol=1e-4)
+
+
+def test_arrival_processes_preserve_mean_rate(small_corpus):
+    for process in ("poisson", "bursty", "diurnal"):
+        cfg = W.WorkloadConfig(duration_s=4.0, process=process, rate_qps=200,
+                               diurnal_period_s=4.0, seed=1)
+        w = W.generate(cfg, small_corpus)
+        # envelopes are normalized to a time-average of 1.0 over a full
+        # period, so every process offers ~rate * duration arrivals
+        assert 0.75 * 800 < w.n < 1.25 * 800, (process, w.n)
+
+
+def test_arrival_process_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        W.arrival_times(W.WorkloadConfig(process="sawtooth"), 100.0,
+                        np.random.default_rng(0))
+
+
+def test_multi_tenant_mix_tags_arrivals(small_corpus):
+    cfg = W.WorkloadConfig(duration_s=2.0, seed=2)
+    cfg.tenants = [W.TenantSpec("online", 200.0, 30.0),
+                   W.TenantSpec("batch", 50.0, 500.0)]
+    w = W.generate(cfg, small_corpus)
+    by = {t: [a for a in w.arrivals if a.tenant == t]
+          for t in ("online", "batch")}
+    assert len(by["online"]) > 2 * len(by["batch"])
+    assert all(a.slo_ms == 30.0 for a in by["online"])
+    assert all(a.slo_ms == 500.0 for a in by["batch"])
+    # merged stream is time-ordered
+    ts = [a.t_s for a in w.arrivals]
+    assert ts == sorted(ts)
+
+
+# -- EDF dispatch ------------------------------------------------------------
+
+def test_edf_orders_dispatch_by_deadline():
+    seen = []
+
+    def handler(batch):
+        seen.append([r.rid for r in batch])
+        for r in batch:
+            r.result = r.rid
+
+    pol = BatchPolicy(max_batch=2, max_wait_s=0.01, deadline_aware=True)
+    b = ContinuousBatcher(handler, pol)        # not started: queue builds up
+    now = time.monotonic()
+    budgets = {0: 0.9, 1: 0.2, 2: 0.5, 3: 0.05}
+    reqs = []
+    for rid, budget in budgets.items():
+        r = Request(rid, rid)
+        r.deadline_s = now + budget
+        reqs.append(r)
+        b.submit(r)
+    b.start()
+    for r in reqs:
+        assert r.done.wait(5)
+    b.stop()
+    order = [rid for batch in seen for rid in batch]
+    assert order == [3, 1, 2, 0]               # tightest deadline first
+
+
+def test_static_policy_keeps_fifo_order():
+    seen = []
+
+    def handler(batch):
+        seen.append([r.rid for r in batch])
+        for r in batch:
+            r.result = r.rid
+
+    b = ContinuousBatcher(handler, BatchPolicy(max_batch=4, max_wait_s=0.01))
+    now = time.monotonic()
+    reqs = []
+    for rid, budget in ((0, 0.9), (1, 0.1), (2, 0.5)):
+        r = Request(rid, rid)
+        r.deadline_s = now + budget
+        reqs.append(r)
+        b.submit(r)
+    b.start()
+    for r in reqs:
+        assert r.done.wait(5)
+    b.stop()
+    assert [rid for batch in seen for rid in batch] == [0, 1, 2]
+
+
+# -- admission control -------------------------------------------------------
+
+def test_admission_always_admits_cold_or_deadline_free():
+    from repro.serve.scheduler import ServiceModel
+    svc = ServiceModel()
+    adm = AdmissionController(svc, SLOPolicy(max_batch=4))
+    r = Request(0, None)
+    r.deadline_s = r.arrival_s + 0.001
+    assert adm.admit(r, depth=10_000, now=time.monotonic())  # cold model
+    svc.observe(4, 0.5)
+    free = Request(1, None)                                  # no deadline
+    assert adm.admit(free, depth=10_000, now=time.monotonic())
+    assert not adm.admit(r, depth=10_000, now=time.monotonic())
+    assert adm.shed_count == 1
+
+
+def test_server_sheds_under_overload_and_protects_loose_tenant():
+    srv = RetrievalServer(FakeRetriever(delay_s=0.02),
+                          policy=SLOPolicy(max_batch=4, max_wait_s=0.002,
+                                           slo_ms=40.0))
+    # warm the service model so admission has a forecast from request one
+    srv.batcher.service.observe(1, 0.02)
+    srv.batcher.service.observe(4, 0.022)
+    q, bow, t = _query()
+    reqs = [srv.query_async(q, bow, t, tenant="tight")
+            for _ in range(40)]
+    loose = [srv.query_async(q, bow, t, tenant="loose", slo_ms=10_000.0)
+             for _ in range(8)]
+    for r in reqs + loose:
+        assert r.done.wait(10)
+    srv.shutdown()
+    s = srv.stats
+    assert s.shed > 0                          # overload actually shed
+    shed_reqs = [r for r in reqs if r.shed]
+    assert len(shed_reqs) == s.shed
+    assert all(r.result is None for r in shed_reqs)
+    # disjoint, complete terminal accounting; sheds never counted served
+    assert s.served_in_slo + s.slo_violations + s.shed == s.offered == 48
+    assert s.n_requests == 48 - s.shed
+    assert len(s.latencies_ms) == 48 - s.shed
+    # the loose-SLO tenant is never shed and never violates
+    tl = s.tenant("loose")
+    assert (tl.offered, tl.shed, tl.violations) == (8, 0, 0)
+    assert tl.in_slo == 8
+    assert s.tenant("tight").shed == s.shed
+
+
+def test_blocking_query_raises_shed_error():
+    from repro.serve.engine import ShedError
+    srv = RetrievalServer(FakeRetriever(delay_s=0.05),
+                          policy=SLOPolicy(max_batch=1, max_wait_s=0.001,
+                                           slo_ms=1.0))
+    srv.batcher.service.observe(1, 0.05)       # forecast: certain miss
+    q, bow, t = _query()
+    srv.query_async(q, bow, t)                 # occupy the queue
+    with pytest.raises(ShedError):
+        srv.query(q, bow, t)
+    srv.shutdown()
+
+
+# -- autoscaler --------------------------------------------------------------
+
+class FakeTier:
+    def __init__(self):
+        self.hedge_quantile = 0.9
+        self.alive = [[True, False], [True, True]]
+        self.log = []
+
+    def replica_status(self):
+        return [list(a) for a in self.alive]
+
+    def recover_replica(self, s, r):
+        self.alive[s][r] = True
+        self.log.append(("recover", s, r))
+        return {"bytes": 128, "seconds": 0.1}
+
+    def kill_replica(self, s, r):
+        self.alive[s][r] = False
+        self.log.append(("kill", s, r))
+
+    def set_hedge_quantile(self, q):
+        self.hedge_quantile = q
+        self.log.append(("hedge", q))
+
+
+def test_autoscaler_converges_on_simulated_clock():
+    tier = FakeTier()
+    a = Autoscaler(tier, AutoscalerConfig(slo_ms=50.0, window=16, min_fill=8,
+                                          interval_s=1.0, patience=1))
+    now = 0.0
+    # degraded: replica recovery is the first actuation rung
+    while not any(x[0] == "recover" for x in tier.log):
+        now += 2.0
+        a.observe(120.0)
+        a.maybe_step(now=now)
+        assert now < 100, "autoscaler never recovered the dead replica"
+    assert tier.alive[0][1]
+    # still hot: tighten hedging, bounded below by the floor (each actuation
+    # clears the window, so every rung costs min_fill fresh observations)
+    for _ in range(100):
+        now += 2.0
+        a.observe(120.0)
+        a.maybe_step(now=now)
+    assert tier.hedge_quantile == pytest.approx(0.5)   # cfg.hedge_floor
+    # calm: hedge relaxes back to its initial quantile and stays there
+    for _ in range(100):
+        now += 2.0
+        a.observe(5.0)
+        a.maybe_step(now=now)
+    assert tier.hedge_quantile == pytest.approx(0.9)
+    kinds = [x["action"] for x in a.actions]
+    assert kinds[0] == "recover_replica"
+    assert "tighten_hedge" in kinds and "relax_hedge" in kinds
+    assert all("t" in x for x in a.actions)
+
+
+def test_autoscaler_rate_limit_and_min_fill():
+    tier = FakeTier()
+    a = Autoscaler(tier, AutoscalerConfig(slo_ms=50.0, window=16, min_fill=8,
+                                          interval_s=1.0))
+    for _ in range(4):
+        a.observe(500.0)
+    assert a.maybe_step(now=1.0) is None       # under min_fill: no decision
+    for _ in range(8):
+        a.observe(500.0)
+    assert a.maybe_step(now=2.0) is not None
+    for _ in range(8):
+        a.observe(500.0)
+    assert a.maybe_step(now=2.5) is None       # inside the decision interval
+
+
+def test_eq4_max_batch_clamps():
+    pf = SimpleNamespace(batch_threshold=lambda nprobe, bpq: 23.7)
+    assert eq4_max_batch(pf, 8, 1e6) == 24
+    pf = SimpleNamespace(batch_threshold=lambda nprobe, bpq: 1e9)
+    assert eq4_max_batch(pf, 8, 1e6, hi=64) == 64
+    pf = SimpleNamespace(batch_threshold=lambda nprobe, bpq: 0.0)
+    assert eq4_max_batch(pf, 8, 1e6, lo=2) == 2
+
+
+# -- ServeConfig round-trips -------------------------------------------------
+
+def test_serve_config_dict_and_cli_round_trip():
+    import argparse
+
+    from repro.pipeline import PipelineConfig
+
+    cfg = PipelineConfig()
+    cfg.serve.slo_ms = 35.0
+    cfg.serve.shed_margin = 1.5
+    cfg.serve.autoscale = True
+    assert PipelineConfig.from_dict(cfg.to_dict()) == cfg
+
+    ap = PipelineConfig.add_cli_args(argparse.ArgumentParser())
+    args = ap.parse_args(["--slo-ms", "35", "--shed-margin", "1.5",
+                          "--autoscale", "--autoscale-window", "48"])
+    c2 = PipelineConfig.from_cli(args)
+    assert c2.serve.slo_ms == 35.0
+    assert c2.serve.shed_margin == 1.5
+    assert c2.serve.autoscale and c2.serve.autoscale_window == 48
+    assert c2.serve.deadline_aware and c2.serve.shed
+    args = ap.parse_args(["--slo-ms", "35", "--static-serve"])
+    c3 = PipelineConfig.from_cli(args)
+    assert not (c3.serve.deadline_aware or c3.serve.dynamic_batch
+                or c3.serve.shed)
