@@ -1,0 +1,129 @@
+"""Constant-space layout mode: fixed-stride storage + pooled tokens +
+the fde->bitvec->SSD cascade, against the ragged espn baseline.
+
+Emits ``BENCH_constant_space.json`` with the three claims the CI gate
+asserts (``benchmarks/check_gates.py --only constant-space``):
+
+  * per-doc block counts under ``fixed_stride`` have ZERO variance and the
+    layout carries zero resident offset/length metadata, while the pooled
+    index (blob + metadata) is strictly smaller than the ragged espn
+    baseline's;
+  * a pooled corpus ranks bitwise-identically whether it is stored ragged
+    or fixed-stride (the refactor is a storage change, not a scoring one);
+  * the fde->bitvec->SSD cascade holds >= 0.95x the espn baseline's
+    recall@100 while reading strictly fewer SSD bytes per query.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (emit_json, pooled_layouts, row,
+                               scoring_corpus, scoring_index)
+from repro.core.metrics import recall_at_k
+from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                            StorageConfig)
+
+POOL_K = 32          # (d_cls + K*d_bow)*2B = 2304B -> exactly one 4KiB block
+
+
+def _run(pipe, corpus):
+    resp = pipe.search()
+    ranked = [x.doc_ids for x in resp.ranked]
+    return {"recall100": recall_at_k(ranked, corpus.qrels, 100),
+            "ssd_bytes_per_query": resp.breakdown.bytes_read / len(ranked),
+            "ms_per_query": resp.breakdown.total_s * 1e3 / len(ranked),
+            "resident_bytes": pipe.tier.memory_resident_bytes()}, resp
+
+
+def main() -> list[str]:
+    c = scoring_corpus()
+    index = scoring_index(c)
+    fixed_lay, ragged_pooled_lay = pooled_layouts(c, POOL_K)
+    out = []
+    nprobe = max(8, index.ncells // 10)
+
+    def cfg(mode, layout_mode="ragged", **kw):
+        storage = StorageConfig(t_max=180, layout_mode=layout_mode,
+                                pool_k=POOL_K if layout_mode != "ragged"
+                                else 0)
+        return PipelineConfig(storage=storage, retrieval=RetrievalConfig(
+            mode=mode, nprobe=nprobe, k_candidates=1000, prefetch_step=0.2,
+            **kw))
+
+    # -- ragged espn baseline (unpooled, exact rerank) ----------------------
+    from benchmarks.common import scoring_layout
+    ragged_lay = scoring_layout(c)
+    espn = Pipeline.from_artifacts(cfg("espn"), index=index,
+                                   layout=ragged_lay, corpus=c)
+    espn_m, _ = _run(espn, c)
+    out.append(row("constant_space/espn-ragged", 0.0,
+                   f"recall100={espn_m['recall100']:.4f} "
+                   f"bytes/q={espn_m['ssd_bytes_per_query']/1024:.0f}KB "
+                   f"meta={ragged_lay.meta_nbytes/2**20:.2f}MB"))
+
+    # -- fixed-stride cspn + the ragged<->fixed parity check ----------------
+    fixed = Pipeline.from_artifacts(cfg("cspn", "fixed_stride"), index=index,
+                                    layout=fixed_lay, corpus=c)
+    fixed_m, fixed_resp = _run(fixed, c)
+    parity = Pipeline.from_artifacts(cfg("cspn"), index=index,
+                                     layout=ragged_pooled_lay, corpus=c)
+    _, parity_resp = _run(parity, c)
+    rankings_identical = all(
+        np.array_equal(a.doc_ids, b.doc_ids)
+        and np.array_equal(a.scores, b.scores)
+        for a, b in zip(fixed_resp.ranked, parity_resp.ranked))
+    nb = fixed_lay.offsets[:, 1].astype(np.int64)
+    layout_stats = {
+        "pool_k": POOL_K,
+        "blocks_per_doc_p99": float(np.percentile(nb, 99)),
+        "blocks_per_doc_variance": float(nb.var()),
+        "meta_bytes_ragged": int(ragged_lay.meta_nbytes),
+        "meta_bytes_fixed": int(fixed_lay.meta_nbytes),
+        "ragged_total_bytes": int(ragged_lay.nbytes
+                                  + ragged_lay.meta_nbytes),
+        "fixed_total_bytes": int(fixed_lay.nbytes + fixed_lay.meta_nbytes),
+        "parity_rankings_identical": bool(rankings_identical),
+    }
+    out.append(row(
+        "constant_space/cspn-fixed", 0.0,
+        f"recall100={fixed_m['recall100']:.4f} "
+        f"bytes/q={fixed_m['ssd_bytes_per_query']/1024:.0f}KB "
+        f"index={layout_stats['fixed_total_bytes']/2**20:.1f}MB "
+        f"(ragged {layout_stats['ragged_total_bytes']/2**20:.1f}MB) "
+        f"parity={rankings_identical}"))
+
+    # -- fde -> bitvec -> SSD cascade on the fixed layout -------------------
+    casc = fixed.with_mode("cascade", cascade_filter=160)
+    casc_m, _ = _run(casc, c)
+    cascade_stats = {
+        **casc_m,
+        "cascade_filter": 160,
+        "espn_recall100": espn_m["recall100"],
+        "espn_ssd_bytes_per_query": espn_m["ssd_bytes_per_query"],
+        "recall_ratio": casc_m["recall100"] / max(espn_m["recall100"],
+                                                  1e-9),
+        "side_table_bytes": int(casc.tier.bits.nbytes
+                                + casc.tier.fde.nbytes),
+    }
+    out.append(row(
+        "constant_space/cascade", 0.0,
+        f"recall100={casc_m['recall100']:.4f} "
+        f"({cascade_stats['recall_ratio']:.3f}x espn) "
+        f"bytes/q={casc_m['ssd_bytes_per_query']/1024:.0f}KB "
+        f"(espn {espn_m['ssd_bytes_per_query']/1024:.0f}KB) "
+        f"side={cascade_stats['side_table_bytes']/2**20:.1f}MB"))
+
+    emit_json("BENCH_constant_space.json", {
+        "n_docs": c.n_docs,
+        "layout": layout_stats,
+        "espn": espn_m,
+        "cspn_fixed": fixed_m,
+        "cascade": cascade_stats,
+    })
+    for p in (casc, parity, fixed, espn):
+        p.close()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,30 @@ def check_serve_slo(bench: dict) -> str:
             f"{rec['p99_final_ms']:.3f}ms vs slo {rec['slo_ms']:.3f}ms")
 
 
+@gate("constant-space", "BENCH_constant_space.json")
+def check_constant_space(bench: dict) -> str:
+    """Fixed-stride layout: zero per-doc block variance and zero resident
+    metadata, strictly smaller index than the ragged baseline, bitwise
+    ragged<->fixed parity; the fde->bitvec->SSD cascade keeps >=0.95x the
+    espn recall@100 at strictly fewer SSD bytes per query."""
+    lay = bench["layout"]
+    assert lay["blocks_per_doc_variance"] == 0.0, lay
+    assert lay["meta_bytes_fixed"] == 0, lay
+    assert lay["meta_bytes_ragged"] > 0, lay
+    assert lay["parity_rankings_identical"], lay
+    assert lay["fixed_total_bytes"] < lay["ragged_total_bytes"], lay
+    casc = bench["cascade"]
+    assert casc["recall_ratio"] >= 0.95, casc
+    assert casc["ssd_bytes_per_query"] < casc["espn_ssd_bytes_per_query"], \
+        casc
+    return (f"index {lay['ragged_total_bytes']/2**20:.1f}MB -> "
+            f"{lay['fixed_total_bytes']/2**20:.1f}MB (meta "
+            f"{lay['meta_bytes_ragged']/2**10:.0f}KB -> 0), cascade "
+            f"recall ratio {casc['recall_ratio']:.3f} at "
+            f"{casc['ssd_bytes_per_query']/1024:.0f}KB/q vs espn "
+            f"{casc['espn_ssd_bytes_per_query']/1024:.0f}KB/q")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,

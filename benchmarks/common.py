@@ -87,6 +87,28 @@ def scoring_layout(corpus):
                                        dtype=np.float16))
 
 
+def pooled_layouts(corpus, pool_k: int):
+    """(fixed_stride, ragged) layouts over the pool_k-pooled corpus — the
+    same pooled content packed both ways, for the parity comparison.
+    Pooling 40k docs takes a minute, so both are cached."""
+    from repro.core.pool import pool_corpus
+    from repro.storage.layout import pack
+
+    def bows():
+        if not hasattr(bows, "_cache"):
+            bows._cache = pool_corpus(corpus.bow, pool_k, seed=0)
+        return bows._cache
+
+    fixed = _cached_layout(
+        f"layout_pooled_{corpus.n_docs}_{pool_k}_fixed",
+        lambda: pack(corpus.cls, bows(), dtype=np.float16,
+                     mode="fixed_stride", pool_k=pool_k))
+    ragged = _cached_layout(
+        f"layout_pooled_{corpus.n_docs}_{pool_k}_ragged",
+        lambda: pack(corpus.cls, bows(), dtype=np.float16))
+    return fixed, ragged
+
+
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)

@@ -69,6 +69,10 @@ class ESPNConfig:
     bit_filter: int = 128              # bitvec: full-precision rerank width R
     fde_brute_threshold: int = 100_000  # fde: brute-scan the FDE table below
                                         # this corpus size, IVF above
+    cascade_filter: int = 64           # cascade: bit-score survivors that
+                                       # reach the SSD rerank stage
+    cascade_candidates: int = 0        # cascade: FDE candidate width
+                                       # (0 = reuse k_candidates)
 
 
 @dataclass

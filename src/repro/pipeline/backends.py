@@ -16,6 +16,7 @@ clock. All backends return the same ``RetrievalResponse``.
 from __future__ import annotations
 
 import abc
+import dataclasses
 from typing import ClassVar
 
 import numpy as np
@@ -163,6 +164,70 @@ class RetrievalBackend(abc.ABC):
         bd.hit_rate = 0.0
         return ranked
 
+    def _bit_filter_rerank(self, q_bow, q_lens, scores, ids,
+                           bd: LatencyBreakdown,
+                           width: int) -> list[RerankOutput]:
+        """Shared bit-filter + SSD-rerank tail (bitvec, cascade): score ALL
+        candidates against the resident sign-bit tier (zero SSD traffic),
+        keep the top ``width`` survivors per query, then ONE coalesced
+        ``read_batch`` of the survivors and full-precision MaxSim as each
+        query's arena rows land. Non-survivors keep their candidate-stage
+        ordering (alpha*CLS for bitvec, FDE score for cascade)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.bitsim.ops import bitsim
+
+        cfg = self.cfg
+        layout = self.tier.layout
+        mean_t = float(layout.n_tokens.mean())
+        ids = self._dead_masked(ids)
+        # 1) resident bit filter: the top-``width`` survivors are chosen
+        #    with a partial sort (argpartition + sort of ``width`` elements,
+        #    like the FDE brute path), not a full argsort
+        prep = []
+        for b in range(len(ids)):
+            fin, fin_scores = valid_candidates(ids[b], scores[b])
+            qlen = int(q_lens[b])
+            packed, lens = self.tier.read_bits(fin)
+            bit_s = np.asarray(bitsim(
+                jnp.asarray(q_bow[b][:qlen]),
+                jnp.ones((qlen,), jnp.float32),
+                jnp.asarray(packed), jnp.asarray(lens),
+                d=layout.d_bow, use_pallas=cfg.use_pallas))
+            bd.rerank_s += self.compute.bitsim_time(len(fin), qlen, mean_t,
+                                                    layout.d_bow)
+            r = min(width, len(fin))
+            if r < len(fin):
+                # O(n + r log r) instead of a full argsort; ties exactly at
+                # the cutoff may pick a different (equal-score) survivor
+                # subset than a stable full sort would, like the FDE brute
+                # path's selection
+                part = np.argpartition(-bit_s, r - 1)[:r]
+            else:
+                part = np.arange(len(fin))
+            sel = part[np.argsort(-bit_s[part], kind="stable")]
+            prep.append((fin, fin_scores, sel))
+        # 2) ONE coalesced SSD read for every query's survivors, then
+        #    full-precision MaxSim per query as its arena rows land
+        batch = self.tier.read_batch([fin[sel] for fin, _, sel in prep])
+        bd.critical_io_s += batch.sim_seconds
+        ranked = []
+        for b, (fin, fin_scores, sel) in enumerate(prep):
+            qlen = int(q_lens[b])
+            res = QueryResult.from_batch_view(fin, fin_scores, batch, b,
+                                              ann_s=bd.ann_s)
+            out = rerank_query(q_bow[b], qlen, res, alpha=cfg.alpha,
+                               select=sel, doc_bytes=self.doc_bytes,
+                               use_pallas=cfg.use_pallas)
+            ranked.append(out)
+            bd.rerank_s += self._maxsim_time(len(sel), qlen)
+            bd.bytes_read += out.bow_bytes_read
+        saved = batch.dedup_bytes_saved(self.doc_bytes)
+        bd.bytes_read -= saved
+        bd.dedup_bytes_saved += saved
+        bd.hit_rate = 0.0
+        return ranked
+
 
 @register_backend("espn")
 class ESPNBackend(RetrievalBackend):
@@ -272,65 +337,15 @@ class BitvecBackend(RetrievalBackend):
     needs_bit_table = True
 
     def _retrieve(self, q_cls, q_bow, q_lens, bd):
-        import jax.numpy as jnp
-
-        from repro.kernels.bitsim.ops import bitsim
-
         cfg = self.cfg
         if q_cls.shape[0] == 0:
             bd.hit_rate = 0.0
             return []
-        layout = self.tier.layout
-        mean_t = float(layout.n_tokens.mean())
         scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
-        scores, ids = np.asarray(scores), self._dead_masked(np.asarray(ids))
+        scores, ids = np.asarray(scores), np.asarray(ids)
         bd.ann_s = self.cost.time(self.index, cfg.nprobe)
-        # 1) resident bit filter: score ALL candidates, zero SSD bytes; the
-        #    top-R survivors are chosen with a partial sort (argpartition +
-        #    sort of R elements, like the FDE brute path), not a full argsort
-        prep = []
-        for b in range(q_cls.shape[0]):
-            fin, fin_scores = valid_candidates(ids[b], scores[b])
-            qlen = int(q_lens[b])
-            packed, lens = self.tier.read_bits(fin)
-            bit_s = np.asarray(bitsim(
-                jnp.asarray(q_bow[b][:qlen]),
-                jnp.ones((qlen,), jnp.float32),
-                jnp.asarray(packed), jnp.asarray(lens),
-                d=layout.d_bow, use_pallas=cfg.use_pallas))
-            bd.rerank_s += self.compute.bitsim_time(len(fin), qlen, mean_t,
-                                                    layout.d_bow)
-            r = min(cfg.bit_filter, len(fin))
-            if r < len(fin):
-                # O(n + r log r) instead of a full argsort; ties exactly at
-                # the cutoff may pick a different (equal-score) survivor
-                # subset than a stable full sort would, like the FDE brute
-                # path's selection
-                part = np.argpartition(-bit_s, r - 1)[:r]
-            else:
-                part = np.arange(len(fin))
-            sel = part[np.argsort(-bit_s[part], kind="stable")]
-            prep.append((fin, fin_scores, sel))
-        # 2) ONE coalesced SSD read for every query's survivors, then
-        #    full-precision MaxSim per query as its arena rows land
-        batch = self.tier.read_batch([fin[sel] for fin, _, sel in prep])
-        bd.critical_io_s += batch.sim_seconds
-        ranked = []
-        for b, (fin, fin_scores, sel) in enumerate(prep):
-            qlen = int(q_lens[b])
-            res = QueryResult.from_batch_view(fin, fin_scores, batch, b,
-                                              ann_s=bd.ann_s)
-            out = rerank_query(q_bow[b], qlen, res, alpha=cfg.alpha,
-                               select=sel, doc_bytes=self.doc_bytes,
-                               use_pallas=cfg.use_pallas)
-            ranked.append(out)
-            bd.rerank_s += self._maxsim_time(len(sel), qlen)
-            bd.bytes_read += out.bow_bytes_read
-        saved = batch.dedup_bytes_saved(self.doc_bytes)
-        bd.bytes_read -= saved
-        bd.dedup_bytes_saved += saved
-        bd.hit_rate = 0.0
-        return ranked
+        return self._bit_filter_rerank(q_bow, q_lens, scores, ids, bd,
+                                       cfg.bit_filter)
 
 
 @register_backend("fde")
@@ -394,15 +409,14 @@ class FDEBackend(RetrievalBackend):
         return self.tier.fde.nbytes + (self.fde_index.memory_bytes()
                                        if self.fde_index is not None else 0)
 
-    def _retrieve(self, q_cls, q_bow, q_lens, bd):
+    def _fde_candidates(self, q_bow, q_lens, bd):
+        """Candidate generation against the resident FDE tier: returns
+        (scores, ids) on MaxSim's scale, ready for any rerank tail."""
         import jax.numpy as jnp
 
         from repro.kernels.fdescan.ops import fdescan
 
         cfg = self.cfg
-        if q_cls.shape[0] == 0:
-            bd.hit_rate = 0.0
-            return []
         q_fde = self.encoder.encode_queries(q_bow, q_lens)    # (B, d_fde)
         n = self.tier.fde.n_docs
         if self.fde_index is None:
@@ -425,4 +439,56 @@ class FDEBackend(RetrievalBackend):
         # dividing brings candidate scores onto MaxSim's scale so the
         # full-precision re-rank, not the sketch, decides the final order
         scores = scores / float(self.tier.fde.cfg.r_reps)
+        return scores, ids
+
+    def _retrieve(self, q_cls, q_bow, q_lens, bd):
+        if q_cls.shape[0] == 0:
+            bd.hit_rate = 0.0
+            return []
+        scores, ids = self._fde_candidates(q_bow, q_lens, bd)
         return self._rerank_candidates(q_bow, q_lens, scores, ids, bd)
+
+
+@register_backend("cspn")
+class CSPNBackend(DirectBackend):
+    """Constant-space SSD rerank: the gds query path run over the
+    ``fixed_stride`` pooled layout. Every document holds exactly ``pool_k``
+    token vectors at a uniform block stride, so offsets are arithmetic
+    (zero resident metadata), every read moves the same byte count, and the
+    batch I/O plan degenerates to index math. The backend itself is layout-
+    agnostic — it runs correctly (just without the constant-space wins) on
+    a ragged layout too, which keeps the registry-wide invariant suites
+    honest."""
+    storage_stack = "espn"
+
+
+@register_backend("cascade")
+class CascadeBackend(FDEBackend):
+    """Three-stage constant-space cascade: resident FDE candidate
+    generation (MUVERA) -> resident sign-bit filter (Nardini) -> SSD
+    full-precision MaxSim of the few survivors. Candidate width is
+    ``cascade_candidates`` (0 = ``k_candidates``); only the top
+    ``cascade_filter`` bit-score survivors pay SSD bytes, so the per-query
+    storage bill is strictly below the single-filter stacks at equal
+    recall. Designed for the ``fixed_stride`` pooled layout, where each
+    survivor read is one constant-size strided gather."""
+
+    storage_stack = "espn"
+    needs_bit_table = True
+    needs_fde_table = True
+
+    def _retrieve(self, q_cls, q_bow, q_lens, bd):
+        cfg = self.cfg
+        if q_cls.shape[0] == 0:
+            bd.hit_rate = 0.0
+            return []
+        width = cfg.cascade_candidates or cfg.k_candidates
+        saved_cfg = self.cfg
+        if width != cfg.k_candidates:
+            self.cfg = dataclasses.replace(cfg, k_candidates=width)
+        try:
+            scores, ids = self._fde_candidates(q_bow, q_lens, bd)
+        finally:
+            self.cfg = saved_cfg
+        return self._bit_filter_rerank(q_bow, q_lens, scores, ids, bd,
+                                       cfg.cascade_filter)

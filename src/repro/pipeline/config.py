@@ -58,6 +58,13 @@ class StorageConfig:
                                        # reads across the query batch (False
                                        # = seed-faithful serial per-query
                                        # reads, the benchmarks' baseline)
+    layout_mode: str = "ragged"        # ragged | fixed_stride (constant-space
+                                       # pooled layout: uniform stride,
+                                       # offsets computed, zero metadata)
+    pool_k: int = 0                    # fixed_stride: tokens per doc after
+                                       # cluster pooling (required > 0)
+    pool_seed: int = 0                 # pooling kmeans seed (content-
+                                       # deterministic ingest == rebuild)
 
 
 @dataclass
@@ -77,6 +84,9 @@ class RetrievalConfig:
     fde_d_final: int = 256             # fde: final projection dim (0 = raw)
     fde_seed: int = 0                  # fde: partition/projection randomness
     fde_brute_threshold: int = 100_000  # fde: brute-scan below, IVF above
+    cascade_filter: int = 64           # cascade: bit survivors reranked on SSD
+    cascade_candidates: int = 0        # cascade: FDE candidate width
+                                       # (0 = reuse k_candidates)
 
     def to_espn_config(self):
         from repro.core.espn import ESPNConfig
@@ -86,7 +96,9 @@ class RetrievalConfig:
                           rerank_count=self.rerank_count, alpha=self.alpha,
                           k_return=self.k_return, use_pallas=self.use_pallas,
                           bit_filter=self.bit_filter,
-                          fde_brute_threshold=self.fde_brute_threshold)
+                          fde_brute_threshold=self.fde_brute_threshold,
+                          cascade_filter=self.cascade_filter,
+                          cascade_candidates=self.cascade_candidates)
 
     def to_fde_config(self, d_bow: int):
         """The encoding family these knobs describe, for a given token dim
@@ -229,6 +241,16 @@ class PipelineConfig:
         ap.add_argument("--t-max", type=int, default=s.t_max)
         ap.add_argument("--mem-budget-frac", type=float,
                         default=s.mem_budget_frac)
+        ap.add_argument("--layout-mode", default=s.layout_mode,
+                        choices=["ragged", "fixed_stride"],
+                        help="storage layout: ragged (per-doc offsets) or "
+                             "fixed_stride (constant-space pooled layout; "
+                             "requires --pool-k)")
+        ap.add_argument("--pool-k", type=int, default=s.pool_k,
+                        help="fixed_stride: pool every document to this "
+                             "many token vectors")
+        ap.add_argument("--pool-seed", type=int, default=s.pool_seed,
+                        help="pooling kmeans seed")
         ap.add_argument("--serial-io", action="store_true",
                         help="disable the coalesced batch I/O engine "
                              "(per-query serial reads; duplicates billed "
@@ -264,6 +286,14 @@ class PipelineConfig:
         ap.add_argument("--fde-dtype", default=s.fde_dtype,
                         choices=["float16", "float32"],
                         help="resident FDE table dtype (fde mode)")
+        ap.add_argument("--cascade-filter", type=int,
+                        default=r.cascade_filter,
+                        help="cascade: bit-score survivors that reach the "
+                             "SSD rerank stage")
+        ap.add_argument("--cascade-candidates", type=int,
+                        default=r.cascade_candidates,
+                        help="cascade: FDE candidate-generation width "
+                             "(0 = reuse --k)")
         ap.add_argument("--shards", type=int, default=cl.n_shards,
                         help="storage cluster: shard the layout across this "
                              "many tiers (1 = single-tier identity)")
@@ -351,7 +381,10 @@ class PipelineConfig:
                                   mem_budget_frac=args.mem_budget_frac,
                                   bit_dtype=args.bit_dtype,
                                   fde_dtype=args.fde_dtype,
-                                  io_coalesce=not args.serial_io),
+                                  io_coalesce=not args.serial_io,
+                                  layout_mode=args.layout_mode,
+                                  pool_k=args.pool_k,
+                                  pool_seed=args.pool_seed),
             retrieval=RetrievalConfig(mode=args.mode, nprobe=args.nprobe,
                                       k_candidates=args.k,
                                       prefetch_step=args.prefetch_step,
@@ -364,7 +397,10 @@ class PipelineConfig:
                                       fde_d_final=args.fde_d_final,
                                       fde_seed=args.fde_seed,
                                       fde_brute_threshold=(
-                                          args.fde_brute_threshold)),
+                                          args.fde_brute_threshold),
+                                      cascade_filter=args.cascade_filter,
+                                      cascade_candidates=(
+                                          args.cascade_candidates)),
             cluster=ClusterConfig(
                 n_shards=args.shards, replication=args.replication,
                 partition=args.partition,

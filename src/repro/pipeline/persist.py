@@ -44,23 +44,46 @@ def load_index(path: str) -> IVFIndex:
 
 # -- packed embedding layout ------------------------------------------------
 
+def _layout_fields(layout: EmbeddingLayout) -> dict:
+    """npz field dict for a layout. Fixed-stride layouts persist NO
+    offsets/n_tokens tables — they are pure arithmetic, recomputed on load
+    (the constant-space "offsets computable not stored" contract)."""
+    fields = dict(blob=layout.blob, d_cls=layout.d_cls, d_bow=layout.d_bow,
+                  dtype=str(np.dtype(layout.dtype)),
+                  scales=(layout.scales if layout.scales is not None
+                          else _EMPTY),
+                  block=layout.block, mode=layout.mode,
+                  stride_blocks=layout.stride_blocks, pool_k=layout.pool_k)
+    if layout.mode != "fixed_stride":
+        fields["offsets"] = layout.offsets
+        fields["n_tokens"] = layout.n_tokens
+    return fields
+
+
+def _layout_from_npz(z) -> EmbeddingLayout:
+    scales = z["scales"]
+    # pre-layout-mode artifacts carry no "mode" field: they are ragged
+    mode = str(z["mode"]) if "mode" in z.files else "ragged"
+    fixed = mode == "fixed_stride"
+    return EmbeddingLayout(
+        blob=z["blob"],
+        offsets=None if fixed else z["offsets"],
+        n_tokens=None if fixed else z["n_tokens"],
+        d_cls=int(z["d_cls"]), d_bow=int(z["d_bow"]),
+        dtype=np.dtype(str(z["dtype"])),
+        scales=scales if scales.size else None,
+        block=int(z["block"]), mode=mode,
+        stride_blocks=int(z["stride_blocks"]) if "stride_blocks" in z.files
+        else 0,
+        pool_k=int(z["pool_k"]) if "pool_k" in z.files else 0)
+
+
 def save_layout(layout: EmbeddingLayout, path: str) -> None:
-    np.savez(path, blob=layout.blob, offsets=layout.offsets,
-             n_tokens=layout.n_tokens, d_cls=layout.d_cls,
-             d_bow=layout.d_bow, dtype=str(np.dtype(layout.dtype)),
-             scales=layout.scales if layout.scales is not None else _EMPTY,
-             block=layout.block)
+    np.savez(path, **_layout_fields(layout))
 
 
 def load_layout(path: str) -> EmbeddingLayout:
-    z = np.load(path, allow_pickle=False)
-    scales = z["scales"]
-    return EmbeddingLayout(blob=z["blob"], offsets=z["offsets"],
-                           n_tokens=z["n_tokens"], d_cls=int(z["d_cls"]),
-                           d_bow=int(z["d_bow"]),
-                           dtype=np.dtype(str(z["dtype"])),
-                           scales=scales if scales.size else None,
-                           block=int(z["block"]))
+    return _layout_from_npz(np.load(path, allow_pickle=False))
 
 
 # -- sharded layouts (storage cluster) --------------------------------------
@@ -69,23 +92,13 @@ def save_shard_layout(layout: EmbeddingLayout, global_ids: np.ndarray,
                       path: str) -> None:
     """One cluster shard: its sub-layout plus the global doc ids it owns
     (the shard_of/local_of maps are rebuilt from these on load)."""
-    np.savez(path, blob=layout.blob, offsets=layout.offsets,
-             n_tokens=layout.n_tokens, d_cls=layout.d_cls,
-             d_bow=layout.d_bow, dtype=str(np.dtype(layout.dtype)),
-             scales=layout.scales if layout.scales is not None else _EMPTY,
-             block=layout.block, global_ids=np.asarray(global_ids, np.int64))
+    np.savez(path, **_layout_fields(layout),
+             global_ids=np.asarray(global_ids, np.int64))
 
 
 def load_shard_layout(path: str) -> tuple[EmbeddingLayout, np.ndarray]:
     z = np.load(path, allow_pickle=False)
-    scales = z["scales"]
-    layout = EmbeddingLayout(blob=z["blob"], offsets=z["offsets"],
-                             n_tokens=z["n_tokens"], d_cls=int(z["d_cls"]),
-                             d_bow=int(z["d_bow"]),
-                             dtype=np.dtype(str(z["dtype"])),
-                             scales=scales if scales.size else None,
-                             block=int(z["block"]))
-    return layout, z["global_ids"]
+    return _layout_from_npz(z), z["global_ids"]
 
 
 # -- resident bit table (bitvec backend) ------------------------------------

@@ -39,6 +39,23 @@ from repro.storage.mutation import MutableStorageCluster
 from repro.storage.segments import Segment
 
 
+def _pack_layout(cfg: PipelineConfig, cls_embs: np.ndarray,
+                 bow_embs: list[np.ndarray]) -> EmbeddingLayout:
+    """Pack per the config's layout mode. ``fixed_stride`` pools every
+    document to exactly ``pool_k`` token vectors first (deterministic
+    content-seeded kmeans), then packs at a uniform block stride."""
+    s = cfg.storage
+    if s.layout_mode == "fixed_stride":
+        if s.pool_k <= 0:
+            raise ValueError("layout_mode='fixed_stride' requires "
+                             "storage.pool_k > 0 (--pool-k)")
+        from repro.core.pool import pool_corpus
+        bow_embs = pool_corpus(bow_embs, s.pool_k, seed=s.pool_seed)
+        return pack(cls_embs, bow_embs, dtype=np.dtype(s.dtype),
+                    block=s.block, mode="fixed_stride", pool_k=s.pool_k)
+    return pack(cls_embs, bow_embs, dtype=np.dtype(s.dtype), block=s.block)
+
+
 class Pipeline:
     """A built retrieval stack: corpus + index + storage tier + backend."""
 
@@ -73,9 +90,7 @@ class Pipeline:
                           ncells=cfg.index.resolve_ncells(corpus.n_docs),
                           iters=cfg.index.iters, quant=cfg.index.quant,
                           train_sample=cfg.index.train_sample)
-        layout = pack(corpus.cls, corpus.bow,
-                      dtype=np.dtype(cfg.storage.dtype),
-                      block=cfg.storage.block)
+        layout = _pack_layout(cfg, corpus.cls, corpus.bow)
         return cls._assemble(cfg, corpus, index, layout,
                              cost_model=cost_model, compute=compute)
 
@@ -91,8 +106,7 @@ class Pipeline:
                           ncells=cfg.index.resolve_ncells(len(cls_embs)),
                           iters=cfg.index.iters, quant=cfg.index.quant,
                           train_sample=cfg.index.train_sample)
-        layout = pack(cls_embs, bow_embs, dtype=np.dtype(cfg.storage.dtype),
-                      block=cfg.storage.block)
+        layout = _pack_layout(cfg, cls_embs, bow_embs)
         return cls._assemble(cfg, None, index, layout,
                              cost_model=cost_model, compute=compute)
 
@@ -152,7 +166,8 @@ class Pipeline:
                 auto_compact_dead_frac=mu.auto_compact_dead_frac,
                 compact_interval_s=mu.compact_interval_s,
                 rebalance_skew=mu.rebalance_skew,
-                segments=segments, alive=alive)
+                segments=segments, alive=alive,
+                pool_seed=cfg.storage.pool_seed)
         elif cl.enabled():
             tier = StorageCluster(
                 layout, n_shards=cl.n_shards, replication=cl.replication,

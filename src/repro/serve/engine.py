@@ -84,6 +84,10 @@ class ServeStats:
     replicas_killed: int = 0
     replicas_recovered: int = 0
     recovery_bytes: int = 0            # replica re-sync traffic
+    # storage footprint of the tier being served (captured at server start;
+    # fixed_stride layouts report zero offset/length metadata):
+    resident_bytes: int = 0            # host/device-resident tier bytes
+    layout_mode: str = ""              # ragged | fixed_stride ("" = unknown)
 
     def tenant(self, name: str) -> TenantStats:
         t = self.tenants.get(name)
@@ -156,6 +160,9 @@ class ServeStats:
                "recovery_bytes": self.recovery_bytes}
         if any(mut.values()):
             out["mutation"] = mut
+        if self.layout_mode:
+            out["storage"] = {"layout_mode": self.layout_mode,
+                              "resident_bytes": self.resident_bytes}
         return out
 
 
@@ -175,8 +182,13 @@ class RetrievalServer:
         self.policy = policy or BatchPolicy()
         self.autoscaler = autoscaler
         self.stats = ServeStats()
-        tier_stats = getattr(getattr(retriever, "tier", None), "stats", {})
+        tier = getattr(retriever, "tier", None)
+        tier_stats = getattr(tier, "stats", {})
         self._mut_base = {k: tier_stats.get(k, 0) for k in _MUT_KEYS}
+        if tier is not None and hasattr(tier, "memory_resident_bytes"):
+            self.stats.resident_bytes = int(tier.memory_resident_bytes())
+            self.stats.layout_mode = getattr(
+                getattr(tier, "layout", None), "mode", "")
         # wall latency is recorded on the batcher loop when the request
         # completes, so async submitters (query_async) are measured too —
         # not just callers who block in query()

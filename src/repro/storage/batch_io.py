@@ -97,23 +97,37 @@ class BatchReadPlan:
         concat = np.concatenate(lists)
         uids, first_idx = np.unique(concat, return_index=True)
         u = len(uids)
-        # arena order: sort the union by start block so adjacent docs merge
-        # into sequential runs (the device's favourite access pattern)
-        offs = layout.offsets[uids]
-        order = np.argsort(offs[:, 0], kind="stable")
-        arena_ids = uids[order]
-        arena_starts = offs[order, 0]
-        arena_blocks = offs[order, 1]
-        # sorted-unique position -> arena row (uids is ascending already)
-        sorted_rows = np.empty(u, np.int64)
-        sorted_rows[order] = np.arange(u)
+        fixed = getattr(layout, "mode", "ragged") == "fixed_stride"
+        if fixed:
+            # uniform stride: start blocks are id * stride, already ascending
+            # for the sorted union, so arena order IS id order and every
+            # plan quantity is arithmetic on block indices — no offsets
+            # table, no argsort
+            stride = int(layout.stride_blocks)
+            order = np.arange(u, dtype=np.int64)
+            arena_ids = uids
+            arena_blocks = np.full(u, stride, np.int64)
+            sorted_rows = order
+            # contiguity: consecutive ids are physically adjacent
+            n_contig = 1 + int(np.count_nonzero(np.diff(uids) != 1))
+        else:
+            # arena order: sort the union by start block so adjacent docs
+            # merge into sequential runs (the device's favourite pattern)
+            offs = layout.offsets[uids]
+            order = np.argsort(offs[:, 0], kind="stable")
+            arena_ids = uids[order]
+            arena_starts = offs[order, 0]
+            arena_blocks = offs[order, 1]
+            # sorted-unique position -> arena row (uids ascending already)
+            sorted_rows = np.empty(u, np.int64)
+            sorted_rows[order] = np.arange(u)
+            n_contig = 1 + int(np.count_nonzero(
+                arena_starts[1:] != arena_starts[:-1] + arena_blocks[:-1]))
         # runs are the pipelining granularity: equal arena chunks gathered
         # concurrently on the pool while the caller reranks landed queries.
         # (Block contiguity is an accounting property of the sorted union —
-        # counted below — not a run boundary: splitting at every seek would
+        # counted above — not a run boundary: splitting at every seek would
         # drown small gathers in submission overhead.)
-        n_contig = 1 + int(np.count_nonzero(
-            arena_starts[1:] != arena_starts[:-1] + arena_blocks[:-1]))
         chunk = run_chunk(u, chunk_docs)
         runs = [(r0, min(r0 + chunk, u)) for r0 in range(0, u, chunk)]
         run_starts = np.array([r0 for r0, _ in runs], np.int64)
@@ -132,8 +146,14 @@ class BatchReadPlan:
         bounds_q = _exclusive_cumsum(
             np.array([len(x) for x in lists], np.int64))
         owner = np.searchsorted(bounds_q, first_idx, side="right") - 1
-        owned = np.zeros(len(lists), np.int64)
-        np.add.at(owned, owner, offs[:, 1])
+        if fixed:
+            # every doc costs exactly `stride` blocks: attribution is a
+            # bincount times the stride
+            owned = np.bincount(owner, minlength=len(lists)).astype(
+                np.int64) * stride
+        else:
+            owned = np.zeros(len(lists), np.int64)
+            np.add.at(owned, owner, offs[:, 1])
         return cls(lists=lists, arena_ids=arena_ids,
                    arena_blocks=arena_blocks, runs=runs,
                    query_rows=query_rows, query_runs=query_runs,

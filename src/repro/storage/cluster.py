@@ -94,7 +94,8 @@ def build_shard_layout(layout: EmbeddingLayout,
         blob=blob, offsets=offsets, n_tokens=layout.n_tokens[gids],
         d_cls=layout.d_cls, d_bow=layout.d_bow, dtype=layout.dtype,
         scales=layout.scales[gids] if layout.scales is not None else None,
-        block=block)
+        block=block, mode=layout.mode, stride_blocks=layout.stride_blocks,
+        pool_k=layout.pool_k)
 
 
 # -- replica clocks + hedging ------------------------------------------------
@@ -209,6 +210,9 @@ class StorageCluster:
         self.fde = fde
         self.spec = spec
         self.stack = stack
+        if layout.mode == "fixed_stride":
+            # arena rows sized to the pooled token count, not t_max
+            t_max = min(t_max, layout.pool_k)
         self.t_max = t_max
         self.qd = qd
         self.coalesce = coalesce

@@ -45,6 +45,10 @@ class StorageTier:
                  io_chunk_docs: int | None = None):
         assert stack in ("espn", "mmap", "swap", "dram")
         self.layout = layout
+        if layout.mode == "fixed_stride":
+            # every doc holds exactly pool_k tokens: arena rows sized to k,
+            # not the ragged t_max padding ceiling
+            t_max = min(t_max, layout.pool_k)
         self.bits = bits              # resident sign-bit tier (bitvec filter)
         self.fde = fde                # resident FDE tier (fde candidate gen)
         self._closed = False
@@ -189,8 +193,9 @@ class StorageTier:
 
     # -- reporting -----------------------------------------------------------
     def memory_resident_bytes(self) -> int:
-        """Host/device memory this tier requires (ESPN: offsets only)."""
-        meta = self.layout.offsets.nbytes + self.layout.n_tokens.nbytes
+        """Host/device memory this tier requires (ESPN: offsets only;
+        fixed-stride layouts compute offsets, so their metadata is free)."""
+        meta = self.layout.meta_nbytes
         if self.bits is not None:
             meta += self.bits.nbytes
         if self.fde is not None:

@@ -38,6 +38,7 @@ import threading
 
 import numpy as np
 
+from repro.core.pool import pool_tokens
 from repro.storage import ssd as ssd_lib
 from repro.storage.cluster import StorageCluster
 from repro.storage.layout import pack, unpack_doc
@@ -53,9 +54,13 @@ class MutableStorageCluster(StorageCluster):
                  auto_compact_dead_frac: float = 0.0,
                  compact_interval_s: float = 0.0,
                  rebalance_skew: float = 0.0,
+                 pool_seed: int = 0,
                  segments: list[list[Segment]] | None = None,
                  alive: np.ndarray | None = None, **kw):
         super().__init__(layout, **kw)
+        # fixed-stride layouts pool incoming docs with this seed — the same
+        # seed a from-scratch rebuild would use (churn == rebuild oracle)
+        self.pool_seed = int(pool_seed)
         self.auto_compact_segments = int(auto_compact_segments)
         self.auto_compact_dead_frac = float(auto_compact_dead_frac)
         self.compact_interval_s = float(compact_interval_s)
@@ -196,8 +201,19 @@ class MutableStorageCluster(StorageCluster):
             return np.zeros(0, np.int64)
         with self._mut_lock:
             self._check_open()
-            seg_layout = pack(cls_embs, bows, dtype=self.layout.dtype,
-                              scales=scales, block=self.layout.block)
+            if self.layout.mode == "fixed_stride":
+                # pool to the layout's fixed k first — content-seeded, so
+                # the segment rows are bit-identical to what a from-scratch
+                # rebuild over the grown corpus would pack
+                bows = [pool_tokens(b, self.layout.pool_k,
+                                    seed=self.pool_seed) for b in bows]
+                seg_layout = pack(cls_embs, bows, dtype=self.layout.dtype,
+                                  scales=scales, block=self.layout.block,
+                                  mode="fixed_stride",
+                                  pool_k=self.layout.pool_k)
+            else:
+                seg_layout = pack(cls_embs, bows, dtype=self.layout.dtype,
+                                  scales=scales, block=self.layout.block)
             n0 = self.layout.n_docs
             n_new = len(bows)
             gids = np.arange(n0, n0 + n_new, dtype=np.int64)

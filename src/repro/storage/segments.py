@@ -40,13 +40,14 @@ class Segment:
 
 
 def empty_layout(like: EmbeddingLayout) -> EmbeddingLayout:
-    """A zero-doc layout with ``like``'s dimensions and dtype."""
+    """A zero-doc layout with ``like``'s dimensions, dtype, and mode."""
     return EmbeddingLayout(
         blob=np.zeros(0, np.uint8), offsets=np.zeros((0, 2), np.int64),
         n_tokens=np.zeros(0, np.int32), d_cls=like.d_cls, d_bow=like.d_bow,
         dtype=like.dtype,
         scales=(np.zeros(0, np.float32) if like.scales is not None else None),
-        block=like.block)
+        block=like.block, mode=like.mode, stride_blocks=like.stride_blocks,
+        pool_k=like.pool_k)
 
 
 def concat_layouts(layouts: list[EmbeddingLayout],
@@ -67,6 +68,9 @@ def concat_layouts(layouts: list[EmbeddingLayout],
                              "dimensions or block size")
         if np.dtype(lay.dtype) != np.dtype(like.dtype):
             raise ValueError("cannot concat layouts with mismatched dtypes")
+        if lay.mode != like.mode:
+            raise ValueError("cannot concat layouts with mismatched "
+                             "layout modes")
     has_scales = [lay.scales is not None for lay in layouts]
     if any(has_scales) and not all(has_scales):
         raise ValueError("cannot concat layouts mixing scaled and "
@@ -85,7 +89,8 @@ def concat_layouts(layouts: list[EmbeddingLayout],
         d_cls=like.d_cls, d_bow=like.d_bow, dtype=np.dtype(like.dtype),
         scales=(np.concatenate([lay.scales for lay in layouts])
                 if all(has_scales) else None),
-        block=like.block)
+        block=like.block, mode=like.mode, stride_blocks=like.stride_blocks,
+        pool_k=like.pool_k)
 
 
 def merge_rows(pieces: list[tuple[EmbeddingLayout, np.ndarray, np.ndarray]],

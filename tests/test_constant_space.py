@@ -1,0 +1,396 @@
+"""Constant-space layout mode: deterministic token pooling, the
+``fixed_stride`` storage refactor, the vectorized bit-tier builders, the
+``cspn``/``cascade`` backends, and the ragged<->fixed bitwise parity
+contract (a pooled corpus must rank, bill, and time identically under both
+layout modes for EVERY registered backend)."""
+import dataclasses
+import functools
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.pool import pool_corpus, pool_tokens
+from repro.data.synthetic import make_corpus
+from repro.pipeline import (MutationConfig, Pipeline, PipelineConfig,
+                            available_backends)
+from repro.storage.batch_io import BatchReadPlan
+from repro.storage.layout import (BitTable, bits_from_layout, pack,
+                                  pack_bits, unpack_doc)
+
+POOL_K = 8
+
+
+@functools.lru_cache(maxsize=1)
+def corpus():
+    return make_corpus(n_docs=400, n_queries=8, n_clusters=8, mean_len=12,
+                       max_len=24, seed=3)
+
+
+@functools.lru_cache(maxsize=1)
+def pooled_corpus():
+    """The corpus with every doc pooled to exactly POOL_K tokens. Pooling
+    is idempotent at t == k, so building a fixed_stride pipeline over this
+    corpus packs the SAME records a ragged pack of it does — the parity
+    tests compare the two modes on identical content."""
+    c = corpus()
+    bow = pool_corpus(c.bow, POOL_K, seed=0)
+    return dataclasses.replace(
+        c, bow=bow, doc_lens=np.full(len(bow), POOL_K,
+                                     c.doc_lens.dtype))
+
+
+def cfg_for(mode, layout_mode="ragged", **retrieval_kw):
+    cfg = PipelineConfig()
+    cfg.index.ncells = 16
+    cfg.retrieval.mode = mode
+    cfg.retrieval.nprobe = 8
+    cfg.retrieval.k_candidates = 30
+    for k, v in retrieval_kw.items():
+        setattr(cfg.retrieval, k, v)
+    cfg.storage.layout_mode = layout_mode
+    if layout_mode == "fixed_stride":
+        cfg.storage.pool_k = POOL_K
+    return cfg
+
+
+# -- pooling (core/pool.py) --------------------------------------------------
+
+def test_pool_tokens_shapes_and_determinism(rng):
+    for t in (0, 3, POOL_K, 40):
+        toks = rng.standard_normal((t, 16)).astype(np.float32)
+        a = pool_tokens(toks, POOL_K, seed=5)
+        b = pool_tokens(toks.copy(), POOL_K, seed=5)
+        assert a.shape == (POOL_K, 16) and a.dtype == np.float32
+        np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError):
+        pool_tokens(np.zeros((4, 8), np.float32), 0)
+
+
+def test_pool_keeps_short_docs_verbatim_and_mean_pads(rng):
+    toks = rng.standard_normal((5, 16)).astype(np.float32)
+    out = pool_tokens(toks, POOL_K)
+    np.testing.assert_array_equal(out[:5], toks)
+    np.testing.assert_array_equal(out[5:],
+                                  np.broadcast_to(toks.mean(axis=0), (3, 16)))
+    # idempotence at t == k: the parity suite depends on this
+    np.testing.assert_array_equal(pool_tokens(out, POOL_K), out)
+
+
+def test_mean_padding_never_changes_maxsim(rng):
+    """mean.q is the average of the token dot products, which cannot exceed
+    their max — so the padded rows never win a MaxSim argmax."""
+    for _ in range(20):
+        t = int(rng.integers(1, POOL_K + 1))
+        toks = rng.standard_normal((t, 16)).astype(np.float32)
+        q = rng.standard_normal((4, 16)).astype(np.float32)
+        pooled = pool_tokens(toks, POOL_K)
+        # one matmul, compared within itself (GEMM rounding is shape-
+        # dependent, so recomputing with (t, d) would differ in the ulp)
+        sims = q @ pooled.T                       # (4, POOL_K)
+        np.testing.assert_array_equal(sims.max(axis=1),
+                                      sims[:, :t].max(axis=1))
+
+
+def test_pool_oversized_doc_is_seeded_kmeans(rng):
+    toks = rng.standard_normal((50, 16)).astype(np.float32)
+    a = pool_tokens(toks, POOL_K, seed=1)
+    b = pool_tokens(toks, POOL_K, seed=1)
+    c = pool_tokens(toks, POOL_K, seed=2)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)          # seed actually steers the init
+    assert np.isfinite(a).all()
+
+
+# -- pack([]) regression + empty-table consistency ---------------------------
+
+def test_pack_empty_corpus_is_valid():
+    lay = pack(np.zeros((0, 32), np.float32), [])
+    assert lay.n_docs == 0 and lay.nbytes == 0
+    assert lay.blocks_for([]) == 0
+    lay_f = pack(np.zeros((0, 32), np.float32), [], mode="fixed_stride",
+                 pool_k=POOL_K, d_bow=16)
+    assert lay_f.n_docs == 0 and lay_f.mode == "fixed_stride"
+    assert lay_f.d_bow == 16
+
+
+def test_empty_bits_match_empty_layout():
+    lay = pack(np.zeros((0, 32), np.float32), [], d_bow=16)
+    direct = pack_bits([], d_bow=16)
+    derived = bits_from_layout(lay)
+    assert direct.d_bow == derived.d_bow == 16
+    np.testing.assert_array_equal(direct.starts, derived.starts)
+    assert direct.packed.shape == derived.packed.shape
+
+
+# -- vectorized bit-tier builders vs the loop reference ----------------------
+
+def _bits_loop_reference(layout, dtype="uint32"):
+    """The pre-vectorization per-doc construction."""
+    bows = [unpack_doc(layout, i)[1] for i in range(layout.n_docs)]
+    return pack_bits(bows, dtype=dtype, d_bow=layout.d_bow)
+
+
+@pytest.mark.parametrize("dtype", ["uint8", "uint32"])
+def test_bits_from_layout_matches_loop(dtype):
+    c = corpus()
+    layout = pack(c.cls, c.bow)
+    fast = bits_from_layout(layout, dtype=dtype)
+    ref = _bits_loop_reference(layout, dtype=dtype)
+    np.testing.assert_array_equal(fast.packed, ref.packed)
+    np.testing.assert_array_equal(fast.starts, ref.starts)
+    assert fast.d_bow == ref.d_bow
+
+
+def _gather_loop_reference(bits: BitTable, ids, t_max: int):
+    lanes = bits.lanes32
+    out = np.zeros((len(ids), t_max, lanes.shape[-1]), np.uint32)
+    lens = np.zeros(len(ids), np.int32)
+    for r, i in enumerate(np.asarray(ids, np.int64)):
+        doc = lanes[bits.starts[i]:bits.starts[i + 1]]
+        t = min(len(doc), t_max)
+        out[r, :t] = doc[:t]
+        lens[r] = t
+    return out, lens
+
+
+def test_bit_gather_matches_loop(rng):
+    c = corpus()
+    bits = bits_from_layout(pack(c.cls, c.bow))
+    for t_max in (4, 24, 64):
+        ids = rng.integers(0, bits.n_docs, size=50)
+        fast = bits.gather(ids, t_max)
+        ref = _gather_loop_reference(bits, ids, t_max)
+        np.testing.assert_array_equal(fast[0], ref[0])
+        np.testing.assert_array_equal(fast[1], ref[1])
+    empty = bits.gather([], 8)
+    assert empty[0].shape[0] == 0 and empty[1].shape[0] == 0
+
+
+# -- fixed-stride layout contract --------------------------------------------
+
+def test_fixed_pack_requires_uniform_pool_k(rng):
+    cls = rng.standard_normal((3, 32)).astype(np.float32)
+    bows = [rng.standard_normal((t, 16)).astype(np.float32)
+            for t in (POOL_K, POOL_K, POOL_K - 1)]
+    with pytest.raises(ValueError, match="pool"):
+        pack(cls, bows, mode="fixed_stride", pool_k=POOL_K)
+    with pytest.raises(ValueError):
+        pack(cls, bows[:1], mode="fixed_stride", pool_k=0)
+
+
+def test_fixed_layout_zero_metadata_and_computed_offsets():
+    c = pooled_corpus()
+    ragged = pack(c.cls, c.bow)
+    fixed = pack(c.cls, c.bow, mode="fixed_stride", pool_k=POOL_K)
+    assert fixed.meta_nbytes == 0 and ragged.meta_nbytes > 0
+    # same content, same records, same block starts: the blob is bitwise
+    # identical, and the computed offsets equal the stored ones
+    np.testing.assert_array_equal(fixed.blob, ragged.blob)
+    np.testing.assert_array_equal(fixed.offsets, ragged.offsets)
+    np.testing.assert_array_equal(fixed.n_tokens, ragged.n_tokens)
+    assert fixed.blocks_for([0, 5, 7]) == ragged.blocks_for([0, 5, 7])
+    for i in (0, 1, len(c.bow) - 1):
+        rc, rb = unpack_doc(ragged, i)
+        fc, fb = unpack_doc(fixed, i)
+        np.testing.assert_array_equal(rc, fc)
+        np.testing.assert_array_equal(rb, fb)
+
+
+def test_fixed_batch_plan_matches_ragged():
+    """The fixed-stride plan is pure arithmetic (no argsort, no offset
+    table) but must reproduce the ragged plan exactly on the same pooled
+    content — uniform strides make the ragged sort the identity."""
+    c = pooled_corpus()
+    ragged = pack(c.cls, c.bow)
+    fixed = pack(c.cls, c.bow, mode="fixed_stride", pool_k=POOL_K)
+    rng = np.random.default_rng(11)
+    lists = [rng.integers(0, len(c.bow), size=n) for n in (20, 0, 13, 20)]
+    pr = BatchReadPlan.build(ragged, lists)
+    pf = BatchReadPlan.build(fixed, lists)
+    np.testing.assert_array_equal(pr.arena_ids, pf.arena_ids)
+    np.testing.assert_array_equal(pr.arena_blocks, pf.arena_blocks)
+    assert pr.runs == pf.runs
+    assert pr.n_unique == pf.n_unique and pr.n_requested == pf.n_requested
+    for qr, qf in zip(pr.query_rows, pf.query_rows):
+        np.testing.assert_array_equal(qr, qf)
+    np.testing.assert_array_equal(pr.owned_blocks, pf.owned_blocks)
+
+
+# -- ragged<->fixed parity for every registered backend ----------------------
+
+@pytest.mark.parametrize("mode", sorted(available_backends()))
+def test_backend_parity_ragged_vs_fixed(mode):
+    """On a pooled corpus the two layout modes hold identical bytes, so
+    every backend must produce bitwise-identical rankings, bills, and
+    device time — the refactor is a storage change, not a scoring one."""
+    c = pooled_corpus()
+    a = Pipeline.build(cfg_for(mode), corpus=c)
+    b = Pipeline.build(cfg_for(mode, layout_mode="fixed_stride"), corpus=c)
+    assert b.layout.mode == "fixed_stride" and b.layout.meta_nbytes == 0
+    ra, rb = a.search(), b.search()
+    for qa, qb in zip(ra.ranked, rb.ranked):
+        np.testing.assert_array_equal(qa.doc_ids, qb.doc_ids)
+        np.testing.assert_array_equal(qa.scores, qb.scores)
+    assert ra.breakdown.total_s == rb.breakdown.total_s
+    assert ra.breakdown.bytes_read == rb.breakdown.bytes_read
+    assert ra.breakdown.dedup_bytes_saved == rb.breakdown.dedup_bytes_saved
+    # constant-space win: the fixed tier carries strictly less resident
+    # metadata than the ragged one (offsets/n_tokens are computed)
+    assert (b.tier.memory_resident_bytes()
+            <= a.tier.memory_resident_bytes() - a.layout.meta_nbytes
+            + b.layout.meta_nbytes)
+    a.close()
+    b.close()
+
+
+def test_fixed_stride_blocks_per_doc_have_zero_variance():
+    c = corpus()
+    cfg = cfg_for("cspn", layout_mode="fixed_stride")
+    pipe = Pipeline.build(cfg, corpus=c)
+    nb = pipe.layout.offsets[:, 1]
+    assert int(nb.var()) == 0 and int(nb.min()) == int(nb.max())
+    pipe.close()
+
+
+# -- cascade wiring ----------------------------------------------------------
+
+def test_cascade_declares_and_reads_fewer_bytes():
+    """fde->bitvec->SSD: the cascade carries BOTH side tables and pays SSD
+    bytes only for its bit-filter survivors, so at equal candidate width it
+    reads strictly fewer BOW bytes per query than the direct SSD rerank."""
+    c = pooled_corpus()
+    base = Pipeline.build(cfg_for("cspn", layout_mode="fixed_stride"),
+                          corpus=c)
+    casc = base.with_mode("cascade", cascade_filter=10)
+    assert casc.tier.bits is not None and casc.tier.fde is not None
+    assert base.tier.bits is None and base.tier.fde is None
+    rb, rc = base.search(), casc.search()
+    assert rc.breakdown.bytes_read < rb.breakdown.bytes_read
+    assert all(len(q.doc_ids) for q in rc.ranked)
+    base.close()
+    casc.close()
+
+
+def test_cascade_candidate_width_override():
+    c = pooled_corpus()
+    narrow = Pipeline.build(
+        cfg_for("cascade", layout_mode="fixed_stride", cascade_filter=10,
+                cascade_candidates=12), corpus=c)
+    wide = narrow.with_mode("cascade", cascade_filter=10,
+                            cascade_candidates=0)   # 0 = k_candidates (30)
+    rn, rw = narrow.search(), wide.search()
+    # both rerank exactly cascade_filter docs per query...
+    assert all(q.n_reranked <= 10 for q in rn.ranked)
+    assert all(q.n_reranked <= 10 for q in rw.ranked)
+    # ...but the wider FDE stage sees more candidates
+    assert all(len(q.doc_ids) >= len(p.doc_ids)
+               for p, q in zip(rn.ranked, rw.ranked))
+    narrow.close()
+    wide.close()
+
+
+# -- mutation under fixed stride ---------------------------------------------
+
+def test_fixed_churn_matches_rebuild_oracle():
+    """Online pooled ingest + delete + compact must rank exactly like a
+    from-scratch fixed-stride rebuild over the surviving docs (pooling is
+    content-deterministic, so ingest-time pooling == rebuild pooling)."""
+    from test_mutation import _rebuild_oracle, new_docs
+    c = corpus()
+    cfg = cfg_for("cspn", layout_mode="fixed_stride")
+    cfg.mutation = MutationConfig(enabled=True)
+    pipe = Pipeline.build(cfg, corpus=c)
+    rng = np.random.default_rng(17)
+    batches = []
+    for step in range(2):
+        docs = new_docs(rng, pipe, 4)
+        batches.append(docs)
+        gids = pipe.ingest(*docs)
+        assert int(gids[-1]) == pipe.layout.n_docs - 1
+        pipe.delete([int(gids[0]), 7 + step])
+        if step == 0:
+            pipe.compact()
+    all_cls = np.concatenate([c.cls] + [b[0] for b in batches])
+    all_bows = list(c.bow) + [bw for b in batches for bw in b[1]]
+    oracle = _rebuild_oracle("cspn", all_cls, all_bows, batches,
+                             pipe.tier.alive, cfg=cfg)
+    assert oracle.layout.mode == "fixed_stride"
+    q = (c.queries_cls, c.queries_bow, c.query_lens)
+    ra, rb = pipe.search(*q), oracle.search(*q)
+    for qa, qb in zip(ra.ranked, rb.ranked):
+        np.testing.assert_array_equal(qa.doc_ids, qb.doc_ids)
+        np.testing.assert_array_equal(qa.scores, qb.scores)
+    pipe.close()
+    oracle.close()
+
+
+# -- persistence + CLI round-trips -------------------------------------------
+
+def test_fixed_layout_save_load_skips_offset_tables():
+    c = corpus()
+    cfg = cfg_for("cspn", layout_mode="fixed_stride")
+    pipe = Pipeline.build(cfg, corpus=c)
+    r0 = pipe.search()
+    with tempfile.TemporaryDirectory() as d:
+        pipe.save(d)
+        z = np.load(os.path.join(d, "layout.npz"))
+        assert "offsets" not in z.files and "n_tokens" not in z.files
+        assert str(z["mode"]) == "fixed_stride"
+        p2 = Pipeline.load(d)
+        assert p2.layout.mode == "fixed_stride"
+        assert p2.layout.meta_nbytes == 0
+        np.testing.assert_array_equal(p2.layout.offsets, pipe.layout.offsets)
+        r1 = p2.search()
+        for qa, qb in zip(r0.ranked, r1.ranked):
+            np.testing.assert_array_equal(qa.doc_ids, qb.doc_ids)
+            np.testing.assert_array_equal(qa.scores, qb.scores)
+        p2.close()
+    pipe.close()
+
+
+def test_cli_round_trips_layout_and_cascade_knobs():
+    import argparse
+    ap = PipelineConfig.add_cli_args(argparse.ArgumentParser())
+    args = ap.parse_args(["--mode", "cascade", "--layout-mode",
+                          "fixed_stride", "--pool-k", "16", "--pool-seed",
+                          "3", "--cascade-filter", "48",
+                          "--cascade-candidates", "96"])
+    cfg = PipelineConfig.from_cli(args)
+    assert cfg.storage.layout_mode == "fixed_stride"
+    assert cfg.storage.pool_k == 16 and cfg.storage.pool_seed == 3
+    assert cfg.retrieval.cascade_filter == 48
+    assert cfg.retrieval.cascade_candidates == 96
+    ec = cfg.retrieval.to_espn_config()
+    assert ec.cascade_filter == 48 and ec.cascade_candidates == 96
+    # dict round-trip carries the new sections too
+    cfg2 = PipelineConfig.from_dict(cfg.to_dict())
+    assert cfg2.storage.pool_k == 16
+    assert cfg2.retrieval.cascade_candidates == 96
+
+
+def test_build_rejects_fixed_stride_without_pool_k():
+    cfg = cfg_for("cspn", layout_mode="fixed_stride")
+    cfg.storage.pool_k = 0
+    with pytest.raises(ValueError, match="pool_k"):
+        Pipeline.build(cfg, corpus=corpus())
+
+
+# -- serve stats surface the pooled tier's footprint -------------------------
+
+def test_serve_stats_report_resident_bytes():
+    c = corpus()
+    pipe = Pipeline.build(cfg_for("cspn", layout_mode="fixed_stride"),
+                          corpus=c)
+    server = pipe.serve()
+    try:
+        server.query(c.queries_cls[0], c.queries_bow[0],
+                     int(c.query_lens[0]))
+        s = server.stats.summary()
+        assert s["storage"]["layout_mode"] == "fixed_stride"
+        assert (s["storage"]["resident_bytes"]
+                == pipe.tier.memory_resident_bytes())
+    finally:
+        server.shutdown()
+        pipe.close()

@@ -359,12 +359,16 @@ def test_concat_and_merge_round_trip_rows():
 
 # -- churn property test: incremental == rebuild oracle ----------------------
 
-def _rebuild_oracle(mode, all_cls, all_bows, ingest_batches, alive):
+def _rebuild_oracle(mode, all_cls, all_bows, ingest_batches, alive,
+                    cfg=None):
     """The from-scratch stack: pack every doc ever seen, rebuild the side
     tiers from the grown layout, replay the IVF as build(original) +
     ivf_add(each ingest batch in order), and apply the same tombstones.
-    An immutable tier masks the dead via the ``alive`` attribute hook."""
-    cfg = base_cfg(mode)
+    An immutable tier masks the dead via the ``alive`` attribute hook.
+    ``cfg`` overrides the default ragged config (e.g. a fixed_stride
+    storage section: the pack honors its layout mode, so online pooled
+    ingest is held to the same rebuild oracle)."""
+    cfg = cfg or base_cfg(mode)
     n0 = len(all_cls) - sum(len(b[0]) for b in ingest_batches)
     index = build_ivf(all_cls[:n0], ncells=16, iters=cfg.index.iters,
                       quant=cfg.index.quant,
@@ -373,8 +377,8 @@ def _rebuild_oracle(mode, all_cls, all_bows, ingest_batches, alive):
     for cls_b, _ in ingest_batches:
         ivf_add(index, cls_b, np.arange(start, start + len(cls_b)))
         start += len(cls_b)
-    layout = pack(all_cls, all_bows, dtype=np.dtype(cfg.storage.dtype),
-                  block=cfg.storage.block)
+    from repro.pipeline.pipeline import _pack_layout
+    layout = _pack_layout(cfg, all_cls, all_bows)
     oracle = Pipeline.from_artifacts(cfg, index=index, layout=layout)
     oracle.tier.alive = alive.copy()
     return oracle
@@ -382,7 +386,7 @@ def _rebuild_oracle(mode, all_cls, all_bows, ingest_batches, alive):
 
 @settings(max_examples=6)
 @given(seed=st.integers(0, 10_000),
-       mode=st.sampled_from(["espn", "bitvec", "fde"]),
+       mode=st.sampled_from(["espn", "bitvec", "fde", "cspn", "cascade"]),
        compact_when=st.sampled_from(["never", "mid", "end"]))
 def test_churn_matches_rebuild_oracle(seed, mode, compact_when):
     """Any interleaving of ingests, deletes, and compactions must rank
