@@ -1,0 +1,244 @@
+"""Storage fault injection: chaos sweep, end-to-end integrity, and the
+degraded-mode serving payoff.
+
+Four sections, all in ``BENCH_faults.json``:
+
+* **identity** — every registered backend runs the same queries on a
+  fault-free stack and on a stack with the fault machinery ATTACHED but
+  inert (``FaultConfig(checksum=True)``: injector constructed, every rate
+  zero). Rankings, scores, and the device-clock bill must be
+  bitwise-identical — the fault path costs nothing when nothing fires.
+* **chaos sweep** — espn over a 2-shard replicated cluster at 1-5% fault
+  rates (read errors + stalls + wire corruption + replica flaps, checksums
+  on). Records recall retention vs the fault-free baseline, p50/p99 sim
+  latency, retries/repairs/degraded counts, and that zero batches crashed.
+* **corruption** — a high wire-corruption rate with checksums on: every
+  injected corruption must be detected (crc32) and repaired from a healthy
+  copy, leaving rankings identical to the clean run; with checksums off the
+  same schedule silently flips scores.
+* **goodput** — the serving A/B behind the whole PR: the same faulty stack
+  (serial reads, no replicas, zero retries) served with degraded-mode
+  answering enabled vs disabled. Disabled, one bad read fails its whole
+  batch (the scheduler guard keeps the loop alive); enabled, only the
+  faulty queries degrade. The CI gate asserts goodput(enabled) is strictly
+  above goodput(disabled) and every request reached a terminal state.
+
+    REPRO_BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run --only faults
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+FAULT_KEYS = ("retries", "read_errors", "stalls", "replica_flaps",
+              "corruptions_injected", "checksum_failures", "repairs",
+              "repair_bytes", "faults_injected", "shard_read_failures")
+
+
+def _pipeline(corpus, index, layout, *, mode="espn", cluster=False,
+              serial=False, **fault_kw):
+    from repro.pipeline import Pipeline, PipelineConfig
+    from repro.storage.faults import FaultConfig
+
+    cfg = PipelineConfig()
+    cfg.retrieval.mode = mode
+    cfg.retrieval.nprobe = 8
+    cfg.retrieval.k_candidates = 50
+    cfg.storage.t_max = 64
+    if serial:
+        cfg.storage.io_coalesce = False
+    if cluster:
+        cfg.cluster.n_shards = 2
+        cfg.cluster.replication = 2
+    cfg.faults = FaultConfig(**fault_kw)
+    return Pipeline.from_artifacts(cfg, index=index, layout=layout,
+                                   corpus=corpus)
+
+
+def _run_batches(pipe, corpus, n_batches: int, batch: int):
+    """Drive ``n_batches`` query batches (corpus queries tiled), collecting
+    per-batch sim latency and the concatenated rankings."""
+    nq = len(corpus.queries_cls)
+    lats, rankings = [], []
+    for i in range(n_batches):
+        sel = [(i * batch + j) % nq for j in range(batch)]
+        resp = pipe.search(corpus.queries_cls[sel], corpus.queries_bow[sel],
+                           corpus.query_lens[sel])
+        lats.append(resp.breakdown.total_s * 1e3)
+        rankings.extend((sel[j], r.doc_ids) for j, r in enumerate(resp.ranked))
+    return lats, rankings
+
+
+def _recall(rankings, qrels, k: int = 100) -> float:
+    hits = tot = 0
+    for q, ids in rankings:
+        rel = qrels[q]
+        if not rel:
+            continue
+        hits += len(rel & set(int(i) for i in ids[:k]))
+        tot += len(rel)
+    return hits / max(tot, 1)
+
+
+def _fault_stats(tier) -> dict:
+    return {k: int(tier.stats.get(k, 0)) for k in FAULT_KEYS}
+
+
+# -- identity: inert fault machinery is bitwise-free --------------------------
+def _identity_section(corpus, index, layout) -> dict:
+    from repro.pipeline.backends import available_backends
+
+    rows = []
+    for mode in available_backends():
+        base = _pipeline(corpus, index, layout, mode=mode)
+        inert = _pipeline(corpus, index, layout, mode=mode, checksum=True)
+        rb = base.search()
+        ri = inert.search()
+        ranks_equal = all(
+            np.array_equal(a.doc_ids, b.doc_ids)
+            and np.array_equal(a.scores, b.scores)
+            for a, b in zip(rb.ranked, ri.ranked))
+        bill_equal = rb.breakdown.total_s == ri.breakdown.total_s \
+            and rb.breakdown.bytes_read == ri.breakdown.bytes_read
+        rows.append({"mode": mode, "ranks_equal": ranks_equal,
+                     "bill_equal": bill_equal,
+                     "faults_injected": _fault_stats(inert.tier)[
+                         "faults_injected"]})
+        common.row(f"faults_identity_{mode}", 0.0,
+                   f"ranks_equal={ranks_equal} bill_equal={bill_equal}")
+        base.close()
+        inert.close()
+    return {"rows": rows,
+            "all_identical": all(r["ranks_equal"] and r["bill_equal"]
+                                 and r["faults_injected"] == 0
+                                 for r in rows)}
+
+
+# -- chaos sweep --------------------------------------------------------------
+def _chaos_section(corpus, index, layout, n_batches: int, batch: int) -> dict:
+    clean = _pipeline(corpus, index, layout, cluster=True)
+    base_lats, base_ranks = _run_batches(clean, corpus, n_batches, batch)
+    base_recall = _recall(base_ranks, corpus.qrels)
+    base_p99 = float(np.percentile(base_lats, 99))
+    clean.close()
+
+    rows = []
+    for rate in (0.01, 0.02, 0.05):
+        pipe = _pipeline(corpus, index, layout, cluster=True,
+                         read_error_rate=rate, stall_rate=rate,
+                         stall_ms=1.0, corruption_rate=rate,
+                         flap_rate=rate / 2, read_retries=2, checksum=True,
+                         seed=7)
+        lats, ranks = _run_batches(pipe, corpus, n_batches, batch)
+        st = _fault_stats(pipe.tier)
+        rec = _recall(ranks, corpus.qrels)
+        r = {"rate": rate,
+             "recall": round(rec, 4),
+             "recall_frac": round(rec / max(base_recall, 1e-9), 4),
+             "p50_ms": round(float(np.percentile(lats, 50)), 4),
+             "p99_ms": round(float(np.percentile(lats, 99)), 4),
+             "p99_ratio": round(float(np.percentile(lats, 99))
+                                / max(base_p99, 1e-9), 4),
+             "crashes": 0} | st          # reaching here = no batch raised
+        rows.append(r)
+        common.row(f"faults_chaos_{rate}", r["p99_ms"] * 1e3,
+                   f"recall_frac={r['recall_frac']} "
+                   f"faults={st['faults_injected']} "
+                   f"retries={st['retries']} repairs={st['repairs']}")
+        pipe.close()
+    return {"base_recall": round(base_recall, 4),
+            "base_p99_ms": round(base_p99, 4), "rows": rows}
+
+
+# -- corruption detection -----------------------------------------------------
+def _corruption_section(corpus, index, layout, n_batches: int,
+                        batch: int) -> dict:
+    clean = _pipeline(corpus, index, layout, cluster=True)
+    _, base_ranks = _run_batches(clean, corpus, n_batches, batch)
+    clean.close()
+
+    out = {}
+    for checksum in (True, False):
+        pipe = _pipeline(corpus, index, layout, cluster=True,
+                         corruption_rate=0.25, checksum=checksum, seed=11)
+        _, ranks = _run_batches(pipe, corpus, n_batches, batch)
+        st = _fault_stats(pipe.tier)
+        ranks_clean = all(np.array_equal(a[1], b[1])
+                          for a, b in zip(base_ranks, ranks))
+        detection = (st["checksum_failures"]
+                     / max(st["corruptions_injected"], 1))
+        key = "checksum_on" if checksum else "checksum_off"
+        out[key] = st | {
+            "detection_rate": round(detection, 4),
+            "repaired_all": st["repairs"] == st["checksum_failures"],
+            "ranks_match_clean": ranks_clean}
+        common.row(f"faults_{key}", 0.0,
+                   f"corruptions={st['corruptions_injected']} "
+                   f"detected={st['checksum_failures']} "
+                   f"clean_ranks={ranks_clean}")
+        pipe.close()
+    return out
+
+
+# -- degraded-mode serving A/B ------------------------------------------------
+def _goodput_section(corpus, index, layout, n_requests: int) -> dict:
+    from repro.serve.engine import RetrievalServer
+    from repro.serve.scheduler import BatchPolicy
+
+    nq = len(corpus.queries_cls)
+    out = {}
+    for degrade in (True, False):
+        pipe = _pipeline(corpus, index, layout, mode="gds", serial=True,
+                         read_error_rate=0.08, read_retries=0,
+                         degrade=degrade, seed=3)
+        srv = RetrievalServer(pipe.backend, policy=BatchPolicy(
+            max_batch=8, max_wait_s=0.05))
+        reqs = [srv.query_async(corpus.queries_cls[i % nq],
+                                corpus.queries_bow[i % nq],
+                                corpus.query_lens[i % nq])
+                for i in range(n_requests)]
+        for r in reqs:
+            if not r.done.wait(60.0):
+                raise RuntimeError("serve request hung under fault load")
+        loop_alive = srv.batcher._thread.is_alive()   # survived the faults
+        srv.shutdown()
+        s = srv.stats
+        terminal = s.served_in_slo + s.slo_violations + s.degraded \
+            + s.errors + s.shed + s.timeouts
+        key = "degrade_on" if degrade else "degrade_off"
+        out[key] = {
+            "offered": s.offered, "served_in_slo": s.served_in_slo,
+            "degraded": s.degraded, "errors": s.errors,
+            "goodput": round(s.goodput_under_slo(), 4),
+            "degraded_frac": round(s.degraded_frac(), 4),
+            "all_terminal": terminal == s.offered,
+            "loop_alive": loop_alive,
+        }
+        common.row(f"faults_goodput_{key}", 0.0,
+                   f"goodput={out[key]['goodput']} "
+                   f"degraded={s.degraded} errors={s.errors}")
+        pipe.close()
+    return out
+
+
+def main() -> dict:
+    corpus = common.scoring_corpus()
+    index = common.scoring_index(corpus)
+    layout = common.scoring_layout(corpus)
+    n_batches = 6 if common.SMOKE else 24
+    batch = 8
+    payload = {
+        "identity": _identity_section(corpus, index, layout),
+        "chaos": _chaos_section(corpus, index, layout, n_batches, batch),
+        "corruption": _corruption_section(corpus, index, layout,
+                                          n_batches, batch),
+        "goodput": _goodput_section(corpus, index, layout,
+                                    48 if common.SMOKE else 128),
+    }
+    common.emit_json("BENCH_faults.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

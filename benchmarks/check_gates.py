@@ -142,6 +142,48 @@ def check_constant_space(bench: dict) -> str:
             f"{casc['espn_ssd_bytes_per_query']/1024:.0f}KB/q")
 
 
+@gate("faults", "BENCH_faults.json")
+def check_faults(bench: dict) -> str:
+    """Fault machinery is bitwise-free when inert for every backend; the
+    2% chaos point survives with bounded recall/p99 degradation and zero
+    crashes; checksums detect and repair 100% of injected wire corruption
+    (clean rankings); degraded-mode serving strictly beats fail-the-batch
+    goodput and every request reaches exactly one terminal state."""
+    ident = bench["identity"]
+    assert ident["all_identical"], ident
+    for r in ident["rows"]:
+        assert r["ranks_equal"] and r["bill_equal"], r
+        assert r["faults_injected"] == 0, r
+    chaos = {r["rate"]: r for r in bench["chaos"]["rows"]}
+    for r in chaos.values():
+        assert r["crashes"] == 0, r
+        assert r["faults_injected"] > 0, r
+    two = chaos[0.02]
+    assert two["recall_frac"] >= 0.9, two
+    assert two["p99_ratio"] <= 10.0, two
+    corr = bench["corruption"]["checksum_on"]
+    assert corr["corruptions_injected"] > 0, corr
+    assert corr["detection_rate"] == 1.0, corr
+    assert corr["repaired_all"], corr
+    assert corr["ranks_match_clean"], corr
+    on = bench["goodput"]["degrade_on"]
+    off = bench["goodput"]["degrade_off"]
+    for g in (on, off):
+        assert g["all_terminal"], g
+        assert g["loop_alive"], g
+    assert on["errors"] == 0, on
+    assert on["degraded"] > 0, on
+    assert off["errors"] > 0, off
+    assert on["goodput"] > off["goodput"], (on, off)
+    return (f"identity ok for {len(ident['rows'])} backends; 2% chaos "
+            f"recall_frac {two['recall_frac']:.3f} p99x{two['p99_ratio']:.2f}"
+            f" ({two['faults_injected']} faults, 0 crashes); corruption "
+            f"detection {corr['detection_rate']:.0%} "
+            f"({corr['corruptions_injected']} injected, all repaired); "
+            f"goodput {off['goodput']:.3f} (fail) -> {on['goodput']:.3f} "
+            f"(degrade, frac {on['degraded_frac']:.3f})")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,

@@ -21,11 +21,18 @@ FAST = SMOKE or os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 
 
 def cached(name: str, builder, save, load):
-    """Build-once artifact cache: ``save(obj, path)`` / ``load(path)``."""
+    """Build-once artifact cache: ``save(obj, path)`` / ``load(path)``.
+
+    A cache entry that fails its integrity check (torn save, pre-sidecar
+    artifact) is rebuilt, not trusted."""
+    from repro.pipeline.persist import ArtifactIntegrityError
     os.makedirs(CACHE, exist_ok=True)
     path = os.path.join(CACHE, name + (".fast" if FAST else "") + ".npz")
     if os.path.exists(path):
-        return load(path)
+        try:
+            return load(path)
+        except ArtifactIntegrityError:
+            os.remove(path)
     obj = builder()
     save(obj, path)
     return obj

@@ -23,6 +23,7 @@ SUITES = [
     ("beyond:mutation-churn", "benchmarks.bench_mutation_churn"),
     ("beyond:serve-slo", "benchmarks.bench_serve_slo"),
     ("beyond:constant-space", "benchmarks.bench_constant_space"),
+    ("beyond:faults", "benchmarks.bench_faults"),
     ("kernels", "benchmarks.bench_kernels"),
     ("beyond:espn-embedding-offload", "benchmarks.bench_espn_embedding"),
     ("beyond:disk-ivf-full-offload", "benchmarks.bench_disk_ivf"),

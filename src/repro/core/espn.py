@@ -91,6 +91,14 @@ class LatencyBreakdown:
                                        # storage cluster's hedged re-issues
                                        # (billed on the device clock, never
                                        # part of bytes_read's unique bill)
+    retries: int = 0                   # fault injection: storage read retries
+    checksum_failures: int = 0         # corrupted records caught by crc32
+    repair_bytes: int = 0              # extra bytes re-read to repair them
+                                       # (the recovery_bytes convention:
+                                       # never part of bytes_read)
+    faults_injected: int = 0           # total injected events in this batch
+    degraded_queries: int = 0          # queries answered from resident/
+                                       # candidate scores after a failed read
 
     def ms(self) -> dict:
         return {k: round(v * 1e3, 3) for k, v in self.__dict__.items()

@@ -46,6 +46,10 @@ class QueryResult:
                                    # None = positional (seed per-query reads)
     wait_io: object | None = None  # callable: block until this query's async
                                    # batch-I/O runs landed (rerank calls it)
+    io_failed: bool = False        # a storage read this query depends on
+                                   # failed (retry budget / dead shard): its
+                                   # buffers are zeros — answer degraded from
+                                   # candidate scores, never score them
 
     @classmethod
     def from_read(cls, doc_ids: np.ndarray, cand_scores: np.ndarray, read,
@@ -82,7 +86,8 @@ class QueryResult:
         return cls(doc_ids=doc_ids, cand_scores=cand_scores,
                    hit_mask=np.zeros(len(doc_ids), bool), stats=stats,
                    prefetched=row_map, buffers=buffers,
-                   wait_io=(lambda: batch.ensure_query(b)))
+                   wait_io=(lambda: batch.ensure_query(b)),
+                   io_failed=batch.query_failed(b))
 
 
 class ANNPrefetcher:
@@ -187,11 +192,21 @@ class ANNPrefetcher:
                 miss_io_s=miss_io,
                 ann_s=ann_total,
             )
+            io_failed = False
+            if fetch:
+                served_rows_b = (pref_batch.plan.rows_of(
+                    miss_lists[b][served_masks[b]])
+                    if served_masks and served_masks[b].any()
+                    else np.empty(0, np.int64))
+                io_failed = (pref_batch.query_failed(b)
+                             or miss_batch.query_failed(b)
+                             or pref_batch.rows_failed(served_rows_b))
             results.append(QueryResult(
                 doc_ids=fin_ids, cand_scores=fin_scores,
                 hit_mask=hit_mask, stats=stats, prefetched=pref_rows,
                 buffers=buffers, miss_buffers=miss_buffers,
-                miss_rows=miss_rows, wait_io=wait_io))
+                miss_rows=miss_rows, wait_io=wait_io,
+                io_failed=io_failed))
         return results
 
     # --- paper eq. (4) -----------------------------------------------------

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.maxsim import maxsim_scores
+from repro.storage.faults import DegradedQueryError
 
 
 @dataclass
@@ -23,6 +24,8 @@ class RerankOutput:
     scores: np.ndarray           # aggregate scores, descending
     n_reranked: int
     bow_bytes_read: int          # bandwidth bill for this query
+    degraded: bool = False       # answered from resident/candidate scores
+                                 # because the SSD rerank read failed
 
 
 def _maxsim_np(q_bow: np.ndarray, q_len: int, d_bow: np.ndarray,
@@ -47,10 +50,36 @@ def _maxsim_np(q_bow: np.ndarray, q_len: int, d_bow: np.ndarray,
     return np.asarray(maxsim_scores(q, qm, d, dm)[0])
 
 
+def degraded_rerank(result, *, alpha: float = 1.0,
+                    select: np.ndarray | None = None,
+                    degrade: bool = True) -> RerankOutput:
+    """Answer a query whose SSD rerank read failed, without touching its
+    (zeroed) buffers: candidates keep their candidate-stage ordering
+    (alpha*CLS / FDE score); bit-filter survivors (``select``) rank first in
+    bit-score order — the best resident signal available. ``degrade=False``
+    raises instead (the operator asked failed reads to fail hard)."""
+    if not degrade:
+        raise DegradedQueryError(
+            "storage read failed and degraded-mode answering is disabled "
+            "(FaultConfig.degrade=False)")
+    ids = result.doc_ids
+    k = len(ids)
+    agg = alpha * np.asarray(result.cand_scores[:k], np.float32)
+    if select is not None and len(select):
+        sel = np.asarray(select, np.int64)
+        rest = np.setdiff1d(np.arange(k), sel)   # candidate order preserved
+        order = np.concatenate([sel, rest])
+    else:
+        order = np.argsort(-agg, kind="stable")
+    return RerankOutput(doc_ids=ids[order], scores=agg[order], n_reranked=0,
+                        bow_bytes_read=0, degraded=True)
+
+
 def rerank_query(q_bow, q_len, result, *, alpha: float = 1.0,
                  rerank_count: int | None = None, doc_bytes=None,
                  use_pallas: bool = False,
-                 select: np.ndarray | None = None) -> RerankOutput:
+                 select: np.ndarray | None = None,
+                 degrade: bool = True) -> RerankOutput:
     """Score one QueryResult (from ANNPrefetcher.run_batch).
 
     rerank_count=None -> exact (re-rank every candidate, hits scored early,
@@ -58,7 +87,15 @@ def rerank_query(q_bow, q_len, result, *, alpha: float = 1.0,
     top-R candidates by CLS score; remaining docs keep alpha*CLS only.
     select=<positions> -> MaxSim exactly those candidate positions (e.g. the
     bit-filter survivors of the bitvec backend) instead of the CLS top-R.
+
+    A query whose storage read failed (``result.io_failed``) never scores
+    its zeroed buffers: it is answered from candidate-stage scores with
+    ``degraded=True`` (or raises ``DegradedQueryError`` when
+    ``degrade=False``).
     """
+    if getattr(result, "io_failed", False):
+        return degraded_rerank(result, alpha=alpha, select=select,
+                               degrade=degrade)
     if result.wait_io is not None:
         # batch I/O engine: block until this query's arena runs have landed
         # (reads of later queries keep streaming while we score this one)

@@ -93,11 +93,18 @@ class RetrievalBackend(abc.ABC):
                     q_lens: np.ndarray) -> RetrievalResponse:
         bd = LatencyBreakdown()
         bd.encode_s = self.compute.encode_time(q_cls.shape[0])
-        # hedged re-issues happen inside the tier (storage cluster); surface
-        # this batch's duplicate-byte bill without any per-backend plumbing
+        # hedged re-issues and injected faults happen inside the tier
+        # (storage cluster); surface this batch's share as stats deltas
+        # without any per-backend plumbing
+        _FKEYS = ("retries", "checksum_failures", "repair_bytes",
+                  "faults_injected")
         hedge0 = self.tier.stats.get("hedge_bytes", 0)
+        f0 = {k: self.tier.stats.get(k, 0) for k in _FKEYS}
         ranked = self._retrieve(q_cls, q_bow, q_lens, bd)
         bd.hedge_bytes_read = self.tier.stats.get("hedge_bytes", 0) - hedge0
+        for k in _FKEYS:
+            setattr(bd, k, self.tier.stats.get(k, 0) - f0[k])
+        bd.degraded_queries = sum(int(r.degraded) for r in ranked)
         bd.total_s = (bd.encode_s + bd.ann_s + bd.critical_io_s + bd.rerank_s
                       + 0.2e-3)
         return RetrievalResponse(ranked=ranked, breakdown=bd)
@@ -154,9 +161,12 @@ class RetrievalBackend(abc.ABC):
             out = rerank_query(q_bow[b], int(q_lens[b]), res,
                                alpha=cfg.alpha, rerank_count=rr,
                                doc_bytes=self.doc_bytes,
-                               use_pallas=cfg.use_pallas)
+                               use_pallas=cfg.use_pallas,
+                               degrade=getattr(self.tier, "degrade_reads",
+                                               True))
             ranked.append(out)
-            bd.rerank_s += self._maxsim_time(rr, int(q_lens[b]))
+            if not out.degraded:       # a degraded query never ran MaxSim
+                bd.rerank_s += self._maxsim_time(rr, int(q_lens[b]))
             bd.bytes_read += out.bow_bytes_read
         saved = batch.dedup_bytes_saved(self.doc_bytes)
         bd.bytes_read -= saved
@@ -218,9 +228,12 @@ class RetrievalBackend(abc.ABC):
                                               ann_s=bd.ann_s)
             out = rerank_query(q_bow[b], qlen, res, alpha=cfg.alpha,
                                select=sel, doc_bytes=self.doc_bytes,
-                               use_pallas=cfg.use_pallas)
+                               use_pallas=cfg.use_pallas,
+                               degrade=getattr(self.tier, "degrade_reads",
+                                               True))
             ranked.append(out)
-            bd.rerank_s += self._maxsim_time(len(sel), qlen)
+            if not out.degraded:
+                bd.rerank_s += self._maxsim_time(len(sel), qlen)
             bd.bytes_read += out.bow_bytes_read
         saved = batch.dedup_bytes_saved(self.doc_bytes)
         bd.bytes_read -= saved
@@ -254,7 +267,9 @@ class ESPNBackend(RetrievalBackend):
             out = rerank_query(q_bow[b], int(q_lens[b]), res,
                                alpha=cfg.alpha, rerank_count=cfg.rerank_count,
                                doc_bytes=self.doc_bytes,
-                               use_pallas=cfg.use_pallas)
+                               use_pallas=cfg.use_pallas,
+                               degrade=getattr(self.tier, "degrade_reads",
+                                               True))
             ranked.append(out)
             early_t = self._maxsim_time(res.stats.n_hits, int(q_lens[b]))
             miss_t = self._maxsim_time(res.stats.n_misses, int(q_lens[b]))
@@ -262,7 +277,8 @@ class ESPNBackend(RetrievalBackend):
             leaked = max(0.0, hidden_work - res.stats.budget_s)
             hidden += min(hidden_work, res.stats.budget_s)
             critical += leaked + res.stats.miss_io_s
-            bd.rerank_s += miss_t
+            if not out.degraded:       # a degraded query never ran MaxSim
+                bd.rerank_s += miss_t
             hit_rates.append(res.stats.hit_rate)
             bd.bytes_read += out.bow_bytes_read
         bd.hidden_s = hidden

@@ -12,7 +12,9 @@ from dataclasses import dataclass, field
 
 # NOTE: no repro.core / backends imports at module scope — this module must
 # stay import-light so CLIs can build their parser (and answer --help)
-# before jax loads. (repro.storage.ssd is dataclass-only and jax-free.)
+# before jax loads. (repro.storage.ssd and repro.storage.faults are
+# dataclass/numpy-only and jax-free.)
+from repro.storage.faults import FaultConfig
 from repro.storage.ssd import DEFAULT_BLOCK
 
 
@@ -187,6 +189,8 @@ class ServeConfig:
     autoscale: bool = False            # p99-vs-SLO hedge/replica controller
     autoscale_window: int = 64         # sliding latency window (requests)
     autoscale_interval_s: float = 0.25  # min seconds between decisions
+    autoscale_fault_trigger: int = 0   # injected-fault events per window
+                                       # that force a scale-up (0 = off)
 
 
 @dataclass
@@ -197,12 +201,13 @@ class PipelineConfig:
     retrieval: RetrievalConfig = field(default_factory=RetrievalConfig)
     cluster: ClusterConfig = field(default_factory=ClusterConfig)
     mutation: MutationConfig = field(default_factory=MutationConfig)
+    faults: FaultConfig = field(default_factory=FaultConfig)
     serve: ServeConfig = field(default_factory=ServeConfig)
 
     _SECTIONS = {"corpus": CorpusConfig, "index": IndexConfig,
                  "storage": StorageConfig, "retrieval": RetrievalConfig,
                  "cluster": ClusterConfig, "mutation": MutationConfig,
-                 "serve": ServeConfig}
+                 "faults": FaultConfig, "serve": ServeConfig}
 
     # -- dict round-trip ----------------------------------------------------
     def to_dict(self) -> dict:
@@ -338,6 +343,38 @@ class PipelineConfig:
                         default=m.rebalance_skew,
                         help="maintain(): rebalance shards when max/min "
                              "live block mass exceeds this (0 = off)")
+        f = FaultConfig()
+        ap.add_argument("--fault-rate", type=float,
+                        default=f.read_error_rate,
+                        help="per-attempt transient read-error probability "
+                             "(0 = fault injection off)")
+        ap.add_argument("--fault-stall-rate", type=float,
+                        default=f.stall_rate,
+                        help="per-read tail-latency stall probability")
+        ap.add_argument("--fault-stall-ms", type=float, default=f.stall_ms,
+                        help="extra device-clock ms a stall adds")
+        ap.add_argument("--fault-corruption-rate", type=float,
+                        default=f.corruption_rate,
+                        help="per-read bit-flip wire-corruption probability")
+        ap.add_argument("--fault-flap-rate", type=float, default=f.flap_rate,
+                        help="per-read replica-flap (momentary outage) "
+                             "probability")
+        ap.add_argument("--fault-seed", type=int, default=f.seed,
+                        help="fault-schedule RNG seed")
+        ap.add_argument("--read-retries", type=int, default=f.read_retries,
+                        help="retry budget per storage read before failover/"
+                             "failure")
+        ap.add_argument("--retry-backoff-ms", type=float,
+                        default=f.retry_backoff_ms,
+                        help="base exponential retry backoff (device-clock "
+                             "ms)")
+        ap.add_argument("--checksum", action="store_true",
+                        help="crc32 per doc record: verify on read, repair "
+                             "corrupted records from a healthy copy")
+        ap.add_argument("--no-degrade", action="store_true",
+                        help="fail queries whose storage read exhausted its "
+                             "retry budget instead of answering degraded "
+                             "from resident scores")
         ap.add_argument("--max-batch", type=int, default=v.max_batch)
         ap.add_argument("--max-wait-s", type=float, default=v.max_wait_s)
         ap.add_argument("--slo-ms", type=float, default=v.slo_ms,
@@ -362,6 +399,10 @@ class PipelineConfig:
         ap.add_argument("--autoscale-interval-s", type=float,
                         default=v.autoscale_interval_s,
                         help="minimum seconds between autoscaler decisions")
+        ap.add_argument("--autoscale-fault-trigger", type=int,
+                        default=v.autoscale_fault_trigger,
+                        help="injected-fault events per window that force a "
+                             "scale-up even at healthy p99 (0 = off)")
         return ap
 
     @classmethod
@@ -415,6 +456,16 @@ class PipelineConfig:
                 auto_compact_dead_frac=args.auto_compact_dead_frac,
                 compact_interval_s=args.compact_interval_s,
                 rebalance_skew=args.rebalance_skew),
+            faults=FaultConfig(read_error_rate=args.fault_rate,
+                               stall_rate=args.fault_stall_rate,
+                               stall_ms=args.fault_stall_ms,
+                               corruption_rate=args.fault_corruption_rate,
+                               flap_rate=args.fault_flap_rate,
+                               read_retries=args.read_retries,
+                               retry_backoff_ms=args.retry_backoff_ms,
+                               checksum=args.checksum,
+                               degrade=not args.no_degrade,
+                               seed=args.fault_seed),
             serve=ServeConfig(max_batch=args.max_batch,
                               max_wait_s=args.max_wait_s,
                               slo_ms=args.slo_ms,
@@ -426,4 +477,6 @@ class PipelineConfig:
                               autoscale=args.autoscale,
                               autoscale_window=args.autoscale_window,
                               autoscale_interval_s=(
-                                  args.autoscale_interval_s)))
+                                  args.autoscale_interval_s),
+                              autoscale_fault_trigger=(
+                                  args.autoscale_fault_trigger)))

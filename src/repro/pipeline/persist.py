@@ -4,8 +4,19 @@ and synthetic corpus round-trip through ``.npz`` files. Used by
 1M-doc corpus is clustered and packed once and reloaded in seconds (the
 previous ad-hoc pickle cache kept whole Python objects and broke on any
 dataclass change).
+
+Crash safety + integrity: every artifact is written to a temp file in the
+same directory and published with ``os.replace`` (a crash mid-save leaves
+the previous artifact intact, never a torn one), and carries a ``.crc32``
+sidecar recording the final file's crc32 and byte size. ``load`` verifies
+the sidecar before parsing and raises ``ArtifactIntegrityError`` on a
+missing sidecar, a size mismatch, or a checksum mismatch — a torn or
+bit-rotted artifact is rejected, not silently deserialized.
 """
 from __future__ import annotations
+
+import os
+import zlib
 
 import jax.numpy as jnp
 import numpy as np
@@ -16,12 +27,75 @@ from repro.data.synthetic import Corpus
 from repro.storage.layout import BitTable, EmbeddingLayout
 
 _EMPTY = np.zeros(0, np.float32)
+_EMPTY_U32 = np.zeros(0, np.uint32)
+
+
+class ArtifactIntegrityError(IOError):
+    """A persisted artifact failed its sidecar integrity check."""
+
+
+def _sidecar(path: str) -> str:
+    return path + ".crc32"
+
+
+def _file_crc(path: str) -> tuple[int, int]:
+    crc, size = 0, 0
+    with open(path, "rb") as f:
+        while chunk := f.read(1 << 20):
+            crc = zlib.crc32(chunk, crc)
+            size += len(chunk)
+    return crc, size
+
+
+def atomic_savez(path: str, **fields) -> None:
+    """``np.savez`` with crash-safe publication: write to a temp file in the
+    target directory, fsync, ``os.replace`` into place, then publish the
+    ``.crc32`` sidecar (crc + size of the final bytes) the same way. A crash
+    at any point leaves either the old consistent (artifact, sidecar) pair
+    or a mismatched pair that ``verified_load`` rejects — never a torn file
+    that parses."""
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **fields)
+            f.flush()
+            os.fsync(f.fileno())
+        crc, size = _file_crc(tmp)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    side_tmp = _sidecar(path) + ".tmp"
+    with open(side_tmp, "w") as f:
+        f.write(f"{crc:08x} {size}\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(side_tmp, _sidecar(path))
+
+
+def verified_load(path: str):
+    """``np.load`` behind the sidecar check: the artifact's bytes must match
+    the recorded crc32 and size exactly."""
+    side = _sidecar(path)
+    if not os.path.exists(side):
+        raise ArtifactIntegrityError(
+            f"{path}: missing integrity sidecar {side} (torn save, or an "
+            "artifact from before checksummed persistence — rebuild it)")
+    with open(side) as f:
+        want_crc_hex, want_size = f.read().split()
+    crc, size = _file_crc(path)
+    if size != int(want_size) or crc != int(want_crc_hex, 16):
+        raise ArtifactIntegrityError(
+            f"{path}: integrity check failed (have crc32 {crc:08x}/{size}B, "
+            f"sidecar says {want_crc_hex}/{want_size}B) — the artifact is "
+            "torn or corrupted; rebuild it")
+    return np.load(path, allow_pickle=False)
 
 
 # -- IVF index --------------------------------------------------------------
 
 def save_index(index: IVFIndex, path: str) -> None:
-    np.savez(path,
+    atomic_savez(path,
              centroids=np.asarray(index.centroids),
              cell_ids=np.asarray(index.cell_ids),
              cell_vecs=np.asarray(index.cell_vecs),
@@ -32,7 +106,7 @@ def save_index(index: IVFIndex, path: str) -> None:
 
 
 def load_index(path: str) -> IVFIndex:
-    z = np.load(path, allow_pickle=False)
+    z = verified_load(path)
     scale = z["cell_scale"]
     return IVFIndex(centroids=jnp.asarray(z["centroids"]),
                     cell_ids=jnp.asarray(z["cell_ids"]),
@@ -53,7 +127,9 @@ def _layout_fields(layout: EmbeddingLayout) -> dict:
                   scales=(layout.scales if layout.scales is not None
                           else _EMPTY),
                   block=layout.block, mode=layout.mode,
-                  stride_blocks=layout.stride_blocks, pool_k=layout.pool_k)
+                  stride_blocks=layout.stride_blocks, pool_k=layout.pool_k,
+                  checksums=(layout.checksums
+                             if layout.checksums is not None else _EMPTY_U32))
     if layout.mode != "fixed_stride":
         fields["offsets"] = layout.offsets
         fields["n_tokens"] = layout.n_tokens
@@ -75,15 +151,18 @@ def _layout_from_npz(z) -> EmbeddingLayout:
         block=int(z["block"]), mode=mode,
         stride_blocks=int(z["stride_blocks"]) if "stride_blocks" in z.files
         else 0,
-        pool_k=int(z["pool_k"]) if "pool_k" in z.files else 0)
+        pool_k=int(z["pool_k"]) if "pool_k" in z.files else 0,
+        checksums=(z["checksums"]
+                   if "checksums" in z.files and z["checksums"].size
+                   else None))
 
 
 def save_layout(layout: EmbeddingLayout, path: str) -> None:
-    np.savez(path, **_layout_fields(layout))
+    atomic_savez(path, **_layout_fields(layout))
 
 
 def load_layout(path: str) -> EmbeddingLayout:
-    return _layout_from_npz(np.load(path, allow_pickle=False))
+    return _layout_from_npz(verified_load(path))
 
 
 # -- sharded layouts (storage cluster) --------------------------------------
@@ -92,23 +171,24 @@ def save_shard_layout(layout: EmbeddingLayout, global_ids: np.ndarray,
                       path: str) -> None:
     """One cluster shard: its sub-layout plus the global doc ids it owns
     (the shard_of/local_of maps are rebuilt from these on load)."""
-    np.savez(path, **_layout_fields(layout),
-             global_ids=np.asarray(global_ids, np.int64))
+    atomic_savez(path, **_layout_fields(layout),
+                 global_ids=np.asarray(global_ids, np.int64))
 
 
 def load_shard_layout(path: str) -> tuple[EmbeddingLayout, np.ndarray]:
-    z = np.load(path, allow_pickle=False)
+    z = verified_load(path)
     return _layout_from_npz(z), z["global_ids"]
 
 
 # -- resident bit table (bitvec backend) ------------------------------------
 
 def save_bits(bits: BitTable, path: str) -> None:
-    np.savez(path, packed=bits.packed, starts=bits.starts, d_bow=bits.d_bow)
+    atomic_savez(path, packed=bits.packed, starts=bits.starts,
+                 d_bow=bits.d_bow)
 
 
 def load_bits(path: str) -> BitTable:
-    z = np.load(path, allow_pickle=False)
+    z = verified_load(path)
     return BitTable(packed=z["packed"], starts=z["starts"],
                     d_bow=int(z["d_bow"]))
 
@@ -119,13 +199,13 @@ def save_fde(fde: FDETable, path: str) -> None:
     """The generating FDEConfig rides along: a reloaded table must encode
     queries with the same partitions/projection or scores are garbage."""
     c = fde.cfg
-    np.savez(path, vecs=fde.vecs, d_bow=c.d_bow, k_sim=c.k_sim,
-             r_reps=c.r_reps, d_final=c.d_final,
-             fill_empty=int(c.fill_empty), seed=c.seed)
+    atomic_savez(path, vecs=fde.vecs, d_bow=c.d_bow, k_sim=c.k_sim,
+                 r_reps=c.r_reps, d_final=c.d_final,
+                 fill_empty=int(c.fill_empty), seed=c.seed)
 
 
 def load_fde(path: str) -> FDETable:
-    z = np.load(path, allow_pickle=False)
+    z = verified_load(path)
     cfg = FDEConfig(d_bow=int(z["d_bow"]), k_sim=int(z["k_sim"]),
                     r_reps=int(z["r_reps"]), d_final=int(z["d_final"]),
                     fill_empty=bool(z["fill_empty"]), seed=int(z["seed"]))
@@ -142,15 +222,16 @@ def save_corpus(corpus: Corpus, path: str) -> None:
     qrel_lens = np.array([len(r) for r in corpus.qrels], np.int64)
     qrel_flat = np.array([i for r in corpus.qrels for i in sorted(r)],
                          np.int64)
-    np.savez(path, cls=corpus.cls, doc_lens=corpus.doc_lens,
-             bow_flat=bow_flat, has_bow=bool(corpus.bow),
-             queries_cls=corpus.queries_cls, queries_bow=corpus.queries_bow,
-             query_lens=corpus.query_lens,
-             qrel_lens=qrel_lens, qrel_flat=qrel_flat)
+    atomic_savez(path, cls=corpus.cls, doc_lens=corpus.doc_lens,
+                 bow_flat=bow_flat, has_bow=bool(corpus.bow),
+                 queries_cls=corpus.queries_cls,
+                 queries_bow=corpus.queries_bow,
+                 query_lens=corpus.query_lens,
+                 qrel_lens=qrel_lens, qrel_flat=qrel_flat)
 
 
 def load_corpus(path: str) -> Corpus:
-    z = np.load(path, allow_pickle=False)
+    z = verified_load(path)
     bow: list[np.ndarray] = []
     if bool(z["has_bow"]):
         splits = np.cumsum(z["doc_lens"])[:-1]

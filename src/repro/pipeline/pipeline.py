@@ -32,6 +32,7 @@ from repro.pipeline import persist
 from repro.pipeline.backends import RetrievalBackend, get_backend
 from repro.pipeline.config import PipelineConfig
 from repro.storage.cluster import StorageCluster
+from repro.storage.faults import FaultInjector, add_checksums
 from repro.storage.io_engine import StorageTier
 from repro.storage.layout import (BitTable, EmbeddingLayout, bits_from_layout,
                                   pack)
@@ -52,8 +53,10 @@ def _pack_layout(cfg: PipelineConfig, cls_embs: np.ndarray,
         from repro.core.pool import pool_corpus
         bow_embs = pool_corpus(bow_embs, s.pool_k, seed=s.pool_seed)
         return pack(cls_embs, bow_embs, dtype=np.dtype(s.dtype),
-                    block=s.block, mode="fixed_stride", pool_k=s.pool_k)
-    return pack(cls_embs, bow_embs, dtype=np.dtype(s.dtype), block=s.block)
+                    block=s.block, mode="fixed_stride", pool_k=s.pool_k,
+                    checksum=cfg.faults.checksum)
+    return pack(cls_embs, bow_embs, dtype=np.dtype(s.dtype), block=s.block,
+                checksum=cfg.faults.checksum)
 
 
 class Pipeline:
@@ -145,6 +148,20 @@ class Pipeline:
                                       dtype=cfg.storage.fde_dtype)
         else:
             fde = None        # don't bill the FDE table to other backends
+        fl = cfg.faults
+        faults = FaultInjector(fl) if fl.active() else None
+        if fl.checksum:
+            # every image the read path can serve from needs its checksum
+            # column (handed-down layouts may predate --checksum)
+            if layout.checksums is None:
+                add_checksums(layout)
+            for sl, _gids in (shard_layouts or []):
+                if sl.checksums is None:
+                    add_checksums(sl)
+            for segs in (segments or []):
+                for seg in segs:
+                    if seg.layout.checksums is None:
+                        add_checksums(seg.layout)
         cl = cfg.cluster
         mu = cfg.mutation
         if mu.active():
@@ -167,7 +184,7 @@ class Pipeline:
                 compact_interval_s=mu.compact_interval_s,
                 rebalance_skew=mu.rebalance_skew,
                 segments=segments, alive=alive,
-                pool_seed=cfg.storage.pool_seed)
+                pool_seed=cfg.storage.pool_seed, faults=faults)
         elif cl.enabled():
             tier = StorageCluster(
                 layout, n_shards=cl.n_shards, replication=cl.replication,
@@ -178,12 +195,13 @@ class Pipeline:
                 hedge_quantile=cl.hedge_quantile,
                 jitter_sigma=cl.jitter_sigma, seed=cl.seed,
                 arena_cache_bytes=cl.arena_cache_bytes(),
-                shard_layouts=shard_layouts)
+                shard_layouts=shard_layouts, faults=faults)
         else:
             tier = StorageTier(layout, stack=backend_cls.storage_stack,
                                t_max=cfg.storage.t_max,
                                mem_budget_bytes=budget, bits=bits, fde=fde,
-                               coalesce=cfg.storage.io_coalesce)
+                               coalesce=cfg.storage.io_coalesce,
+                               faults=faults)
         backend = backend_cls(index, tier, cfg.retrieval.to_espn_config(),
                               cost_model=cost_model, compute=compute)
         return cls(cfg, corpus=corpus, index=index, layout=layout, tier=tier,
@@ -301,7 +319,8 @@ class Pipeline:
             from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
             scaler = Autoscaler(self.tier, AutoscalerConfig(
                 slo_ms=slo, window=sc.autoscale_window,
-                interval_s=sc.autoscale_interval_s))
+                interval_s=sc.autoscale_interval_s,
+                fault_trigger=sc.autoscale_fault_trigger))
         return RetrievalServer(self.backend, policy=policy,
                                autoscaler=scaler)
 
@@ -360,9 +379,9 @@ class Pipeline:
             t = self.tier
             mdir = os.path.join(out_dir, "mutation")
             os.makedirs(mdir, exist_ok=True)
-            np.savez(os.path.join(mdir, "state.npz"), alive=t.alive,
-                     seg_counts=np.array([len(s) for s in t.segments],
-                                         np.int64))
+            persist.atomic_savez(
+                os.path.join(mdir, "state.npz"), alive=t.alive,
+                seg_counts=np.array([len(s) for s in t.segments], np.int64))
             for s, sh in enumerate(t.shards):
                 persist.save_shard_layout(
                     sh.layout, t.shard_ids[s],
@@ -404,7 +423,7 @@ class Pipeline:
         mdir = os.path.join(out_dir, "mutation")
         shard_dir = os.path.join(out_dir, "shards")
         if cfg.mutation.active() and os.path.isdir(mdir):
-            z = np.load(os.path.join(mdir, "state.npz"), allow_pickle=False)
+            z = persist.verified_load(os.path.join(mdir, "state.npz"))
             alive = z["alive"]
             seg_counts = z["seg_counts"]
             shard_layouts = [

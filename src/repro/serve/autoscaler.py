@@ -40,6 +40,10 @@ class AutoscalerConfig:
     hedge_floor: float = 0.5       # never hedge earlier than this quantile
     patience: int = 2              # calm decisions before relaxing
     scale_down: bool = False       # allow killing surplus replicas
+    fault_trigger: int = 0         # injected-fault events per window that
+                                   # force a scale-up (recover a dead replica
+                                   # first) even while p99 looks healthy;
+                                   # 0 disables the trigger entirely
 
 
 @dataclass
@@ -55,11 +59,17 @@ class Autoscaler:
         self._last_step: float | None = None
         self._calm = 0
         self._hedge0 = float(getattr(self.tier, "hedge_quantile", 0.0))
+        self._faults = 0         # injected-fault events since last actuation
         self.actions: list[dict] = []
 
     # -- observations --------------------------------------------------------
     def observe(self, lat_ms: float) -> None:
         self._lat.append(float(lat_ms))
+
+    def observe_faults(self, n: int) -> None:
+        """Feed injected-fault events (a batch's ``faults_injected`` delta);
+        a rising fault rate is a recovery trigger independent of p99."""
+        self._faults += int(n)
 
     def p99(self) -> float:
         return float(np.percentile(self._lat, 99)) if self._lat else 0.0
@@ -81,7 +91,16 @@ class Autoscaler:
         cfg = self.cfg
         p99 = self.p99()
         act = None
-        if p99 > cfg.high * cfg.slo_ms:
+        if cfg.fault_trigger and self._faults >= cfg.fault_trigger:
+            # storage is faulting faster than the operator's tolerance:
+            # treat it like an SLO breach (revive dead replicas first)
+            self._calm = 0
+            act = self._scale_up(p99)
+            if act is not None:
+                act["trigger"] = "faults"
+                act["faults"] = self._faults
+            self._faults = 0
+        elif p99 > cfg.high * cfg.slo_ms:
             self._calm = 0
             act = self._scale_up(p99)
         elif p99 < cfg.low * cfg.slo_ms:

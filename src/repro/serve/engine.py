@@ -33,6 +33,8 @@ class TenantStats:
     shed: int = 0
     violations: int = 0
     in_slo: int = 0
+    degraded: int = 0                  # served from resident scores (faults)
+    errors: int = 0                    # failed by a handler exception
     slo_latencies_ms: list = field(default_factory=list)
 
     def goodput_under_slo(self) -> float:
@@ -42,6 +44,7 @@ class TenantStats:
         xs = self.slo_latencies_ms
         return {"offered": self.offered, "served": self.served,
                 "shed": self.shed, "violations": self.violations,
+                "degraded": self.degraded, "errors": self.errors,
                 "goodput_under_slo": round(self.goodput_under_slo(), 4),
                 "slo_p50_ms": round(float(np.percentile(xs, 50)), 3)
                 if xs else 0.0,
@@ -62,6 +65,12 @@ class ServeStats:
     timeouts: int = 0                  # callers that abandoned query()
     slo_violations: int = 0            # served, but past the deadline
     served_in_slo: int = 0             # the goodput numerator
+    degraded: int = 0                  # answered from resident/candidate
+                                       # scores after a failed storage read —
+                                       # terminal state of its own, NEVER
+                                       # counted in served_in_slo
+    errors: int = 0                    # failed terminally (backend raised:
+                                       # degrade disabled, retry exhaustion…)
     slo_latencies_ms: list = field(default_factory=list)  # wall + sim share
     tenants: dict = field(default_factory=dict)           # name -> TenantStats
     # storage-cluster counters (zero when serving a single StorageTier):
@@ -84,6 +93,12 @@ class ServeStats:
     replicas_killed: int = 0
     replicas_recovered: int = 0
     recovery_bytes: int = 0            # replica re-sync traffic
+    # fault-injection counters (zero without a FaultInjector on the tier;
+    # accumulated from each batch's LatencyBreakdown deltas):
+    retries: int = 0
+    checksum_failures: int = 0
+    repair_bytes: int = 0
+    faults_injected: int = 0
     # storage footprint of the tier being served (captured at server start;
     # fixed_stride layouts report zero offset/length metadata):
     resident_bytes: int = 0            # host/device-resident tier bytes
@@ -100,6 +115,11 @@ class ServeStats:
         timeouts count against it; a no-deadline request counts as in-SLO
         when served (its SLO is vacuous)."""
         return self.served_in_slo / self.offered if self.offered else 0.0
+
+    def degraded_frac(self) -> float:
+        """Fraction of offered load answered in degraded mode. Disjoint from
+        goodput: a degraded answer is never served_in_slo."""
+        return self.degraded / self.offered if self.offered else 0.0
 
     def percentile(self, p: float, sim: bool = True) -> float:
         xs = self.sim_latencies_ms if sim else self.latencies_ms
@@ -131,7 +151,10 @@ class ServeStats:
                 "violations": self.slo_violations,
                 "shed": self.shed,
                 "timeouts": self.timeouts,
+                "degraded": self.degraded,
+                "errors": self.errors,
                 "goodput_under_slo": round(self.goodput_under_slo(), 4),
+                "degraded_frac": round(self.degraded_frac(), 4),
                 "slo_p50_ms": round(self.slo_percentile(50), 3),
                 "slo_p99_ms": round(self.slo_percentile(99), 3),
                 "tenants": {name: t.summary()
@@ -160,6 +183,14 @@ class ServeStats:
                "recovery_bytes": self.recovery_bytes}
         if any(mut.values()):
             out["mutation"] = mut
+        flt = {"retries": self.retries,
+               "checksum_failures": self.checksum_failures,
+               "repair_bytes": self.repair_bytes,
+               "faults_injected": self.faults_injected,
+               "degraded": self.degraded, "errors": self.errors,
+               "degraded_frac": round(self.degraded_frac(), 4)}
+        if any(v for k, v in flt.items() if k != "degraded_frac"):
+            out["faults"] = flt
         if self.layout_mode:
             out["storage"] = {"layout_mode": self.layout_mode,
                               "resident_bytes": self.resident_bytes}
@@ -221,6 +252,13 @@ class RetrievalServer:
         self.stats.batch_sizes.append(len(batch))
         self.stats.hit_rates.append(resp.breakdown.hit_rate)
         self.stats.n_requests += len(batch)
+        bd = resp.breakdown
+        for k in ("retries", "checksum_failures", "repair_bytes",
+                  "faults_injected"):
+            setattr(self.stats, k,
+                    getattr(self.stats, k) + getattr(bd, k, 0))
+        if self.autoscaler is not None:
+            self.autoscaler.observe_faults(getattr(bd, "faults_injected", 0))
 
     def _on_complete(self, r: Request) -> None:
         """Batcher completion hook (runs before ``done`` fires). Abandoned
@@ -230,22 +268,37 @@ class RetrievalServer:
         if r.abandoned:
             return
         s = self.stats
+        t = s.tenant(r.tenant)
+        if r.error is not None:
+            # handler exception (degrade disabled + retry exhaustion, or a
+            # genuine backend bug): terminal failure, never served
+            s.errors += 1
+            t.errors += 1
+            return
         wall_ms = r.latency_s * 1e3
         s.latencies_ms.append(wall_ms)
-        t = s.tenant(r.tenant)
         t.served += 1
+        degraded = bool(getattr(r.result, "degraded", False))
         slo_ms = wall_ms + r.sim_ms        # device clock rides on top of wall
+        if degraded:
+            # a degraded answer is its own terminal state: the caller got
+            # SOMETHING (candidate-stage ranking), but it never counts as
+            # served_in_slo and never as a violation either
+            s.degraded += 1
+            t.degraded += 1
         if r.deadline_s is not None:
             budget_ms = (r.deadline_s - r.arrival_s) * 1e3
             s.slo_latencies_ms.append(slo_ms)
             t.slo_latencies_ms.append(slo_ms)
-            if slo_ms <= budget_ms:
+            if degraded:
+                pass
+            elif slo_ms <= budget_ms:
                 s.served_in_slo += 1
                 t.in_slo += 1
             else:
                 s.slo_violations += 1
                 t.violations += 1
-        else:
+        elif not degraded:
             s.served_in_slo += 1           # no deadline: served is good
             t.in_slo += 1
         if self.autoscaler is not None:

@@ -52,6 +52,10 @@ class Request:
     sim_ms: float = field(init=False, default=0.0)   # device-clock share
     shed: bool = field(init=False, default=False)    # rejected at admission
     abandoned: bool = field(init=False, default=False)  # caller timed out
+    error: BaseException | None = field(init=False, default=None)
+    # ^ the backend raised while serving this request's batch: result is
+    #   None, the exception is surfaced here, and the request is terminal
+    #   (failed, never served/degraded)
 
     def __post_init__(self):
         self.done = threading.Event()
@@ -138,6 +142,7 @@ class ContinuousBatcher:
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self.batches: list[int] = []
+        self.errors = 0      # requests failed by a handler exception
 
     def start(self):
         self._thread.start()
@@ -257,7 +262,16 @@ class ContinuousBatcher:
             self._inflight = len(batch)
             self.batches.append(len(batch))
             t0 = time.monotonic()
-            self.handler(batch)
+            try:
+                self.handler(batch)
+            except Exception as e:
+                # a backend failure must not kill the dispatch loop: every
+                # request in the batch fails terminally (error set, waiters
+                # released below), later batches keep flowing
+                self.errors += len(batch)
+                for r in batch:
+                    r.error = e
+                    r.result = None
             self.service.observe(len(batch), time.monotonic() - t0)
             for r in batch:
                 r.latency_s = time.monotonic() - r.arrival_s

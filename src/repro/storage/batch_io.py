@@ -189,7 +189,8 @@ class BatchReadResult:
     def __init__(self, *, coalesced: bool, plan: BatchReadPlan | None,
                  sim_seconds: float, n_blocks: int,
                  arena: tuple | None = None, futures: list | None = None,
-                 serial_reads: list | None = None):
+                 serial_reads: list | None = None,
+                 failed_queries=None):
         self.coalesced = coalesced
         self.plan = plan
         self.sim_seconds = sim_seconds
@@ -197,6 +198,29 @@ class BatchReadResult:
         self.arena = arena                      # (cls, bow, lens) shared
         self._futures = futures or []
         self._serial_reads = serial_reads       # list[ReadResult | None]
+        self._failed_queries = failed_queries   # (B,) bool | None: queries
+                                                # whose read exhausted the
+                                                # fault retry budget
+
+    # -- fault surface -------------------------------------------------------
+    def query_failed(self, b: int) -> bool:
+        """True when query ``b``'s storage read failed (retry budget / dead
+        shard): its buffers are zeros and must not be scored. Backends
+        answer such queries from resident scores (``degraded``) or fail
+        them, never crash."""
+        if self._failed_queries is None:
+            return False
+        return bool(self._failed_queries[b])
+
+    def rows_failed(self, rows) -> bool:
+        """Whether any of the given arena rows came from a failed read
+        (cluster override; the base arena is all-or-nothing per query)."""
+        return False
+
+    @property
+    def any_failed(self) -> bool:
+        return self._failed_queries is not None \
+            and bool(np.any(self._failed_queries))
 
     # -- sizes ---------------------------------------------------------------
     @property
@@ -288,9 +312,20 @@ def serial_batch(read_fn, lists: list[np.ndarray],
     """The seed-faithful serial fallback shared by ``StorageTier`` and
     ``StorageCluster``: one blocking ``read_fn(ids)`` per query, duplicates
     billed per requesting query (``skip_empty`` skips zero-id queries,
-    matching the prefetcher's historical behaviour)."""
-    reads = [None if (skip_empty and len(ids) == 0) else read_fn(ids)
-             for ids in lists]
+    matching the prefetcher's historical behaviour). A query whose read
+    exhausts the fault retry budget is marked failed, not raised — the
+    other queries in the batch still complete."""
+    from repro.storage.faults import ReadFaultError
+    reads, failed = [], np.zeros(len(lists), bool)
+    for b, ids in enumerate(lists):
+        if skip_empty and len(ids) == 0:
+            reads.append(None)
+            continue
+        try:
+            reads.append(read_fn(ids))
+        except ReadFaultError:
+            reads.append(None)
+            failed[b] = True
     plan = BatchReadPlan(
         lists=lists, arena_ids=np.empty(0, np.int64),
         arena_blocks=np.empty(0, np.int64), runs=[],
@@ -302,7 +337,8 @@ def serial_batch(read_fn, lists: list[np.ndarray],
         coalesced=False, plan=plan,
         sim_seconds=sum(r.sim_seconds for r in reads if r),
         n_blocks=sum(r.n_blocks for r in reads if r),
-        serial_reads=reads)
+        serial_reads=reads,
+        failed_queries=failed if failed.any() else None)
 
 
 def consumption_dedup_saved(id_lists, doc_bytes) -> int:

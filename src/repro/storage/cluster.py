@@ -48,6 +48,8 @@ from repro.storage.arena_cache import ArenaCache
 from repro.storage.batch_io import (BatchReadPlan, BatchReadResult,
                                     _exclusive_cumsum, run_chunk,
                                     serial_batch)
+from repro.storage.faults import (FaultInjector, ShardReadError,
+                                  zero_fault_stats)
 from repro.storage.io_engine import ReadResult, StorageTier
 from repro.storage.layout import EmbeddingLayout, gather_docs_at
 
@@ -95,7 +97,11 @@ def build_shard_layout(layout: EmbeddingLayout,
         d_cls=layout.d_cls, d_bow=layout.d_bow, dtype=layout.dtype,
         scales=layout.scales[gids] if layout.scales is not None else None,
         block=block, mode=layout.mode, stride_blocks=layout.stride_blocks,
-        pool_k=layout.pool_k)
+        pool_k=layout.pool_k,
+        # raw block copies preserve record bytes exactly, so the parent's
+        # per-record crc32s stay valid in the sub-layout
+        checksums=(layout.checksums[gids]
+                   if layout.checksums is not None else None))
 
 
 # -- replica clocks + hedging ------------------------------------------------
@@ -145,13 +151,33 @@ class ClusterBatchReadResult(BatchReadResult):
                  n_blocks: int, arena: tuple,
                  futures: list[Future], run_of_row: np.ndarray | None,
                  owned_io_blocks: np.ndarray, hedge_blocks: int,
-                 cache_hits: int):
+                 cache_hits: int, failed_rows: np.ndarray | None = None):
         super().__init__(coalesced=True, plan=plan, sim_seconds=sim_seconds,
                          n_blocks=n_blocks, arena=arena, futures=futures)
         self._run_of_row = run_of_row          # (U,) run idx, -1 = cache-fill
         self._owned_io = owned_io_blocks       # (B,) uncached first-owner blocks
         self.hedge_blocks = hedge_blocks
         self.cache_hits = cache_hits
+        self._failed_rows = failed_rows        # (U,) bool: rows of a shard
+                                               # whose read failed (zeros)
+
+    # -- per-shard failure surface -------------------------------------------
+    def query_failed(self, b: int) -> bool:
+        if self._failed_rows is None:
+            return False
+        rows = self.plan.query_rows[b]
+        return bool(len(rows)) and bool(self._failed_rows[rows].any())
+
+    def rows_failed(self, rows) -> bool:
+        rows = np.asarray(rows, np.int64)
+        if self._failed_rows is None or len(rows) == 0:
+            return False
+        return bool(self._failed_rows[rows].any())
+
+    @property
+    def any_failed(self) -> bool:
+        return self._failed_rows is not None \
+            and bool(self._failed_rows.any())
 
     def _wait_rows(self, rows: np.ndarray) -> None:
         if self._run_of_row is None or len(rows) == 0:
@@ -193,6 +219,7 @@ class StorageCluster:
                  replica_mults=None, hedge_quantile: float = 0.0,
                  jitter_sigma: float = 0.0, seed: int = 0,
                  arena_cache_bytes: int = 0,
+                 faults: FaultInjector | None = None,
                  shard_layouts: list[tuple[EmbeddingLayout, np.ndarray]]
                  | None = None):
         if n_shards < 1 or replication < 1:
@@ -292,6 +319,15 @@ class StorageCluster:
                       "failovers": 0, "replicas_killed": 0,
                       "replicas_recovered": 0, "recovery_bytes": 0,
                       "recovery_seconds": 0.0}
+        # fault counters are always present (zero without an injector) so a
+        # dead-replica ShardReadError has somewhere to land even when no
+        # fault rates are configured
+        self.stats.update(zero_fault_stats())
+        # injection happens at the replica/cluster level only — the shard
+        # tiers themselves are built fault-free above
+        self.faults = faults
+        self.degrade_reads = faults.cfg.degrade if faults is not None \
+            else True
 
     # -- shard coverage (overridden by the mutation layer) -------------------
     def _check_shard_cover(self) -> None:
@@ -321,9 +357,21 @@ class StorageCluster:
         """One shard read on the device clock: the rotating primary's draw,
         hedged re-issue past the quantile delay, failover past a dead
         primary. Returns ``(effective_s, hedge_blocks, hedged, win,
-        failover)``."""
+        failover, fault_events)`` — ``fault_events`` is ``None`` unless the
+        fault injector fired for this read. Raises ``ShardReadError`` when
+        no replica can serve (all dead, or every candidate exhausted its
+        retry budget); ``read_batch`` converts that into a per-shard
+        failure that only degrades the queries touching this shard."""
         reps = self.replicas[s]
         p = seq % self.replication
+        if self.faults is not None and self.faults.cfg.enabled() \
+                and self._replica_alive[s][p] \
+                and self.faults.any_event(seq, s, p):
+            # the retry/failover machine owns the duplicate-issue decision
+            # for this read; hedging is bypassed (documented trade: a read
+            # that drew a fault event never also hedges)
+            eff, failover, ev = self._shard_clock_faulty(s, base_t, seq)
+            return eff, 0, False, False, failover, ev
         if not self._replica_alive[s][p]:
             # dead primary: it never answers, so the hedge timer (or the
             # immediate connection failure when hedging is off) routes the
@@ -331,22 +379,94 @@ class StorageCluster:
             # the dead replica transferred nothing.
             sec = self._best_alive(s, exclude=p)
             if sec is None:
-                raise RuntimeError(f"no alive replica for shard {s}")
+                raise ShardReadError(s, reason="no alive replica")
             t_sec = base_t * reps[sec].draw(seq)
             if self._hedge_on:
                 return base_t * self._hedge_factor + t_sec, 0, True, True, \
-                    True
-            return t_sec, 0, False, False, True
+                    True, None
+            return t_sec, 0, False, False, True, None
         t1 = base_t * reps[p].draw(seq)
         if not self._hedge_on or n_blocks == 0:
-            return t1, 0, False, False, False
+            return t1, 0, False, False, False, None
         sec = self._best_alive(s, exclude=p)
         if sec is None:
-            return t1, 0, False, False, False
+            return t1, 0, False, False, False, None
         hedge_after = base_t * self._hedge_factor
         eff, hedged, win = hedge_clock(
             t1, lambda: base_t * self.replicas[s][sec].draw(seq), hedge_after)
-        return eff, (n_blocks if hedged else 0), hedged, win, False
+        return eff, (n_blocks if hedged else 0), hedged, win, False, None
+
+    def _shard_clock_faulty(self, s: int, base_t: float, seq: int):
+        """Bounded-retry + failover state machine for one shard read that
+        drew a fault event. Candidates: the rotating primary, then alive
+        peers healthiest-first. Each candidate runs the retry loop (failed
+        attempts bill their full read time plus deterministic backoff); a
+        flapped candidate is unreachable and fails over immediately.
+        Returns ``(effective_s, failover, events)``; raises
+        ``ShardReadError`` carrying the seconds already burned when every
+        candidate is exhausted."""
+        fi = self.faults
+        reps = self.replicas[s]
+        p = seq % self.replication
+        peers = sorted((r for r in range(self.replication)
+                        if r != p and self._replica_alive[s][r]),
+                       key=lambda r: (reps[r].mult, r))
+        cands = ([p] if self._replica_alive[s][p] else []) + peers
+        if not cands:
+            raise ShardReadError(s, reason="no alive replica")
+        ev = zero_fault_stats()
+        total = 0.0
+        for ci, r in enumerate(cands):
+            if fi.flap(seq, s, r):
+                ev["replica_flaps"] += 1
+                ev["faults_injected"] += 1
+                continue
+            elapsed, ok = fi.attempt_loop(seq, s, r,
+                                          base_t * reps[r].draw(seq), ev)
+            total += elapsed
+            if ok:
+                return total, ci > 0, ev
+        raise ShardReadError(s, elapsed_s=total, events=ev)
+
+    def _corruption_event(self, seq: int, s: int, pieces, gids_s):
+        """Per-shard-read corruption draw. Returns ``(extra_s, victim,
+        events)``: repair seconds to add to the shard clock, the position
+        within ``gids_s`` whose gathered BOW must be corrupted (-1 = no
+        corruption, or it was detected and repaired from a healthy
+        replica), and the event counters. Detection is the *real* crc32
+        check over the flipped wire buffer (``wire_corruption_detected``);
+        repair bills one extra device read of the victim record, separate
+        from the query's unique-bytes bill."""
+        fi = self.faults
+        ev = zero_fault_stats()
+        if len(gids_s) == 0 or not fi.corrupt(seq, s):
+            return 0.0, -1, ev
+        ev["corruptions_injected"] += 1
+        ev["faults_injected"] += 1
+        v = fi.victim(seq, s, len(gids_s))
+        # locate the victim's record in whichever routed piece serves it
+        # (shard base layout, or an append segment on the mutable tier)
+        lay, lid = None, -1
+        for play, local_p, sel in pieces:
+            if sel is None:
+                lay, lid = play, int(np.asarray(local_p)[v])
+                break
+            j = np.flatnonzero(np.asarray(sel) == v)
+            if len(j):
+                lay, lid = play, int(np.asarray(local_p)[int(j[0])])
+                break
+        if lay is not None and fi.cfg.checksum \
+                and fi.wire_corruption_detected(lay, lid):
+            ev["checksum_failures"] += 1
+            ev["repairs"] += 1
+            nbv = lay.blocks_for([lid])
+            tier = self.shards[s]
+            extra = (ssd_lib.DRAM.read_time(nbv, qd=tier.qd)
+                     if tier.stack == "dram"
+                     else tier.spec.read_time(nbv, qd=tier.qd))
+            ev["repair_bytes"] += nbv * lay.block
+            return extra, -1, ev
+        return 0.0, v, ev
 
     # -- replica failure injection / recovery --------------------------------
     def _shard_disk_blocks(self, s: int) -> int:
@@ -452,12 +572,16 @@ class StorageCluster:
         lens = np.zeros(len(ids), np.int32)
         sim, n_blocks, hedge_blocks, hedged, wins = 0.0, 0, 0, 0, 0
         failovers = 0
+        fault_ev = zero_fault_stats()
+        fault_on = self.faults is not None and self.faults.cfg.enabled()
         if len(ids) == 0:
             # preserve the single-tier empty-read floor (h2d base cost)
             sim, _ = self.shards[0]._sim_time(ids)
             p = seq % self.replication
             if not self._replica_alive[0][p]:
                 p = self._best_alive(0, exclude=p)
+                if p is None:
+                    raise ShardReadError(0, reason="no alive replica")
             sim *= self.replicas[0][p].draw(seq)
         else:
             for s in range(self.n_shards):
@@ -465,7 +589,29 @@ class StorageCluster:
                 if len(rows) == 0:
                     continue
                 pieces, base_t, nb = self._shard_read_plan(s, ids[rows])
-                eff, hb, h, w, fo = self._shard_clock(s, base_t, nb, seq)
+                try:
+                    eff, hb, h, w, fo, fev = self._shard_clock(
+                        s, base_t, nb, seq)
+                except ShardReadError as e:
+                    # the blocking read serves ONE request: bill the burned
+                    # clock + events, then let the caller (serial_batch /
+                    # the prefetcher) mark the query failed
+                    with self._lock:
+                        self.stats["sim_seconds"] += max(sim, e.elapsed_s)
+                        self.stats["shard_read_failures"] += 1
+                        for k, n in e.events.items():
+                            self.stats[k] += n
+                    raise
+                vic = -1
+                if fev is not None:
+                    for k, n in fev.items():
+                        fault_ev[k] += n
+                if fault_on:
+                    extra, vic, cev = self._corruption_event(
+                        seq, s, pieces, ids[rows])
+                    eff += extra
+                    for k, n in cev.items():
+                        fault_ev[k] += n
                 sim = max(sim, eff)
                 n_blocks += nb
                 hedge_blocks += hb
@@ -475,6 +621,10 @@ class StorageCluster:
                 for lay, local_p, sel in pieces:
                     rows_p = rows if sel is None else rows[sel]
                     gather_docs_at(lay, local_p, rows_p, cls, bow, lens)
+                if vic >= 0:
+                    # undetected wire corruption: worst case for MaxSim —
+                    # the victim doc's received BOW signs are flipped
+                    bow[rows[vic]] = -bow[rows[vic]]
                 with self.shards[s]._lock:
                     st = self.shards[s].stats
                     st["reads"] += 1
@@ -492,17 +642,24 @@ class StorageCluster:
             self.stats["hedge_wins"] += wins
             self.stats["hedge_bytes"] += hedge_blocks * self.layout.block
             self.stats["failovers"] += failovers
+            for k, n in fault_ev.items():
+                self.stats[k] += n
         return ReadResult(cls, bow, lens, sim, n_blocks)
 
     def read_async(self, ids, t_max: int | None = None) -> Future:
         self._check_open()
         return self._pool.submit(self.read, ids, t_max)
 
-    def _gather_run(self, layout: EmbeddingLayout, local_ids, rows, arena):
+    def _gather_run(self, layout: EmbeddingLayout, local_ids, rows, arena,
+                    corrupt_row: int = -1):
         # the layout is captured at SUBMIT time: a concurrent compaction may
         # swap the shard's layout attribute, but the blob this run gathers
         # from is immutable, so in-flight batches keep serving the old image
         gather_docs_at(layout, local_ids, rows, *arena)
+        if corrupt_row >= 0:
+            # undetected wire corruption: flip the victim's received BOW
+            # signs (worst case for MaxSim) after its run lands
+            arena[1][corrupt_row] = -arena[1][corrupt_row]
 
     def _cache_insert_ok(self, gid: int) -> bool:
         """Deferred-insert guard: the mutation layer vetoes rows whose doc
@@ -617,13 +774,41 @@ class StorageCluster:
         req_mask = np.isin(concat, plan.arena_ids[uncached_rows])
         req_by_shard = np.bincount(self.shard_of[concat[req_mask]],
                                    minlength=self.n_shards)
+        fault_ev = zero_fault_stats()
+        fault_on = self.faults is not None and self.faults.cfg.enabled()
+        failed_rows = None
         for s in range(self.n_shards):
             rows_s = uncached_rows[shard_of_rows == s]
             if len(rows_s) == 0:
                 continue
             gids_s = plan.arena_ids[rows_s]
             pieces, base_t, nb = self._shard_read_plan(s, gids_s)
-            eff, hb, h, w, fo = self._shard_clock(s, base_t, nb, seq)
+            try:
+                eff, hb, h, w, fo, fev = self._shard_clock(s, base_t, nb,
+                                                           seq)
+            except ShardReadError as e:
+                # per-shard failure: only the queries whose rows live on
+                # this shard degrade; the other shards' reads proceed. The
+                # burned retry clock still bills (no bytes moved).
+                sim = max(sim, e.elapsed_s)
+                if failed_rows is None:
+                    failed_rows = np.zeros(u, bool)
+                failed_rows[rows_s] = True
+                for k, n in e.events.items():
+                    fault_ev[k] += n
+                fault_ev["shard_read_failures"] += 1
+                continue
+            vic = -1
+            if fev is not None:
+                for k, n in fev.items():
+                    fault_ev[k] += n
+            if fault_on:
+                extra, vic, cev = self._corruption_event(seq, s, pieces,
+                                                         gids_s)
+                eff += extra
+                for k, n in cev.items():
+                    fault_ev[k] += n
+            corrupt_arena_row = int(rows_s[vic]) if vic >= 0 else -1
             sim = max(sim, eff)
             io_blocks += nb
             hedge_blocks += hb
@@ -637,9 +822,12 @@ class StorageCluster:
                 for r0 in range(0, len(rows_p), chunk):
                     sl = slice(r0, r0 + chunk)
                     run_of_row[rows_p[sl]] = len(futures)
+                    cr = (corrupt_arena_row if corrupt_arena_row >= 0
+                          and (rows_p[sl] == corrupt_arena_row).any()
+                          else -1)
                     futures.append(self.shards[s]._pool.submit(
                         self._gather_run, lay, local_p[sl], rows_p[sl],
-                        arena))
+                        arena, cr))
                     n_runs += 1
             with self.shards[s]._lock:
                 st = self.shards[s].stats
@@ -658,10 +846,15 @@ class StorageCluster:
         #    simulated clock nondeterministic across same-seed runs) and
         #    never joined here (that would forfeit the rerank overlap)
         if self.arena_cache.enabled and len(uncached_rows):
-            with self._lock:
-                self._cache_pending.append(
-                    (futures, arena, uncached_rows,
-                     plan.arena_ids[uncached_rows]))
+            # rows of a failed shard hold zeros — they must never poison
+            # the cross-batch cache
+            ins_rows = (uncached_rows if failed_rows is None
+                        else uncached_rows[~failed_rows[uncached_rows]])
+            if len(ins_rows):
+                with self._lock:
+                    self._cache_pending.append(
+                        (futures, arena, ins_rows,
+                         plan.arena_ids[ins_rows]))
 
         # 4) attribution: first-owner over the rows that hit a device
         owned_io = np.zeros(len(lists), np.int64)
@@ -681,6 +874,8 @@ class StorageCluster:
             self.stats["hedge_wins"] += wins
             self.stats["hedge_bytes"] += hedge_blocks * self.layout.block
             self.stats["failovers"] += failovers
+            for k, n in fault_ev.items():
+                self.stats[k] += n
             if self.arena_cache.enabled:
                 self.stats["cache_hits"] += cache_hits
                 self.stats["cache_misses"] += len(uncached_rows)
@@ -688,7 +883,7 @@ class StorageCluster:
             plan=plan, sim_seconds=sim, n_blocks=io_blocks, arena=arena,
             futures=futures, run_of_row=run_of_row,
             owned_io_blocks=owned_io, hedge_blocks=hedge_blocks,
-            cache_hits=cache_hits)
+            cache_hits=cache_hits, failed_rows=failed_rows)
 
     def read_bits(self, ids, t_max: int | None = None):
         """Resident bit-tier gather (global — side tables are not sharded)."""

@@ -22,6 +22,8 @@ from repro.storage import ssd as ssd_lib
 from repro.storage.batch_io import (BatchReadPlan, BatchReadResult,
                                     _exclusive_cumsum, serial_batch)
 from repro.storage.cache import PageCache
+from repro.storage.faults import (FaultInjector, ReadFaultError,
+                                  zero_fault_stats)
 from repro.storage.layout import (BitTable, EmbeddingLayout, gather_docs,
                                   gather_docs_into)
 
@@ -42,7 +44,8 @@ class StorageTier:
                  t_max: int = 180, qd: int = 64, include_h2d: bool = True,
                  n_io_threads: int = 4, bits: BitTable | None = None,
                  fde: FDETable | None = None, coalesce: bool = True,
-                 io_chunk_docs: int | None = None):
+                 io_chunk_docs: int | None = None,
+                 faults: FaultInjector | None = None):
         assert stack in ("espn", "mmap", "swap", "dram")
         self.layout = layout
         if layout.mode == "fixed_stride":
@@ -70,6 +73,12 @@ class StorageTier:
         self.stats = {"reads": 0, "docs": 0, "doc_requests": 0, "blocks": 0,
                       "sim_seconds": 0.0, "batch_reads": 0, "io_runs": 0,
                       "dedup_docs": 0}
+        self.faults = faults           # FaultInjector | None (None = inert)
+        self.degrade_reads = faults.cfg.degrade if faults is not None \
+            else True
+        if faults is not None:
+            self.stats |= zero_fault_stats()
+            self._fault_seq = 0
 
     # -- timing ------------------------------------------------------------
     def _pages_of(self, ids) -> np.ndarray:
@@ -105,12 +114,75 @@ class StorageTier:
             t += ssd_lib.h2d_time(bytes_moved)
         return t, n_blocks
 
+    # -- fault injection -----------------------------------------------------
+    def _repair_time(self, n_blocks: int) -> float:
+        """One extra device read of a corrupted record (repair bill)."""
+        if self.stack == "dram":
+            return ssd_lib.DRAM.read_time(n_blocks, qd=self.qd)
+        return self.spec.read_time(n_blocks, qd=self.qd)
+
+    def _faulty_read_clock(self, base_s: float, ids) -> tuple[float, int,
+                                                              bool]:
+        """Run one device read through the fault machine (single device: no
+        failover target). Returns ``(sim_s, corrupt_pos, ok)`` — the clock
+        including retries/stalls/repair, the position in ``ids`` whose
+        gathered data must be corrupted (-1 = none: no corruption, or it
+        was detected and repaired), and whether the read succeeded at all.
+        Fault counters fold into ``self.stats``."""
+        fi = self.faults
+        with self._lock:
+            seq = self._fault_seq
+            self._fault_seq += 1
+        if not fi.any_event(seq, 0, 0):
+            return base_s, -1, True
+        ev = zero_fault_stats()
+        # a single tier has one "replica"; a flap is an outage for this read
+        flapped = fi.flap(seq, 0, 0)
+        if flapped:
+            ev["replica_flaps"] += 1
+            ev["faults_injected"] += 1
+            elapsed, ok = 0.0, False
+        else:
+            elapsed, ok = fi.attempt_loop(seq, 0, 0, base_s, ev)
+        corrupt_pos = -1
+        if ok and len(ids) and fi.corrupt(seq, 0):
+            ev["corruptions_injected"] += 1
+            ev["faults_injected"] += 1
+            v = fi.victim(seq, 0, len(ids))
+            gid = int(np.asarray(ids, np.int64)[v])
+            if fi.cfg.checksum \
+                    and fi.wire_corruption_detected(self.layout, gid):
+                # detected: repair = re-read the record (the on-device image
+                # is healthy; the corruption was on the wire). Billed to
+                # repair_bytes, never to the query's unique-bytes bill.
+                ev["checksum_failures"] += 1
+                ev["repairs"] += 1
+                nbv = self.layout.blocks_for([gid])
+                ev["repair_bytes"] += nbv * self.layout.block
+                elapsed += self._repair_time(nbv)
+            else:
+                corrupt_pos = v    # undetected: corrupt bytes reach scoring
+        with self._lock:
+            for k, n in ev.items():
+                self.stats[k] += n
+        return elapsed, corrupt_pos, ok
+
     # -- reads ---------------------------------------------------------------
     def read(self, ids, t_max: int | None = None) -> ReadResult:
         ids = np.asarray(ids, np.int64)
         t_max = t_max or self.t_max
         sim, n_blocks = self._sim_time(ids)
+        corrupt_pos = -1
+        if self.faults is not None and self.faults.cfg.enabled():
+            sim, corrupt_pos, ok = self._faulty_read_clock(sim, ids)
+            if not ok:
+                with self._lock:
+                    self.stats["sim_seconds"] += sim
+                raise ReadFaultError(
+                    "storage read failed after exhausting retries")
         cls, bow, lens = gather_docs(self.layout, ids, t_max)
+        if corrupt_pos >= 0:
+            bow[corrupt_pos] = -bow[corrupt_pos]
         with self._lock:
             self.stats["reads"] += 1
             self.stats["docs"] += len(ids)
@@ -160,14 +232,49 @@ class StorageTier:
                                                    np.float32),
                                           np.zeros(0, np.int32)))
         sim, n_blocks = self._sim_time(plan.arena_ids)
+        corrupt_row = -1
+        if self.faults is not None and self.faults.cfg.enabled():
+            sim, corrupt_row, ok = self._faulty_read_clock(
+                sim, plan.arena_ids)
+            if not ok:
+                # the coalesced transaction is one device read: when it
+                # exhausts the retry budget every query in the batch is
+                # marked failed (a single tier has no failover target)
+                with self._lock:
+                    self.stats["reads"] += 1
+                    self.stats["batch_reads"] += 1
+                    self.stats["doc_requests"] += plan.n_requested
+                    self.stats["sim_seconds"] += sim
+                u = plan.n_unique
+                return BatchReadResult(
+                    coalesced=True, plan=plan, sim_seconds=sim, n_blocks=0,
+                    arena=(np.zeros((u, self.layout.d_cls), np.float32),
+                           np.zeros((u, t_max, self.layout.d_bow),
+                                    np.float32),
+                           np.zeros(u, np.int32)),
+                    failed_queries=np.ones(len(lists), bool))
         u = plan.n_unique
         arena = (np.zeros((u, self.layout.d_cls), np.float32),
                  np.zeros((u, t_max, self.layout.d_bow), np.float32),
                  np.zeros(u, np.int32))
-        futures = [self._pool.submit(
-            gather_docs_into, self.layout, plan.arena_ids[r0:r1],
-            arena[0][r0:r1], arena[1][r0:r1], arena[2][r0:r1])
-            for r0, r1 in plan.runs]
+
+        def _gather_corrupted(r0: int, r1: int) -> None:
+            gather_docs_into(self.layout, plan.arena_ids[r0:r1],
+                             arena[0][r0:r1], arena[1][r0:r1],
+                             arena[2][r0:r1])
+            # undetected wire corruption: the victim's received BOW bytes
+            # are garbage — modeled as a sign flip (worst case for MaxSim:
+            # the doc's score is driven to the bottom)
+            arena[1][corrupt_row] = -arena[1][corrupt_row]
+
+        # the fault-free path submits gather_docs_into itself (callers and
+        # tests key on the submitted function's identity)
+        futures = [self._pool.submit(_gather_corrupted, r0, r1)
+                   if r0 <= corrupt_row < r1 else
+                   self._pool.submit(
+                       gather_docs_into, self.layout, plan.arena_ids[r0:r1],
+                       arena[0][r0:r1], arena[1][r0:r1], arena[2][r0:r1])
+                   for r0, r1 in plan.runs]
         with self._lock:
             self.stats["reads"] += 1
             self.stats["batch_reads"] += 1

@@ -201,6 +201,10 @@ class MutableStorageCluster(StorageCluster):
             return np.zeros(0, np.int64)
         with self._mut_lock:
             self._check_open()
+            # segments inherit the base layout's integrity tier: checksums
+            # computed at ingest time, so concat/compaction keep the whole
+            # grown corpus verifiable
+            ck = self.layout.checksums is not None
             if self.layout.mode == "fixed_stride":
                 # pool to the layout's fixed k first — content-seeded, so
                 # the segment rows are bit-identical to what a from-scratch
@@ -210,10 +214,11 @@ class MutableStorageCluster(StorageCluster):
                 seg_layout = pack(cls_embs, bows, dtype=self.layout.dtype,
                                   scales=scales, block=self.layout.block,
                                   mode="fixed_stride",
-                                  pool_k=self.layout.pool_k)
+                                  pool_k=self.layout.pool_k, checksum=ck)
             else:
                 seg_layout = pack(cls_embs, bows, dtype=self.layout.dtype,
-                                  scales=scales, block=self.layout.block)
+                                  scales=scales, block=self.layout.block,
+                                  checksum=ck)
             n0 = self.layout.n_docs
             n_new = len(bows)
             gids = np.arange(n0, n0 + n_new, dtype=np.int64)

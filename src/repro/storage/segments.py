@@ -47,7 +47,9 @@ def empty_layout(like: EmbeddingLayout) -> EmbeddingLayout:
         dtype=like.dtype,
         scales=(np.zeros(0, np.float32) if like.scales is not None else None),
         block=like.block, mode=like.mode, stride_blocks=like.stride_blocks,
-        pool_k=like.pool_k)
+        pool_k=like.pool_k,
+        checksums=(np.zeros(0, np.uint32)
+                   if like.checksums is not None else None))
 
 
 def concat_layouts(layouts: list[EmbeddingLayout],
@@ -83,6 +85,9 @@ def concat_layouts(layouts: list[EmbeddingLayout],
         o[:, 0] += shift
         offs.append(o)
         shift += lay.blob.nbytes // lay.block
+    # per-record checksums survive the raw block concat unchanged; a single
+    # un-checksummed input drops the table (no consistent integrity story)
+    has_ck = [lay.checksums is not None for lay in layouts]
     return EmbeddingLayout(
         blob=blob, offsets=np.concatenate(offs),
         n_tokens=np.concatenate([lay.n_tokens for lay in layouts]),
@@ -90,7 +95,9 @@ def concat_layouts(layouts: list[EmbeddingLayout],
         scales=(np.concatenate([lay.scales for lay in layouts])
                 if all(has_scales) else None),
         block=like.block, mode=like.mode, stride_blocks=like.stride_blocks,
-        pool_k=like.pool_k)
+        pool_k=like.pool_k,
+        checksums=(np.concatenate([lay.checksums for lay in layouts])
+                   if all(has_ck) else None))
 
 
 def merge_rows(pieces: list[tuple[EmbeddingLayout, np.ndarray, np.ndarray]],

@@ -1,0 +1,493 @@
+"""Storage fault injection, end-to-end integrity, and degraded-mode serving:
+deterministic fault schedules, crc32 detection/repair, bounded retries with
+failover, per-shard failure containment, the scheduler's dispatch guard,
+crash-safe persistence, the zero-fault bitwise-identity contract for every
+registered backend, and a seeded chaos run (faults + churn + concurrency)."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.pipeline import (Pipeline, PipelineConfig, RetrievalConfig,
+                            StorageConfig, available_backends)
+from repro.pipeline import persist
+from repro.storage.cluster import StorageCluster
+from repro.storage.faults import (DegradedQueryError, FaultConfig,
+                                  FaultInjector, ReadFaultError,
+                                  ShardReadError, verify_checksums,
+                                  zero_fault_stats)
+from repro.storage.layout import pack
+
+
+def _mini_layout(n=60, d_cls=16, d_bow=8, seed=3, checksum=False, **kw):
+    rng = np.random.default_rng(seed)
+    cls = rng.standard_normal((n, d_cls)).astype(np.float32)
+    if kw.get("mode") == "fixed_stride":
+        k = kw["pool_k"]
+        bow = [rng.standard_normal((k, d_bow)).astype(np.float32)
+               for _ in range(n)]
+    else:
+        bow = [rng.standard_normal((int(t), d_bow)).astype(np.float32)
+               for t in rng.integers(4, 40, n)]
+    return pack(cls, bow, dtype=np.float16, checksum=checksum, **kw)
+
+
+def _faulty_cfg(**kw) -> FaultConfig:
+    return FaultConfig(**kw)
+
+
+# -- deterministic schedules --------------------------------------------------
+
+def test_fault_schedule_is_pure_function_of_seed():
+    cfg = _faulty_cfg(read_error_rate=0.3, stall_rate=0.2,
+                      corruption_rate=0.1, flap_rate=0.1, seed=5)
+    a, b = FaultInjector(cfg), FaultInjector(cfg)
+    for seq in range(50):
+        assert a.read_error(seq, 0, 1, 0) == b.read_error(seq, 0, 1, 0)
+        assert a.stall(seq, 1, 0, 2) == b.stall(seq, 1, 0, 2)
+        assert a.corrupt(seq, 0) == b.corrupt(seq, 0)
+        assert a.flap(seq, 2, 1) == b.flap(seq, 2, 1)
+        assert a.any_event(seq, 0, 0) == b.any_event(seq, 0, 0)
+    other = FaultInjector(_faulty_cfg(read_error_rate=0.3, stall_rate=0.2,
+                                      corruption_rate=0.1, flap_rate=0.1,
+                                      seed=6))
+    assert any(a.read_error(s, 0, 1, 0) != other.read_error(s, 0, 1, 0)
+               for s in range(200))
+
+
+def test_attempt_loop_bills_failed_attempts_and_backoff():
+    cfg = _faulty_cfg(read_error_rate=1.0, read_retries=2,
+                      retry_backoff_ms=1.0)
+    fi = FaultInjector(cfg)
+    ev = zero_fault_stats()
+    elapsed, ok = fi.attempt_loop(0, 0, 0, 2e-3, ev)
+    assert not ok
+    assert ev["read_errors"] == 3          # every attempt failed
+    assert ev["retries"] == 2
+    # 3 burned reads + exponential backoff 1ms + 2ms + 4ms
+    assert elapsed == pytest.approx(3 * 2e-3 + (1 + 2 + 4) * 1e-3)
+
+
+def test_inactive_config_builds_no_injector():
+    assert not FaultConfig().active()
+    assert FaultConfig(checksum=True).active()       # integrity-only
+    assert not FaultConfig(checksum=True).enabled()  # ...but no events
+    assert FaultConfig(read_error_rate=0.01).enabled()
+
+
+# -- integrity: crc32 over record payloads ------------------------------------
+
+@pytest.mark.parametrize("mode_kw", [{}, {"mode": "fixed_stride",
+                                          "pool_k": 8}])
+def test_checksums_detect_blob_corruption(mode_kw):
+    layout = _mini_layout(checksum=True, **mode_kw)
+    assert layout.checksums is not None
+    assert verify_checksums(layout).all()
+    victim = 7
+    start = int(layout.offsets[victim, 0]) * layout.block
+    layout.blob[start + 3] ^= 0xFF
+    ok = verify_checksums(layout)
+    assert not ok[victim]
+    assert ok[np.arange(layout.n_docs) != victim].all()
+
+
+def test_checksums_survive_sharding():
+    layout = _mini_layout(checksum=True)
+    clus = StorageCluster(layout, n_shards=3, t_max=64)
+    for sh in clus.shards:
+        assert sh.layout.checksums is not None
+        assert verify_checksums(sh.layout).all()
+    clus.close()
+
+
+def test_wire_corruption_detected_iff_checksummed():
+    fi = FaultInjector(_faulty_cfg(corruption_rate=1.0, checksum=True))
+    assert fi.wire_corruption_detected(_mini_layout(checksum=True), 3)
+    assert not fi.wire_corruption_detected(_mini_layout(checksum=False), 3)
+
+
+# -- retries, failover, per-shard containment ---------------------------------
+
+def test_retry_then_failover_keeps_reads_alive():
+    layout = _mini_layout(n=80)
+    fi = FaultInjector(_faulty_cfg(read_error_rate=0.35, read_retries=1,
+                                   seed=2))
+    clus = StorageCluster(layout, n_shards=2, replication=2, t_max=64,
+                          faults=fi)
+    for i in range(12):
+        r = clus.read(np.arange(i, i + 10) % layout.n_docs)
+        assert r.sim_seconds > 0
+    assert clus.stats["read_errors"] > 0
+    assert clus.stats["retries"] > 0
+    assert clus.stats["faults_injected"] > 0
+    assert clus.stats["shard_read_failures"] == 0   # replicas absorbed all
+    clus.close()
+
+
+def test_retry_exhaustion_raises_and_bills_burned_time():
+    layout = _mini_layout()
+    fi = FaultInjector(_faulty_cfg(read_error_rate=1.0, read_retries=1,
+                                   seed=0))
+    clus = StorageCluster(layout, n_shards=1, replication=1, t_max=64,
+                          faults=fi)
+    t0 = clus.stats["sim_seconds"]
+    with pytest.raises(ShardReadError):
+        clus.read(np.arange(8))
+    assert clus.stats["sim_seconds"] > t0      # burned attempts are billed
+    assert clus.stats["shard_read_failures"] == 1
+    clus.close()
+
+
+def test_dead_shard_fails_per_shard_not_whole_batch():
+    """Regression (was: RuntimeError('no alive replica for shard') aborted
+    the entire read_batch): one dead shard only fails the queries that
+    touch it."""
+    layout = _mini_layout(n=80)
+    clus = StorageCluster(layout, n_shards=2, replication=1, t_max=64)
+    clus._replica_alive[0] = [False]           # both API-kill-proof: force it
+    on0 = np.flatnonzero(clus.shard_of == 0)
+    on1 = np.flatnonzero(clus.shard_of == 1)
+    res = clus.read_batch([on0[:6], on1[:6], np.concatenate([on0[:3],
+                                                             on1[:3]])])
+    res.wait_all()
+    assert res.any_failed
+    assert res.query_failed(0)                 # shard-0-only query fails
+    assert not res.query_failed(1)             # shard-1 query unaffected
+    assert res.query_failed(2)                 # mixed query fails too
+    assert clus.stats["shard_read_failures"] >= 1
+    # the healthy query's rows actually landed
+    _, row_map, _ = res.view(1)
+    assert len(row_map) == 6
+    # blocking single read of dead-shard ids raises the typed error
+    with pytest.raises(ShardReadError):
+        clus.read(on0[:4])
+    clus.close()
+
+
+def test_failed_rows_never_poison_the_arena_cache():
+    layout = _mini_layout(n=80)
+    clus = StorageCluster(layout, n_shards=2, replication=1, t_max=64,
+                          arena_cache_bytes=1 << 20)
+    clus._replica_alive[0] = [False]
+    on0 = np.flatnonzero(clus.shard_of == 0)
+    res = clus.read_batch([on0[:6]])
+    res.wait_all()
+    assert res.query_failed(0)
+    assert clus.stats["cache_hits"] == 0
+    # a second read of the same ids must MISS (nothing was inserted)
+    res2 = clus.read_batch([on0[:6]])
+    res2.wait_all()
+    assert clus.stats["cache_hits"] == 0
+    clus.close()
+
+
+# -- degraded rerank ----------------------------------------------------------
+
+def _one_tier_pipe(corpus, mode="gds", **fault_kw):
+    cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64, mem_budget_frac=1.0,
+                              io_coalesce=False),
+        retrieval=RetrievalConfig(mode=mode, nprobe=8, k_candidates=50))
+    cfg.index.ncells = 32
+    cfg.faults = FaultConfig(**fault_kw)
+    return Pipeline.build(cfg, corpus=corpus)
+
+
+def test_degraded_queries_answer_from_candidate_scores(small_corpus):
+    pipe = _one_tier_pipe(small_corpus, read_error_rate=1.0, read_retries=0)
+    resp = pipe.search()
+    assert all(r.degraded for r in resp.ranked)
+    assert all(r.n_reranked == 0 for r in resp.ranked)
+    assert resp.breakdown.degraded_queries == len(resp.ranked)
+    # candidate-stage ordering survives: ids are a permutation of a clean
+    # run's candidate set
+    clean = _one_tier_pipe(small_corpus)
+    cresp = clean.search()
+    for r, c in zip(resp.ranked, cresp.ranked):
+        assert set(map(int, r.doc_ids)) == set(map(int, c.doc_ids))
+    pipe.close()
+    clean.close()
+
+
+def test_no_degrade_raises_typed_error(small_corpus):
+    pipe = _one_tier_pipe(small_corpus, read_error_rate=1.0, read_retries=0,
+                          degrade=False)
+    with pytest.raises(DegradedQueryError):
+        pipe.search()
+    pipe.close()
+
+
+# -- scheduler dispatch guard (regression) ------------------------------------
+
+def test_handler_exception_fails_batch_but_loop_survives():
+    """Regression: a backend exception during dispatch used to kill
+    ``ContinuousBatcher._loop``, leaving every later waiter hanging."""
+    from repro.serve.scheduler import BatchPolicy, ContinuousBatcher, Request
+
+    calls = {"n": 0}
+
+    def handler(batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("backend blew up")
+        for r in batch:
+            r.result = "ok"
+
+    done = []
+    b = ContinuousBatcher(handler, BatchPolicy(max_batch=4, max_wait_s=0.01),
+                          on_complete=done.append).start()
+    first = [Request(i, None) for i in range(4)]
+    for r in first:
+        b.submit(r)
+    for r in first:
+        assert r.done.wait(5.0), "waiter hung after handler exception"
+        assert r.error is not None
+        assert r.result is None
+    assert b.errors == 4
+    assert b._thread.is_alive()
+    second = Request(99, None)
+    b.submit(second)
+    assert second.done.wait(5.0)
+    assert second.error is None
+    assert second.result == "ok"
+    assert len(done) == 5                      # completion hook saw them all
+    b.stop()
+
+
+def test_serve_stats_route_errors_and_degraded(small_corpus):
+    """Errors / degraded are disjoint terminal states; degraded never counts
+    as served_in_slo; the ledger stays complete."""
+    from repro.serve.engine import RetrievalServer
+    from repro.serve.scheduler import BatchPolicy
+
+    for degrade, want in ((True, "degraded"), (False, "errors")):
+        pipe = _one_tier_pipe(small_corpus, read_error_rate=1.0,
+                              read_retries=0, degrade=degrade)
+        srv = RetrievalServer(pipe.backend,
+                              policy=BatchPolicy(max_batch=4,
+                                                 max_wait_s=0.01))
+        reqs = [srv.query_async(small_corpus.queries_cls[i],
+                                small_corpus.queries_bow[i],
+                                small_corpus.query_lens[i])
+                for i in range(8)]
+        for r in reqs:
+            assert r.done.wait(30.0)
+        s = srv.stats
+        assert getattr(s, want) == 8
+        assert s.served_in_slo == 0
+        assert (s.served_in_slo + s.slo_violations + s.degraded + s.errors
+                + s.shed + s.timeouts) == s.offered == 8
+        if degrade:
+            assert s.degraded_frac() == 1.0
+        srv.shutdown()
+        pipe.close()
+
+
+def test_autoscaler_fault_trigger_recovers_replica():
+    from repro.serve.autoscaler import Autoscaler, AutoscalerConfig
+
+    layout = _mini_layout(n=80)
+    clus = StorageCluster(layout, n_shards=2, replication=2, t_max=64)
+    clus.kill_replica(0, 0)
+    sc = Autoscaler(clus, AutoscalerConfig(slo_ms=50.0, fault_trigger=5))
+    sc.observe_faults(3)
+    assert sc.step(now=0.0) is None            # below the trigger
+    sc.observe_faults(4)
+    act = sc.step(now=1.0)
+    assert act is not None and act["action"] == "recover_replica"
+    assert act["trigger"] == "faults"
+    assert clus.replica_status()[0][0]
+    # trigger=0 is inert: same fault pressure, no action at healthy p99
+    clus.kill_replica(0, 0)
+    sc2 = Autoscaler(clus, AutoscalerConfig(slo_ms=50.0, fault_trigger=0))
+    sc2.observe_faults(100)
+    assert sc2.step(now=0.0) is None
+    clus.close()
+
+
+# -- crash-safe persistence ---------------------------------------------------
+
+def test_atomic_save_and_verified_load_roundtrip(tmp_path):
+    layout = _mini_layout(checksum=True)
+    path = str(tmp_path / "layout.npz")
+    persist.save_layout(layout, path)
+    assert os.path.exists(path + ".crc32")
+    back = persist.load_layout(path)
+    np.testing.assert_array_equal(back.blob, layout.blob)
+    np.testing.assert_array_equal(back.checksums, layout.checksums)
+
+
+def test_load_rejects_missing_and_mismatched_sidecar(tmp_path):
+    layout = _mini_layout()
+    path = str(tmp_path / "layout.npz")
+    persist.save_layout(layout, path)
+    os.remove(path + ".crc32")
+    with pytest.raises(persist.ArtifactIntegrityError):
+        persist.load_layout(path)
+    persist.save_layout(layout, path)
+    with open(path, "r+b") as f:               # bit-rot one byte mid-file
+        f.seek(100)
+        byte = f.read(1)
+        f.seek(100)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(persist.ArtifactIntegrityError):
+        persist.load_layout(path)
+
+
+def test_mid_save_crash_leaves_previous_artifact_loadable(tmp_path,
+                                                          monkeypatch):
+    old = _mini_layout(seed=1)
+    new = _mini_layout(seed=2)
+    path = str(tmp_path / "layout.npz")
+    persist.save_layout(old, path)
+
+    real_replace = os.replace
+
+    def crash_on_data_replace(src, dst):
+        if dst == path:                        # die before publication
+            raise OSError("simulated crash mid-save")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(persist.os, "replace", crash_on_data_replace)
+    with pytest.raises(OSError):
+        persist.save_layout(new, path)
+    monkeypatch.setattr(persist.os, "replace", real_replace)
+    assert not os.path.exists(path + ".tmp")   # no torn temp left behind
+    back = persist.load_layout(path)           # OLD artifact, still valid
+    np.testing.assert_array_equal(back.blob, old.blob)
+
+
+# -- zero-fault bitwise identity ----------------------------------------------
+
+def test_zero_fault_config_is_bitwise_identical_all_backends(small_corpus):
+    """The inert fault machinery (injector attached, every rate zero) must
+    not perturb rankings, scores, or the device-clock bill for any
+    registered backend."""
+    base_cfg = PipelineConfig(
+        storage=StorageConfig(t_max=64, mem_budget_frac=1.0),
+        retrieval=RetrievalConfig(mode="espn", nprobe=8, k_candidates=50))
+    base_cfg.index.ncells = 32
+    base = Pipeline.build(base_cfg, corpus=small_corpus)
+    for mode in available_backends():
+        a = base.with_mode(mode)
+        b_cfg = PipelineConfig.from_dict(a.cfg.to_dict())
+        b_cfg.faults = FaultConfig(checksum=True)    # active but inert
+        b = Pipeline.from_artifacts(b_cfg, index=a.index, layout=a.layout,
+                                    corpus=small_corpus)
+        ra = a.search()
+        rb = b.search()
+        for x, y in zip(ra.ranked, rb.ranked):
+            np.testing.assert_array_equal(x.doc_ids, y.doc_ids)
+            np.testing.assert_array_equal(x.scores, y.scores)
+        assert ra.breakdown.total_s == rb.breakdown.total_s
+        assert ra.breakdown.bytes_read == rb.breakdown.bytes_read
+        assert rb.breakdown.faults_injected == 0
+        assert rb.breakdown.degraded_queries == 0
+        a.close()
+        b.close()
+    base.close()
+
+
+# -- config round-trips -------------------------------------------------------
+
+def test_fault_cli_and_dict_roundtrip():
+    import argparse
+    ap = PipelineConfig.add_cli_args(argparse.ArgumentParser())
+    args = ap.parse_args(["--fault-rate", "0.02", "--fault-stall-rate",
+                          "0.01", "--fault-corruption-rate", "0.005",
+                          "--fault-flap-rate", "0.001", "--fault-seed", "9",
+                          "--read-retries", "3", "--retry-backoff-ms", "2.0",
+                          "--checksum", "--no-degrade"])
+    cfg = PipelineConfig.from_cli(args)
+    f = cfg.faults
+    assert (f.read_error_rate, f.stall_rate, f.corruption_rate,
+            f.flap_rate) == (0.02, 0.01, 0.005, 0.001)
+    assert f.read_retries == 3 and f.retry_backoff_ms == 2.0
+    assert f.checksum and not f.degrade and f.seed == 9
+    back = PipelineConfig.from_dict(cfg.to_dict())
+    assert back.faults == f
+    # defaults parse to the inert config
+    cfg0 = PipelineConfig.from_cli(ap.parse_args([]))
+    assert not cfg0.faults.active()
+
+
+# -- chaos: faults + churn + concurrency --------------------------------------
+
+def test_chaos_faults_churn_concurrency():
+    """Seeded faults + live mutation + concurrent readers: no deadlock, no
+    unexpected exception type, every read completes or fails with the typed
+    fault errors, and the fault ledger saw real traffic."""
+    from repro.storage.mutation import MutableStorageCluster
+
+    layout = _mini_layout(n=120, checksum=True)
+    fi = FaultInjector(_faulty_cfg(read_error_rate=0.08, stall_rate=0.05,
+                                   corruption_rate=0.05, flap_rate=0.02,
+                                   read_retries=1, checksum=True, seed=13))
+    tier = MutableStorageCluster(layout, n_shards=2, replication=2,
+                                 t_max=64, faults=fi)
+    stop = threading.Event()
+    failures: list = []
+    completed = {"reads": 0, "failed_queries": 0}
+    lock = threading.Lock()
+
+    # readers sample only the never-deleted base docs: reading a tombstoned
+    # id mid-delete is a separate (undefined) contract, not the chaos target
+    stable = np.arange(layout.n_docs, dtype=np.int64)
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            lists = [rng.choice(stable, size=8, replace=False)
+                     for _ in range(4)]
+            try:
+                res = tier.read_batch(lists)
+                res.wait_all()
+                nf = sum(res.query_failed(b) for b in range(len(lists)))
+                with lock:
+                    completed["reads"] += len(lists)
+                    completed["failed_queries"] += nf
+            except ReadFaultError:
+                with lock:
+                    completed["failed_queries"] += len(lists)
+            except Exception as e:             # anything else = chaos bug
+                failures.append(e)
+                return
+
+    threads = [threading.Thread(target=reader, args=(s,), daemon=True)
+               for s in range(3)]
+    for t in threads:
+        t.start()
+    rng = np.random.default_rng(99)
+    try:
+        for round_ in range(6):
+            n_new = 10
+            cls = rng.standard_normal((n_new, layout.d_cls)).astype(
+                np.float32)
+            bows = [rng.standard_normal((int(t), layout.d_bow)).astype(
+                np.float32) for t in rng.integers(4, 20, n_new)]
+            gids = tier.ingest(cls, bows)
+            tier.delete(rng.choice(gids, size=4, replace=False))
+            if round_ == 2:
+                tier.kill_replica(0, 0)
+            if round_ == 4:
+                tier.recover_replica(0, 0)
+                tier.compact()
+            time.sleep(0.02)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30.0)
+    assert not any(t.is_alive() for t in threads), "chaos reader deadlocked"
+    assert not failures, failures
+    assert completed["reads"] > 0
+    st = tier.stats
+    assert st["faults_injected"] > 0
+    assert st["corruptions_injected"] == st["checksum_failures"] \
+        == st["repairs"]                       # checksums caught every one
+    # ingested records carry checksums too (integrity survives churn)
+    for segs in tier.segments:
+        for seg in segs:
+            assert seg.layout.checksums is not None
+    tier.close()
