@@ -1,0 +1,181 @@
+"""Observability: tracing is free when off, cheap when on, and the traces
+actually explain the tail.
+
+Three sections, all in ``BENCH_observability.json``:
+
+* **identity** — every registered backend runs the same queries with
+  tracing OFF and with a live ``Tracer`` attached. Rankings, scores, the
+  device-clock bill, and bytes_read must be bitwise-identical: span
+  emission observes the clocks, it never participates in them. The traced
+  run must also actually produce spans (the instrumentation is live, not
+  vacuously absent).
+* **overhead** — espn runs the same batch repeatedly with tracing off vs
+  on; best-of-reps wall time keeps the tracing tax under 10%.
+* **attribution** — a faulted 2-shard replicated cluster served under an
+  absurdly tight SLO (every request violates), traced end to end. The
+  exported Perfetto trace feeds ``repro.obs.analyze.analyze_trace``; every
+  violation must be attributed to a dominant stage (rate == 1.0), the
+  autoscaler's next action carries the evidence, and the Prometheus
+  exposition is non-trivial.
+
+    REPRO_BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run --only observability
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _pipeline(corpus, index, layout, *, mode="espn", trace=False,
+              cluster=False, **fault_kw):
+    from repro.pipeline import Pipeline, PipelineConfig
+    from repro.storage.faults import FaultConfig
+
+    cfg = PipelineConfig()
+    cfg.retrieval.mode = mode
+    cfg.retrieval.nprobe = 8
+    cfg.retrieval.k_candidates = 50
+    cfg.storage.t_max = 64
+    cfg.obs.trace = trace
+    if cluster:
+        cfg.cluster.n_shards = 2
+        cfg.cluster.replication = 2
+    if fault_kw:
+        cfg.faults = FaultConfig(**fault_kw)
+    return Pipeline.from_artifacts(cfg, index=index, layout=layout,
+                                   corpus=corpus)
+
+
+# -- identity: a live tracer is bitwise-free ----------------------------------
+def _identity_section(corpus, index, layout) -> dict:
+    from repro.pipeline.backends import available_backends
+
+    rows = []
+    for mode in available_backends():
+        off = _pipeline(corpus, index, layout, mode=mode)
+        on = _pipeline(corpus, index, layout, mode=mode, trace=True)
+        r_off = off.search()
+        r_on = on.search()
+        ranks_equal = all(
+            np.array_equal(a.doc_ids, b.doc_ids)
+            and np.array_equal(a.scores, b.scores)
+            for a, b in zip(r_off.ranked, r_on.ranked))
+        bill_equal = r_off.breakdown.total_s == r_on.breakdown.total_s \
+            and r_off.breakdown.bytes_read == r_on.breakdown.bytes_read
+        spans = on.tracer.spans()
+        rows.append({"mode": mode, "ranks_equal": ranks_equal,
+                     "bill_equal": bill_equal, "spans": len(spans),
+                     "open_spans": on.tracer.open_count()})
+        common.row(f"obs_identity_{mode}", 0.0,
+                   f"ranks_equal={ranks_equal} bill_equal={bill_equal} "
+                   f"spans={len(spans)}")
+        off.close()
+        on.close()
+    return {"rows": rows,
+            "all_identical": all(r["ranks_equal"] and r["bill_equal"]
+                                 and r["spans"] > 0 and r["open_spans"] == 0
+                                 for r in rows)}
+
+
+# -- overhead: the tracing tax ------------------------------------------------
+def _overhead_section(corpus, index, layout, reps: int) -> dict:
+    def best_wall(pipe):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            pipe.search()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    off = _pipeline(corpus, index, layout)
+    on = _pipeline(corpus, index, layout, trace=True)
+    off.search()                                  # warm both stacks
+    on.search()
+    wall_off = best_wall(off)
+    wall_on = best_wall(on)
+    overhead = wall_on / max(wall_off, 1e-12) - 1.0
+    spans_per_query = len(on.tracer.spans()) / max(
+        (reps + 1) * len(corpus.queries_cls), 1)
+    off.close()
+    on.close()
+    out = {"reps": reps,
+           "wall_off_ms": round(wall_off * 1e3, 4),
+           "wall_on_ms": round(wall_on * 1e3, 4),
+           "overhead_frac": round(overhead, 4),
+           "spans_per_query": round(spans_per_query, 2)}
+    common.row("obs_overhead", wall_on * 1e6,
+               f"overhead_frac={out['overhead_frac']} "
+               f"spans_per_query={out['spans_per_query']}")
+    return out
+
+
+# -- attribution: the trace explains the tail ---------------------------------
+def _attribution_section(corpus, index, layout, n_requests: int,
+                         trace_path: str) -> dict:
+    import json
+
+    from repro.obs.analyze import analyze_trace
+    from repro.serve.engine import RetrievalServer
+    from repro.serve.slo import SLOPolicy
+
+    pipe = _pipeline(corpus, index, layout, trace=True, cluster=True,
+                     read_error_rate=0.05, stall_rate=0.05, stall_ms=1.0,
+                     corruption_rate=0.05, read_retries=2, checksum=True,
+                     seed=7)
+    policy = SLOPolicy(slo_ms=1e-3, shed=False, max_batch=8,
+                       max_wait_s=0.01)
+    srv = RetrievalServer(pipe.backend, policy=policy, tracer=pipe.tracer,
+                          trace_path=trace_path)
+    nq = len(corpus.queries_cls)
+    reqs = [srv.query_async(corpus.queries_cls[i % nq],
+                            corpus.queries_bow[i % nq],
+                            corpus.query_lens[i % nq])
+            for i in range(n_requests)]
+    for r in reqs:
+        if not r.done.wait(60.0):
+            raise RuntimeError("traced serve request hung")
+    metrics_lines = len(srv.metrics_text().splitlines())
+    srv.shutdown()                                # exports trace_path
+
+    with open(trace_path) as f:
+        events = json.load(f)["traceEvents"]
+    rep = analyze_trace(events)
+    out = {"offered": srv.stats.offered,
+           "violations": rep["violations"],
+           "attributed": rep["attributed"],
+           "attribution_rate": rep["attribution_rate"],
+           "by_stage": rep["by_stage"],
+           "trace_events": len(events),
+           "metrics_lines": metrics_lines}
+    common.row("obs_attribution", 0.0,
+               f"violations={rep['violations']} "
+               f"rate={rep['attribution_rate']} "
+               f"stages={sorted(rep['by_stage'])}")
+    pipe.close()
+    return out
+
+
+def main() -> dict:
+    corpus = common.scoring_corpus()
+    index = common.scoring_index(corpus)
+    layout = common.scoring_layout(corpus)
+    out_dir = os.environ.get("REPRO_BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    payload = {
+        "identity": _identity_section(corpus, index, layout),
+        "overhead": _overhead_section(corpus, index, layout,
+                                      5 if common.SMOKE else 10),
+        "attribution": _attribution_section(
+            corpus, index, layout, 24 if common.SMOKE else 96,
+            os.path.join(out_dir, "trace_observability.json")),
+    }
+    common.emit_json("BENCH_observability.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -184,6 +184,33 @@ def check_faults(bench: dict) -> str:
             f"(degrade, frac {on['degraded_frac']:.3f})")
 
 
+@gate("observability", "BENCH_observability.json")
+def check_observability(bench: dict) -> str:
+    """A live tracer is bitwise-free for every backend (and actually emits
+    spans); the tracing wall-clock tax stays under 10%; every SLO violation
+    in the traced faulted serve is attributed to a dominant stage."""
+    ident = bench["identity"]
+    assert ident["all_identical"], ident
+    for r in ident["rows"]:
+        assert r["ranks_equal"] and r["bill_equal"], r
+        assert r["spans"] > 0 and r["open_spans"] == 0, r
+    ov = bench["overhead"]
+    assert ov["overhead_frac"] < 0.10, ov
+    assert ov["spans_per_query"] > 0, ov
+    att = bench["attribution"]
+    assert att["violations"] > 0, att
+    assert att["attribution_rate"] == 1.0, att
+    assert att["attributed"] == att["violations"], att
+    assert sum(att["by_stage"].values()) == att["violations"], att
+    assert att["trace_events"] > att["offered"], att
+    assert att["metrics_lines"] > 0, att
+    return (f"identity ok for {len(ident['rows'])} backends "
+            f"({sum(r['spans'] for r in ident['rows'])} spans); overhead "
+            f"{ov['overhead_frac']:+.1%} at {ov['spans_per_query']:.1f} "
+            f"spans/query; {att['violations']} violations 100% attributed "
+            f"({', '.join(f'{k}={v}' for k, v in sorted(att['by_stage'].items()))})")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,

@@ -24,6 +24,7 @@ SUITES = [
     ("beyond:serve-slo", "benchmarks.bench_serve_slo"),
     ("beyond:constant-space", "benchmarks.bench_constant_space"),
     ("beyond:faults", "benchmarks.bench_faults"),
+    ("beyond:observability", "benchmarks.bench_observability"),
     ("kernels", "benchmarks.bench_kernels"),
     ("beyond:espn-embedding-offload", "benchmarks.bench_espn_embedding"),
     ("beyond:disk-ivf-full-offload", "benchmarks.bench_disk_ivf"),

@@ -104,6 +104,22 @@ class LatencyBreakdown:
         return {k: round(v * 1e3, 3) for k, v in self.__dict__.items()
                 if k.endswith("_s")} | {"hit_rate": round(self.hit_rate, 4)}
 
+    def as_dict(self) -> dict:
+        """COMPLETE breakdown: every dataclass field, ``_s`` stages converted
+        to milliseconds (``*_ms`` keys) and the counters (bytes, retries,
+        repair/hedge bytes, degraded queries) passed through — unlike
+        ``ms()``, which reports stages only. This is what engine reporting
+        and the trace exporter attach to spans."""
+        out: dict = {}
+        for k, v in self.__dict__.items():
+            if k.endswith("_s"):
+                out[k[:-2] + "_ms"] = round(v * 1e3, 6)
+            elif k == "hit_rate":
+                out[k] = round(v, 6)
+            else:
+                out[k] = int(v)
+        return out
+
 
 @dataclass
 class RetrievalResponse:
@@ -119,12 +135,12 @@ class ESPNRetriever:
     def __init__(self, index: IVFIndex, tier: StorageTier, cfg: ESPNConfig,
                  *, cost_model: ANNCostModel | None = None,
                  compute: ComputeModel | None = None,
-                 doc_bytes=None):
+                 doc_bytes=None, tracer=None):
         # late import: repro.pipeline.backends imports this module's types
         from repro.pipeline.backends import get_backend
         self.backend = get_backend(cfg.mode)(
             index, tier, cfg, cost_model=cost_model, compute=compute,
-            doc_bytes=doc_bytes)
+            doc_bytes=doc_bytes, tracer=tracer)
 
     @property
     def index(self):
@@ -149,6 +165,15 @@ class ESPNRetriever:
     @property
     def doc_bytes(self):
         return self.backend.doc_bytes
+
+    @property
+    def tracer(self):
+        return self.backend.tracer
+
+    @tracer.setter
+    def tracer(self, tr):
+        self.backend.tracer = tr
+        self.backend.tier.tracer = tr
 
     # ------------------------------------------------------------------
     def query_batch(self, q_cls: np.ndarray, q_bow: np.ndarray,

@@ -36,6 +36,15 @@ def main(argv: list[str] | None = None) -> None:
         print(f"mode={cfg.retrieval.mode} breakdown (ms): "
               f"{ev['breakdown_ms']}")
         print(f"MRR@10={ev['mrr@10']:.3f} Recall@100={ev['recall@100']:.3f}")
+        if args.trace_json:
+            n = pipe.export_trace(args.trace_json)
+            print(f"trace: {n} events -> {args.trace_json}")
+        if args.metrics_out:
+            text = pipe.metrics_text()
+            with open(args.metrics_out, "w") as f:
+                f.write(text)
+            print(f"metrics: {len(text.splitlines())} lines -> "
+                  f"{args.metrics_out}")
         if args.save:
             print(f"saved -> {pipe.save(args.save)}")
 

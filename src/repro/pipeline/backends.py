@@ -80,19 +80,29 @@ class RetrievalBackend(abc.ABC):
 
     def __init__(self, index: IVFIndex, tier: StorageTier, cfg: ESPNConfig,
                  *, cost_model: ANNCostModel | None = None,
-                 compute: ComputeModel | None = None, doc_bytes=None):
+                 compute: ComputeModel | None = None, doc_bytes=None,
+                 tracer=None):
         self.index = index
         self.tier = tier
         self.cfg = cfg
         self.cost = cost_model or ANNCostModel()
         self.compute = compute or ComputeModel()
         self.doc_bytes = doc_bytes or (lambda i: tier.layout.doc_bytes(i))
+        self.tracer = tracer               # repro.obs.Tracer | None (off)
 
     # ------------------------------------------------------------------
     def query_batch(self, q_cls: np.ndarray, q_bow: np.ndarray,
                     q_lens: np.ndarray) -> RetrievalResponse:
+        tr = self.tracer
+        root = None
+        if tr is not None:
+            tr.adopt_batch_qids()
+            root = tr.begin("query_batch", cat="batch", mode=self.name,
+                            n_queries=int(q_cls.shape[0]))
         bd = LatencyBreakdown()
         bd.encode_s = self.compute.encode_time(q_cls.shape[0])
+        if tr is not None:
+            tr.add("encode", cat="compute", sim_s=bd.encode_s)
         # hedged re-issues and injected faults happen inside the tier
         # (storage cluster); surface this batch's share as stats deltas
         # without any per-backend plumbing
@@ -100,13 +110,20 @@ class RetrievalBackend(abc.ABC):
                   "faults_injected")
         hedge0 = self.tier.stats.get("hedge_bytes", 0)
         f0 = {k: self.tier.stats.get(k, 0) for k in _FKEYS}
-        ranked = self._retrieve(q_cls, q_bow, q_lens, bd)
+        try:
+            ranked = self._retrieve(q_cls, q_bow, q_lens, bd)
+        except BaseException:
+            if root is not None and not root.closed:
+                tr.end(root, error=True)
+            raise
         bd.hedge_bytes_read = self.tier.stats.get("hedge_bytes", 0) - hedge0
         for k in _FKEYS:
             setattr(bd, k, self.tier.stats.get(k, 0) - f0[k])
         bd.degraded_queries = sum(int(r.degraded) for r in ranked)
         bd.total_s = (bd.encode_s + bd.ann_s + bd.critical_io_s + bd.rerank_s
                       + 0.2e-3)
+        if tr is not None:
+            tr.end(root, sim_s=bd.total_s, breakdown=bd.as_dict())
         return RetrievalResponse(ranked=ranked, breakdown=bd)
 
     @abc.abstractmethod
@@ -145,6 +162,7 @@ class RetrievalBackend(abc.ABC):
         coalesced read in the critical path; duplicate candidate bytes are
         billed once, surfaced as ``bd.dedup_bytes_saved``."""
         cfg = self.cfg
+        tr = self.tracer
         ids = self._dead_masked(ids)
         prep = []
         for b in range(len(ids)):
@@ -152,7 +170,10 @@ class RetrievalBackend(abc.ABC):
             rr = len(fin) if cfg.rerank_count is None else min(
                 cfg.rerank_count, len(fin))
             prep.append((fin, fin_scores, rr))
+        rspan = tr.begin("read", cat="io") if tr is not None else None
         batch = self.tier.read_batch([fin[:rr] for fin, _, rr in prep])
+        if tr is not None:
+            tr.end(rspan, sim_s=batch.sim_seconds)
         bd.critical_io_s += batch.sim_seconds
         ranked = []
         for b, (fin, fin_scores, rr) in enumerate(prep):
@@ -165,8 +186,18 @@ class RetrievalBackend(abc.ABC):
                                degrade=getattr(self.tier, "degrade_reads",
                                                True))
             ranked.append(out)
+            maxsim_t = 0.0
             if not out.degraded:       # a degraded query never ran MaxSim
-                bd.rerank_s += self._maxsim_time(rr, int(q_lens[b]))
+                maxsim_t = self._maxsim_time(rr, int(q_lens[b]))
+                bd.rerank_s += maxsim_t
+            if tr is not None:
+                qid = tr.query_key(b)
+                tr.add("critical_io", cat="io", qid=qid,
+                       sim_s=batch.io_s(b))
+                if out.degraded:
+                    tr.instant("degrade", cat="fault", qid=qid)
+                else:
+                    tr.add("rerank", cat="compute", qid=qid, sim_s=maxsim_t)
             bd.bytes_read += out.bow_bytes_read
         saved = batch.dedup_bytes_saved(self.doc_bytes)
         bd.bytes_read -= saved
@@ -188,6 +219,7 @@ class RetrievalBackend(abc.ABC):
         from repro.kernels.bitsim.ops import bitsim
 
         cfg = self.cfg
+        tr = self.tracer
         layout = self.tier.layout
         mean_t = float(layout.n_tokens.mean())
         ids = self._dead_masked(ids)
@@ -204,8 +236,12 @@ class RetrievalBackend(abc.ABC):
                 jnp.ones((qlen,), jnp.float32),
                 jnp.asarray(packed), jnp.asarray(lens),
                 d=layout.d_bow, use_pallas=cfg.use_pallas))
-            bd.rerank_s += self.compute.bitsim_time(len(fin), qlen, mean_t,
-                                                    layout.d_bow)
+            bit_t = self.compute.bitsim_time(len(fin), qlen, mean_t,
+                                             layout.d_bow)
+            bd.rerank_s += bit_t
+            if tr is not None:
+                tr.add("bit_filter", cat="compute", qid=tr.query_key(b),
+                       sim_s=bit_t, n_candidates=len(fin))
             r = min(width, len(fin))
             if r < len(fin):
                 # O(n + r log r) instead of a full argsort; ties exactly at
@@ -219,7 +255,10 @@ class RetrievalBackend(abc.ABC):
             prep.append((fin, fin_scores, sel))
         # 2) ONE coalesced SSD read for every query's survivors, then
         #    full-precision MaxSim per query as its arena rows land
+        rspan = tr.begin("read", cat="io") if tr is not None else None
         batch = self.tier.read_batch([fin[sel] for fin, _, sel in prep])
+        if tr is not None:
+            tr.end(rspan, sim_s=batch.sim_seconds)
         bd.critical_io_s += batch.sim_seconds
         ranked = []
         for b, (fin, fin_scores, sel) in enumerate(prep):
@@ -232,8 +271,18 @@ class RetrievalBackend(abc.ABC):
                                degrade=getattr(self.tier, "degrade_reads",
                                                True))
             ranked.append(out)
+            maxsim_t = 0.0
             if not out.degraded:
-                bd.rerank_s += self._maxsim_time(len(sel), qlen)
+                maxsim_t = self._maxsim_time(len(sel), qlen)
+                bd.rerank_s += maxsim_t
+            if tr is not None:
+                qid = tr.query_key(b)
+                tr.add("critical_io", cat="io", qid=qid,
+                       sim_s=batch.io_s(b))
+                if out.degraded:
+                    tr.instant("degrade", cat="fault", qid=qid)
+                else:
+                    tr.add("rerank", cat="compute", qid=qid, sim_s=maxsim_t)
             bd.bytes_read += out.bow_bytes_read
         saved = batch.dedup_bytes_saved(self.doc_bytes)
         bd.bytes_read -= saved
@@ -257,11 +306,16 @@ class ESPNBackend(RetrievalBackend):
 
     def _retrieve(self, q_cls, q_bow, q_lens, bd):
         cfg = self.cfg
+        tr = self.tracer
         if q_cls.shape[0] == 0:           # empty batch: nothing to rank,
             return []                     # hit_rate keeps its vacuous default
+        cspan = tr.begin("candidate_gen", cat="compute") \
+            if tr is not None else None
         results = self.prefetcher.run_batch(q_cls, nprobe=cfg.nprobe,
                                             k=cfg.k_candidates)
         bd.ann_s = results[0].stats.ann_s
+        if tr is not None:
+            tr.end(cspan, sim_s=bd.ann_s)
         ranked, hit_rates, hidden, critical = [], [], 0.0, 0.0
         for b, res in enumerate(results):
             out = rerank_query(q_bow[b], int(q_lens[b]), res,
@@ -279,6 +333,17 @@ class ESPNBackend(RetrievalBackend):
             critical += leaked + res.stats.miss_io_s
             if not out.degraded:       # a degraded query never ran MaxSim
                 bd.rerank_s += miss_t
+            if tr is not None:
+                qid = tr.query_key(b)
+                tr.add("hidden_io", cat="io", qid=qid,
+                       sim_s=min(hidden_work, res.stats.budget_s))
+                tr.add("critical_io", cat="io", qid=qid,
+                       sim_s=leaked + res.stats.miss_io_s,
+                       hit_rate=round(res.stats.hit_rate, 4))
+                if out.degraded:
+                    tr.instant("degrade", cat="fault", qid=qid)
+                else:
+                    tr.add("rerank", cat="compute", qid=qid, sim_s=miss_t)
             hit_rates.append(res.stats.hit_rate)
             bd.bytes_read += out.bow_bytes_read
         bd.hidden_s = hidden
@@ -302,12 +367,17 @@ class DirectBackend(RetrievalBackend):
 
     def _retrieve(self, q_cls, q_bow, q_lens, bd):
         cfg = self.cfg
+        tr = self.tracer
         if q_cls.shape[0] == 0:
             bd.hit_rate = 0.0
             return []
+        cspan = tr.begin("candidate_gen", cat="compute") \
+            if tr is not None else None
         scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
         scores, ids = np.asarray(scores), np.asarray(ids)
         bd.ann_s = self.cost.time(self.index, cfg.nprobe)
+        if tr is not None:
+            tr.end(cspan, sim_s=bd.ann_s)
         return self._rerank_candidates(q_bow, q_lens, scores, ids, bd)
 
 
@@ -354,12 +424,17 @@ class BitvecBackend(RetrievalBackend):
 
     def _retrieve(self, q_cls, q_bow, q_lens, bd):
         cfg = self.cfg
+        tr = self.tracer
         if q_cls.shape[0] == 0:
             bd.hit_rate = 0.0
             return []
+        cspan = tr.begin("candidate_gen", cat="compute") \
+            if tr is not None else None
         scores, ids = search(self.index, q_cls, cfg.nprobe, cfg.k_candidates)
         scores, ids = np.asarray(scores), np.asarray(ids)
         bd.ann_s = self.cost.time(self.index, cfg.nprobe)
+        if tr is not None:
+            tr.end(cspan, sim_s=bd.ann_s)
         return self._bit_filter_rerank(q_bow, q_lens, scores, ids, bd,
                                        cfg.bit_filter)
 
@@ -458,10 +533,15 @@ class FDEBackend(RetrievalBackend):
         return scores, ids
 
     def _retrieve(self, q_cls, q_bow, q_lens, bd):
+        tr = self.tracer
         if q_cls.shape[0] == 0:
             bd.hit_rate = 0.0
             return []
+        cspan = tr.begin("candidate_gen", cat="compute") \
+            if tr is not None else None
         scores, ids = self._fde_candidates(q_bow, q_lens, bd)
+        if tr is not None:
+            tr.end(cspan, sim_s=bd.ann_s)
         return self._rerank_candidates(q_bow, q_lens, scores, ids, bd)
 
 
@@ -495,6 +575,7 @@ class CascadeBackend(FDEBackend):
 
     def _retrieve(self, q_cls, q_bow, q_lens, bd):
         cfg = self.cfg
+        tr = self.tracer
         if q_cls.shape[0] == 0:
             bd.hit_rate = 0.0
             return []
@@ -502,9 +583,13 @@ class CascadeBackend(FDEBackend):
         saved_cfg = self.cfg
         if width != cfg.k_candidates:
             self.cfg = dataclasses.replace(cfg, k_candidates=width)
+        cspan = tr.begin("candidate_gen", cat="compute") \
+            if tr is not None else None
         try:
             scores, ids = self._fde_candidates(q_bow, q_lens, bd)
         finally:
             self.cfg = saved_cfg
+            if tr is not None:
+                tr.end(cspan, sim_s=bd.ann_s)
         return self._bit_filter_rerank(q_bow, q_lens, scores, ids, bd,
                                        cfg.cascade_filter)

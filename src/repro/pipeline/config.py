@@ -194,6 +194,23 @@ class ServeConfig:
 
 
 @dataclass
+class ObsConfig:
+    """Observability (``repro.obs``): per-query span tracing + metrics
+    exposition. Everything defaults OFF, and the standing invariant is that
+    a traced run and an untraced run produce bitwise-identical rankings and
+    device-clock bills — tracing only *records*, it never steers."""
+    trace: bool = False                # attach a Tracer to the whole stack
+    trace_path: str = ""               # export Chrome/Perfetto trace JSON
+                                       # here after evaluate/serve
+    metrics_path: str = ""             # write Prometheus-style metrics text
+                                       # here after evaluate/serve
+
+    def enabled(self) -> bool:
+        """A tracer should be built and threaded through the stack."""
+        return self.trace or bool(self.trace_path)
+
+
+@dataclass
 class PipelineConfig:
     corpus: CorpusConfig = field(default_factory=CorpusConfig)
     index: IndexConfig = field(default_factory=IndexConfig)
@@ -203,11 +220,13 @@ class PipelineConfig:
     mutation: MutationConfig = field(default_factory=MutationConfig)
     faults: FaultConfig = field(default_factory=FaultConfig)
     serve: ServeConfig = field(default_factory=ServeConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
     _SECTIONS = {"corpus": CorpusConfig, "index": IndexConfig,
                  "storage": StorageConfig, "retrieval": RetrievalConfig,
                  "cluster": ClusterConfig, "mutation": MutationConfig,
-                 "faults": FaultConfig, "serve": ServeConfig}
+                 "faults": FaultConfig, "serve": ServeConfig,
+                 "obs": ObsConfig}
 
     # -- dict round-trip ----------------------------------------------------
     def to_dict(self) -> dict:
@@ -403,6 +422,14 @@ class PipelineConfig:
                         default=v.autoscale_fault_trigger,
                         help="injected-fault events per window that force a "
                              "scale-up even at healthy p99 (0 = off)")
+        ap.add_argument("--trace", action="store_true",
+                        help="attach a span tracer to the stack (rankings "
+                             "and bills stay bitwise-identical)")
+        ap.add_argument("--trace-json", default="", metavar="PATH",
+                        help="export the trace as Chrome/Perfetto "
+                             "trace-event JSON to PATH (implies --trace)")
+        ap.add_argument("--metrics-out", default="", metavar="PATH",
+                        help="write Prometheus-style metrics text to PATH")
         return ap
 
     @classmethod
@@ -479,4 +506,7 @@ class PipelineConfig:
                               autoscale_interval_s=(
                                   args.autoscale_interval_s),
                               autoscale_fault_trigger=(
-                                  args.autoscale_fault_trigger)))
+                                  args.autoscale_fault_trigger)),
+            obs=ObsConfig(trace=args.trace or bool(args.trace_json),
+                          trace_path=args.trace_json,
+                          metrics_path=args.metrics_out))

@@ -204,6 +204,14 @@ class Pipeline:
                                faults=faults)
         backend = backend_cls(index, tier, cfg.retrieval.to_espn_config(),
                               cost_model=cost_model, compute=compute)
+        if cfg.obs.enabled():
+            # one tracer threaded through the whole stack: backend spans
+            # (query_batch/candidate_gen/rerank) and storage spans (plan/
+            # read_batch/shard_read + fault children) stitch per query
+            from repro.obs import Tracer
+            tracer = Tracer()
+            backend.tracer = tracer
+            tier.tracer = tracer
         return cls(cfg, corpus=corpus, index=index, layout=layout, tier=tier,
                    backend=backend)
 
@@ -235,6 +243,32 @@ class Pipeline:
         return {f"mrr@{mrr_k}": mrr_at_k(ranked, qrels, mrr_k),
                 f"recall@{recall_k}": recall_at_k(ranked, qrels, recall_k),
                 "breakdown_ms": resp.breakdown.ms()}
+
+    # -- observability -------------------------------------------------------
+    @property
+    def tracer(self):
+        """The stack's tracer (None unless ``cfg.obs`` enabled tracing or
+        a server/test attached one)."""
+        return getattr(self.backend, "tracer", None)
+
+    def export_trace(self, path: str) -> int:
+        """Write the accumulated spans as Chrome/Perfetto trace-event JSON
+        (load via chrome://tracing or https://ui.perfetto.dev). Returns the
+        event count."""
+        tr = self.tracer
+        if tr is None:
+            raise RuntimeError("no tracer attached; set cfg.obs.trace=True "
+                               "(--trace / --trace-json) when building")
+        return tr.export(path)
+
+    def metrics_text(self) -> str:
+        """Prometheus-style exposition of the storage tier's metrics
+        sources (cluster/shard/arena-cache/mutation counters)."""
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        if hasattr(self.tier, "metrics_sources"):
+            reg.register_sources(self.tier.metrics_sources())
+        return reg.expose()
 
     # -- live mutation -------------------------------------------------------
     def _mutable_tier(self) -> MutableStorageCluster:
@@ -286,12 +320,15 @@ class Pipeline:
             raise RuntimeError("replica control requires the cluster tier")
         return self.tier.recover_replica(shard, replica)
 
-    def serve(self, policy=None):
+    def serve(self, policy=None, *, trace_path: str | None = None):
         """Start a continuous-batching ``RetrievalServer`` over this stack.
         ``cfg.serve.slo_ms > 0`` builds the deadline-aware ``SLOPolicy``
         (EDF + admission control) instead of the static ``BatchPolicy``, and
         ``cfg.serve.autoscale`` attaches the hedge/replica feedback
-        controller (cluster tier required). Caller owns shutdown()."""
+        controller (cluster tier required). ``trace_path`` (or
+        ``cfg.obs.trace_path``) traces every request — queue/dispatch spans
+        stitched over the backend/storage spans — and exports Perfetto JSON
+        there at ``shutdown()``. Caller owns shutdown()."""
         from repro.serve.engine import RetrievalServer
         from repro.serve.scheduler import BatchPolicy
         sc = self.cfg.serve
@@ -321,8 +358,14 @@ class Pipeline:
                 slo_ms=slo, window=sc.autoscale_window,
                 interval_s=sc.autoscale_interval_s,
                 fault_trigger=sc.autoscale_fault_trigger))
+        trace_path = trace_path or self.cfg.obs.trace_path or None
+        tracer = self.tracer
+        if tracer is None and (trace_path or self.cfg.obs.enabled()):
+            from repro.obs import Tracer
+            tracer = Tracer()
         return RetrievalServer(self.backend, policy=policy,
-                               autoscaler=scaler)
+                               autoscaler=scaler, tracer=tracer,
+                               trace_path=trace_path)
 
     def with_mode(self, mode: str, **retrieval_overrides) -> "Pipeline":
         """A new ``Pipeline`` sharing this one's corpus / index / layout but

@@ -60,6 +60,7 @@ class Autoscaler:
         self._calm = 0
         self._hedge0 = float(getattr(self.tier, "hedge_quantile", 0.0))
         self._faults = 0         # injected-fault events since last actuation
+        self._stages: dict = {}  # SLO-violation dominant-stage tallies
         self.actions: list[dict] = []
 
     # -- observations --------------------------------------------------------
@@ -70,6 +71,13 @@ class Autoscaler:
         """Feed injected-fault events (a batch's ``faults_injected`` delta);
         a rising fault rate is a recovery trigger independent of p99."""
         self._faults += int(n)
+
+    def observe_stage(self, stage: str) -> None:
+        """Feed one SLO violation's dominant stage (trace-driven tail
+        diagnosis, ``repro.obs.analyze.dominant_stage``). The tallies ride
+        on the next actuation's audit record as ``evidence`` — WHY the
+        controller acted, not just what it did — and reset with it."""
+        self._stages[stage] = self._stages.get(stage, 0) + 1
 
     def p99(self) -> float:
         return float(np.percentile(self._lat, 99)) if self._lat else 0.0
@@ -112,9 +120,28 @@ class Autoscaler:
             self._calm = 0
         if act is not None:
             act["t"] = now
+            if self._stages:
+                by = dict(sorted(self._stages.items(),
+                                 key=lambda kv: (-kv[1], kv[0])))
+                act["evidence"] = {"violations_by_stage": by,
+                                   "dominant": next(iter(by))}
+                self._stages = {}
             self.actions.append(act)
             self._lat.clear()       # fresh window after actuation
         return act
+
+    def metrics_sources(self):
+        """``(prefix, snapshot_fn)`` pairs for a ``MetricsRegistry``."""
+        def snap() -> dict:
+            out = {"actions": len(self.actions),
+                   "p99_ms": round(self.p99(), 4),
+                   "window_fill": len(self._lat),
+                   "hedge_quantile":
+                       float(getattr(self.tier, "hedge_quantile", 0.0))}
+            for stage, n in self._stages.items():
+                out[f"violations_{stage}"] = n
+            return out
+        return [("autoscaler", snap)]
 
     # -- actuators -----------------------------------------------------------
     def _dead_replicas(self) -> list[tuple[int, int]]:

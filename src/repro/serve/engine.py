@@ -16,6 +16,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, StreamingHistogram
+from repro.obs.analyze import dominant_stage
 from repro.serve.scheduler import BatchPolicy, ContinuousBatcher, Request
 
 # live-mutation / failure-recovery counters mirrored from the storage
@@ -35,7 +37,8 @@ class TenantStats:
     in_slo: int = 0
     degraded: int = 0                  # served from resident scores (faults)
     errors: int = 0                    # failed by a handler exception
-    slo_latencies_ms: list = field(default_factory=list)
+    slo_latencies_ms: StreamingHistogram = field(
+        default_factory=StreamingHistogram)
 
     def goodput_under_slo(self) -> float:
         return self.in_slo / self.offered if self.offered else 0.0
@@ -46,19 +49,28 @@ class TenantStats:
                 "shed": self.shed, "violations": self.violations,
                 "degraded": self.degraded, "errors": self.errors,
                 "goodput_under_slo": round(self.goodput_under_slo(), 4),
-                "slo_p50_ms": round(float(np.percentile(xs, 50)), 3)
-                if xs else 0.0,
-                "slo_p99_ms": round(float(np.percentile(xs, 99)), 3)
-                if xs else 0.0}
+                "slo_p50_ms": round(xs.percentile(50), 3) if xs else 0.0,
+                "slo_p99_ms": round(xs.percentile(99), 3) if xs else 0.0}
 
 
 @dataclass
 class ServeStats:
+    """Streaming serving ledger.
+
+    Latency/batch/hit-rate distributions are ``StreamingHistogram``s —
+    log-bucketed, constant memory no matter how long the server runs —
+    NOT unbounded sample lists; percentiles come from the buckets (~2.5%
+    relative error). The histograms keep the list-ish ``append``/``len``
+    API, so recording code is unchanged.
+    """
     n_requests: int = 0
-    latencies_ms: list = field(default_factory=list)
-    sim_latencies_ms: list = field(default_factory=list)
-    batch_sizes: list = field(default_factory=list)
-    hit_rates: list = field(default_factory=list)
+    latencies_ms: StreamingHistogram = field(
+        default_factory=StreamingHistogram)
+    sim_latencies_ms: StreamingHistogram = field(
+        default_factory=StreamingHistogram)
+    batch_sizes: StreamingHistogram = field(
+        default_factory=StreamingHistogram)
+    hit_rates: StreamingHistogram = field(default_factory=StreamingHistogram)
     # SLO ledger (zero / empty when no request carried a deadline):
     offered: int = 0                   # everything submitted, sheds included
     shed: int = 0                      # rejected at admission, never served
@@ -71,7 +83,8 @@ class ServeStats:
                                        # counted in served_in_slo
     errors: int = 0                    # failed terminally (backend raised:
                                        # degrade disabled, retry exhaustion…)
-    slo_latencies_ms: list = field(default_factory=list)  # wall + sim share
+    slo_latencies_ms: StreamingHistogram = field(   # wall + sim share
+        default_factory=StreamingHistogram)
     tenants: dict = field(default_factory=dict)           # name -> TenantStats
     # storage-cluster counters (zero when serving a single StorageTier):
     hedged_reads: int = 0
@@ -123,25 +136,25 @@ class ServeStats:
 
     def percentile(self, p: float, sim: bool = True) -> float:
         xs = self.sim_latencies_ms if sim else self.latencies_ms
-        return float(np.percentile(xs, p)) if xs else 0.0
+        return xs.percentile(p) if xs else 0.0
 
     def slo_percentile(self, p: float) -> float:
         xs = self.slo_latencies_ms
-        return float(np.percentile(xs, p)) if xs else 0.0
+        return xs.percentile(p) if xs else 0.0
 
     def summary(self) -> dict:
         out = {
             "n": self.n_requests,
-            "mean_ms": round(float(np.mean(self.sim_latencies_ms)), 2)
+            "mean_ms": round(self.sim_latencies_ms.mean(), 2)
             if self.sim_latencies_ms else 0,
             "p50_ms": round(self.percentile(50), 2),
             "p99_ms": round(self.percentile(99), 2),
             # wall clock (queueing + host), distinct from the device clock
             "p50_wall_ms": round(self.percentile(50, sim=False), 2),
             "p99_wall_ms": round(self.percentile(99, sim=False), 2),
-            "mean_batch": round(float(np.mean(self.batch_sizes)), 2)
+            "mean_batch": round(self.batch_sizes.mean(), 2)
             if self.batch_sizes else 0,
-            "mean_hit_rate": round(float(np.mean(self.hit_rates)), 4)
+            "mean_hit_rate": round(self.hit_rates.mean(), 4)
             if self.hit_rates else None,
         }
         if self.slo_latencies_ms or self.shed or self.timeouts:
@@ -196,6 +209,52 @@ class ServeStats:
                               "resident_bytes": self.resident_bytes}
         return out
 
+    def expose(self, extra_sources=()) -> str:
+        """Prometheus-style text exposition of the whole ledger.
+
+        Histograms emit cumulative ``_bucket{le=...}`` lines; every scalar
+        dataclass field becomes a ``serve_<field>`` sample. ``extra_sources``
+        is an iterable of ``(prefix, snapshot_fn)`` pairs — what the storage
+        tier / batcher / autoscaler ``metrics_sources()`` hooks return — so
+        one call renders the full serving stack.
+        """
+        import dataclasses
+
+        reg = MetricsRegistry()
+        for name, h in (("serve_latency_wall_ms", self.latencies_ms),
+                        ("serve_latency_sim_ms", self.sim_latencies_ms),
+                        ("serve_latency_slo_ms", self.slo_latencies_ms),
+                        ("serve_batch_size", self.batch_sizes),
+                        ("serve_hit_rate", self.hit_rates)):
+            reg.histogram(name).merge(h)
+
+        def scalars() -> dict:
+            out = {}
+            for f in dataclasses.fields(self):
+                v = getattr(self, f.name)
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    out[f.name] = v
+            out["goodput_under_slo"] = round(self.goodput_under_slo(), 6)
+            for i, (blk, sim) in enumerate(zip(self.shard_blocks,
+                                               self.shard_sim_s)):
+                out[f"shard_{i}_blocks"] = blk
+                out[f"shard_{i}_sim_s"] = round(sim, 6)
+            return out
+
+        reg.register_source("serve", scalars)
+        for name, t in sorted(self.tenants.items()):
+            reg.register_source(f"tenant_{name}",
+                                (lambda tt: lambda: {
+                                    "offered": tt.offered,
+                                    "served": tt.served,
+                                    "shed": tt.shed,
+                                    "violations": tt.violations,
+                                    "in_slo": tt.in_slo,
+                                    "degraded": tt.degraded,
+                                    "errors": tt.errors})(t))
+        reg.register_sources(extra_sources)
+        return reg.expose()
+
 
 class RetrievalServer:
     """Continuous batching in front of anything with ``query_batch`` — an
@@ -208,12 +267,21 @@ class RetrievalServer:
     """
 
     def __init__(self, retriever, *, policy: BatchPolicy | None = None,
-                 autoscaler=None):
+                 autoscaler=None, tracer=None, trace_path: str | None = None):
         self.retriever = retriever
         self.policy = policy or BatchPolicy()
         self.autoscaler = autoscaler
+        self.tracer = tracer
+        self.trace_path = trace_path
         self.stats = ServeStats()
         tier = getattr(retriever, "tier", None)
+        if tracer is not None:
+            # propagate down the stack: backend spans (query_batch, rerank,
+            # candidate_gen) and storage spans (plan, shard_read, faults)
+            # land in the SAME tracer and stitch under the request spans
+            retriever.tracer = tracer
+            if tier is not None:
+                tier.tracer = tracer
         tier_stats = getattr(tier, "stats", {})
         self._mut_base = {k: tier_stats.get(k, 0) for k in _MUT_KEYS}
         if tier is not None and hasattr(tier, "memory_resident_bytes"):
@@ -240,19 +308,49 @@ class RetrievalServer:
         before = ((dict(tier.stats), tier.per_shard_stats())
                   if tier is not None and "hedge_bytes" in getattr(
                       tier, "stats", {}) else None)
+        tr = self.tracer
+        if tr is not None:
+            # per-query spans emitted inside query_batch carry the REQUEST
+            # ids as qids, stitching backend/storage spans to request spans
+            tr.set_batch_qids([r.rid for r in batch])
         resp = self.retriever.query_batch(q_cls, q_bow, q_lens)
+        hedge_delta = {}
         if before is not None:
-            self._record_cluster(tier, *before)
-        per_query_sim = resp.breakdown.total_s / len(batch) \
-            + resp.breakdown.encode_s * (len(batch) - 1) / len(batch)
+            hedge_delta = self._record_cluster(tier, *before)
+        n = len(batch)
+        bd = resp.breakdown
+        per_query_sim = bd.total_s / n + bd.encode_s * (n - 1) / n
+        flags = {"retries": int(getattr(bd, "retries", 0)),
+                 "repairs": int(getattr(bd, "repair_bytes", 0) > 0
+                                or getattr(bd, "checksum_failures", 0)),
+                 "hedged": int(hedge_delta.get("hedged", 0)),
+                 "hedge_wins": int(hedge_delta.get("hedge_wins", 0))}
         for r, ranked in zip(batch, resp.ranked):
             r.result = ranked
             r.sim_ms = per_query_sim * 1e3
+            r.fault_flags = flags
             self.stats.sim_latencies_ms.append(per_query_sim * 1e3)
-        self.stats.batch_sizes.append(len(batch))
-        self.stats.hit_rates.append(resp.breakdown.hit_rate)
-        self.stats.n_requests += len(batch)
-        bd = resp.breakdown
+            # stage attribution: queueing is exact (arrival -> dispatch);
+            # device stages come from this query's trace spans when tracing,
+            # else from the batch breakdown split evenly
+            queue_ms = max(r.dispatch_s - r.arrival_s, 0.0) * 1e3
+            if tr is not None:
+                sims = tr.query_sims(r.rid)
+                cio_s = sims.get("critical_io", 0.0)
+                rr_s = sims.get("rerank", 0.0) + sims.get("bit_filter", 0.0)
+            else:
+                cio_s = getattr(bd, "critical_io_s", 0.0) / n
+                rr_s = getattr(bd, "rerank_s", 0.0) / n
+            cand_s = getattr(bd, "ann_s", 0.0) / n
+            other_s = max(per_query_sim - cio_s - rr_s - cand_s, 0.0)
+            r.stage_ms = {"queue": round(queue_ms, 6),
+                          "critical_io": round(cio_s * 1e3, 6),
+                          "rerank": round(rr_s * 1e3, 6),
+                          "candidate_gen": round(cand_s * 1e3, 6),
+                          "other": round(other_s * 1e3, 6)}
+        self.stats.batch_sizes.append(n)
+        self.stats.hit_rates.append(bd.hit_rate)
+        self.stats.n_requests += n
         for k in ("retries", "checksum_failures", "repair_bytes",
                   "faults_injected"):
             setattr(self.stats, k,
@@ -269,17 +367,24 @@ class RetrievalServer:
             return
         s = self.stats
         t = s.tenant(r.tenant)
+        tr = self.tracer
         if r.error is not None:
             # handler exception (degrade disabled + retry exhaustion, or a
             # genuine backend bug): terminal failure, never served
             s.errors += 1
             t.errors += 1
+            if tr is not None:
+                tr.add("request", cat="serve", qid=r.rid,
+                       t0=r.arrival_s, t1=r.arrival_s + r.latency_s,
+                       error=True, violation=False, tenant=r.tenant)
             return
         wall_ms = r.latency_s * 1e3
         s.latencies_ms.append(wall_ms)
         t.served += 1
         degraded = bool(getattr(r.result, "degraded", False))
         slo_ms = wall_ms + r.sim_ms        # device clock rides on top of wall
+        violation = False
+        budget_ms = None
         if degraded:
             # a degraded answer is its own terminal state: the caller got
             # SOMETHING (candidate-stage ranking), but it never counts as
@@ -298,20 +403,42 @@ class RetrievalServer:
             else:
                 s.slo_violations += 1
                 t.violations += 1
+                violation = True
         elif not degraded:
             s.served_in_slo += 1           # no deadline: served is good
             t.in_slo += 1
+        if violation and self.autoscaler is not None:
+            # trace-driven tail diagnosis rides into the autoscaler's audit
+            # log: the NEXT actuation cites these tallies as evidence
+            self.autoscaler.observe_stage(
+                dominant_stage(r.stage_ms, r.fault_flags))
+        if tr is not None:
+            end = r.arrival_s + r.latency_s
+            root = tr.add(
+                "request", cat="serve", qid=r.rid, t0=r.arrival_s, t1=end,
+                sim_s=r.sim_ms * 1e-3, tenant=r.tenant, degraded=degraded,
+                violation=violation, latency_ms=round(slo_ms, 6),
+                budget_ms=round(budget_ms, 6) if budget_ms is not None
+                else None,
+                slo_ms=round(budget_ms, 6) if budget_ms is not None
+                else None,
+                stages_ms=dict(r.stage_ms), **r.fault_flags)
+            r.span = root
+            tr.add("queue", cat="serve", qid=r.rid, t0=r.arrival_s,
+                   t1=min(max(r.dispatch_s, r.arrival_s), end),
+                   parent=root)
         if self.autoscaler is not None:
             self.autoscaler.observe(slo_ms)
             self.autoscaler.maybe_step()
 
     def _record_cluster(self, tier, before: dict,
-                        before_shards: list[dict]) -> None:
+                        before_shards: list[dict]) -> dict:
         """Fold a storage-cluster batch's stat DELTAS into ServeStats —
         every counter here (hedge activity, arena-cache traffic, per-shard
         device totals) covers the serve window only, so the summary stays
         internally consistent even when the tier served traffic (e.g.
-        ``pipe.search``) before the server started."""
+        ``pipe.search``) before the server started. Returns this batch's
+        hedge delta (fed to per-request tail-diagnosis flags)."""
         s = self.stats
         after = tier.stats
         s.hedged_reads += after["hedged_reads"] - before["hedged_reads"]
@@ -332,6 +459,8 @@ class RetrievalServer:
         for i, (st, st0) in enumerate(zip(shards, before_shards)):
             s.shard_blocks[i] += st["blocks"] - st0["blocks"]
             s.shard_sim_s[i] += st["sim_seconds"] - st0["sim_seconds"]
+        return {"hedged": after["hedged_reads"] - before["hedged_reads"],
+                "hedge_wins": after["hedge_wins"] - before["hedge_wins"]}
 
     # -- submission ----------------------------------------------------------
     def _submit(self, cls_vec, bow_vecs, q_len, tenant: str,
@@ -372,8 +501,38 @@ class RetrievalServer:
                     slo_ms: float | None = None) -> Request:
         return self._submit(cls_vec, bow_vecs, q_len, tenant, slo_ms)
 
+    # -- observability -------------------------------------------------------
+    def metrics_sources(self) -> list:
+        """Every ``(prefix, snapshot_fn)`` pair the serving stack exposes:
+        the batcher, admission control, the autoscaler, and the storage
+        tier underneath (cluster/shard/arena-cache/mutation sources)."""
+        out = list(self.batcher.metrics_sources())
+        if self.batcher.admission is not None \
+                and hasattr(self.batcher.admission, "metrics_sources"):
+            out += self.batcher.admission.metrics_sources()
+        if self.autoscaler is not None \
+                and hasattr(self.autoscaler, "metrics_sources"):
+            out += self.autoscaler.metrics_sources()
+        tier = getattr(self.retriever, "tier", None)
+        if tier is not None and hasattr(tier, "metrics_sources"):
+            out += tier.metrics_sources()
+        return out
+
+    def metrics_text(self) -> str:
+        """Prometheus-style exposition of the full serving stack."""
+        return self.stats.expose(self.metrics_sources())
+
+    def export_trace(self, path: str) -> int:
+        """Write the accumulated trace as Chrome/Perfetto trace-event JSON.
+        Returns the event count; 0 when the server runs untraced."""
+        if self.tracer is None:
+            return 0
+        return self.tracer.export(path)
+
     def shutdown(self):
         self.batcher.stop()
+        if self.trace_path and self.tracer is not None:
+            self.tracer.export(self.trace_path)
 
 
 class ShedError(RuntimeError):

@@ -52,6 +52,12 @@ class Request:
     sim_ms: float = field(init=False, default=0.0)   # device-clock share
     shed: bool = field(init=False, default=False)    # rejected at admission
     abandoned: bool = field(init=False, default=False)  # caller timed out
+    dispatch_s: float = field(init=False, default=0.0)  # batch pickup time
+    # per-stage latency attribution (ms), filled by the serving engine:
+    # queue / critical_io / rerank / candidate_gen / other
+    stage_ms: dict = field(init=False, default_factory=dict)
+    fault_flags: dict = field(init=False, default_factory=dict)
+    span: Any = field(init=False, default=None, repr=False)  # trace root
     error: BaseException | None = field(init=False, default=None)
     # ^ the backend raised while serving this request's batch: result is
     #   None, the exception is surfaced here, and the request is terminal
@@ -262,6 +268,8 @@ class ContinuousBatcher:
             self._inflight = len(batch)
             self.batches.append(len(batch))
             t0 = time.monotonic()
+            for r in batch:
+                r.dispatch_s = t0      # queueing ends here: arrival -> t0
             try:
                 self.handler(batch)
             except Exception as e:
@@ -288,6 +296,21 @@ class ContinuousBatcher:
     def stop(self):
         self._stop.set()
         self._thread.join(timeout=2)
+
+    def metrics_sources(self):
+        """``(prefix, snapshot_fn)`` pairs for a ``MetricsRegistry``."""
+        def snap() -> dict:
+            n = len(self.batches)
+            return {"queue_depth": self.depth(),
+                    "batches_dispatched": n,
+                    "requests_dispatched": sum(self.batches),
+                    "errors": self.errors,
+                    "mean_batch": round(sum(self.batches) / n, 4) if n
+                    else 0.0,
+                    "service_pred_ms":
+                        round(self.service.predict(max(
+                            self.policy.max_batch, 1)) * 1e3, 4)}
+        return [("batcher", snap)]
 
 
 def hedged_read(read_fn: Callable, ids, *, hedge_after_s: float,

@@ -49,9 +49,11 @@ class AdmissionController:
         self.service = service
         self.policy = policy
         self.shed_count = 0
+        self.admitted = 0
 
     def admit(self, req: Request, depth: int, now: float) -> bool:
         if req.deadline_s is None or not self.service.n:
+            self.admitted += 1
             return True
         pol = self.policy
         target = max(pol.min_batch, min(pol.max_batch, max(depth, 1)))
@@ -60,7 +62,17 @@ class AdmissionController:
         if now + pol.shed_margin * eta > req.deadline_s:
             self.shed_count += 1
             return False
+        self.admitted += 1
         return True
+
+    def metrics_sources(self):
+        """``(prefix, snapshot_fn)`` pairs for a ``MetricsRegistry``."""
+        def snap() -> dict:
+            total = self.admitted + self.shed_count
+            return {"admitted": self.admitted, "shed": self.shed_count,
+                    "shed_frac": round(self.shed_count / total, 6)
+                    if total else 0.0}
+        return [("admission", snap)]
 
 
 def eq4_max_batch(prefetcher, nprobe: int, bytes_per_query: float, *,

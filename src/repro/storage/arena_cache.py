@@ -48,6 +48,17 @@ class ArenaCache:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def stats(self) -> dict:
+        """Point-in-time counter snapshot (a ``MetricsRegistry`` source)."""
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "insertions": self.insertions,
+                    "bytes_used": self.bytes_used,
+                    "entries": len(self._lru),
+                    "capacity_bytes": self.capacity_bytes,
+                    "hit_rate": round(self.hit_rate, 6)}
+
     # -- lookup --------------------------------------------------------------
     def get(self, doc_id: int, t_need: int):
         """Return the cached ``(cls, bow, t)`` for ``doc_id`` if the stored

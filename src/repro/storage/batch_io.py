@@ -69,6 +69,9 @@ class BatchReadPlan:
     n_contiguous: int = 0              # block-contiguous segments in the
                                        # union (device-visible seq streams)
     owner_rows: np.ndarray = field(repr=False, default=None)
+    span: object = field(repr=False, default=None, compare=False)
+                                       # repro.obs.Span of the planning step
+                                       # (None unless a tracer is attached)
                                        # (U,) first-owner query per arena row
                                        # (the cluster re-attributes per row
                                        # when some rows are cache-served)
@@ -201,6 +204,8 @@ class BatchReadResult:
         self._failed_queries = failed_queries   # (B,) bool | None: queries
                                                 # whose read exhausted the
                                                 # fault retry budget
+        self.span = None                        # repro.obs.Span of the read
+                                                # (set by a traced tier)
 
     # -- fault surface -------------------------------------------------------
     def query_failed(self, b: int) -> bool:

@@ -49,7 +49,7 @@ from repro.storage.batch_io import (BatchReadPlan, BatchReadResult,
                                     _exclusive_cumsum, run_chunk,
                                     serial_batch)
 from repro.storage.faults import (FaultInjector, ShardReadError,
-                                  zero_fault_stats)
+                                  fault_span_counts, zero_fault_stats)
 from repro.storage.io_engine import ReadResult, StorageTier
 from repro.storage.layout import EmbeddingLayout, gather_docs_at
 
@@ -221,7 +221,8 @@ class StorageCluster:
                  arena_cache_bytes: int = 0,
                  faults: FaultInjector | None = None,
                  shard_layouts: list[tuple[EmbeddingLayout, np.ndarray]]
-                 | None = None):
+                 | None = None,
+                 tracer=None):
         if n_shards < 1 or replication < 1:
             raise ValueError("n_shards and replication must be >= 1")
         if not 0.0 <= hedge_quantile < 1.0:
@@ -233,6 +234,7 @@ class StorageCluster:
                 f"replication={replication}; give one multiplier per replica "
                 "(broadcast across shards)")
         self.layout = layout
+        self.tracer = tracer          # repro.obs.Tracer | None (tracing off)
         self.bits = bits
         self.fde = fde
         self.spec = spec
@@ -716,6 +718,7 @@ class StorageCluster:
         self._check_open()
         t_max = t_max or self.t_max
         coalesce = self.coalesce if coalesce is None else coalesce
+        tr = self.tracer
         lists = [np.asarray(x, np.int64).ravel() for x in per_query_ids]
         if coalesce:
             seq = self._next_seq()
@@ -726,11 +729,27 @@ class StorageCluster:
             # pinned in _cache_pending across a mode switch
             if self.arena_cache.enabled:
                 self._flush_cache_inserts()
-            return serial_batch(lambda ids: self.read(ids, t_max), lists,
-                                skip_empty)
+            if tr is None:
+                return serial_batch(lambda ids: self.read(ids, t_max), lists,
+                                    skip_empty)
+            sp = tr.begin("read_batch", cat="io", serial=True)
+            try:
+                res = serial_batch(lambda ids: self.read(ids, t_max), lists,
+                                   skip_empty)
+            except BaseException:
+                tr.end(sp, error=True)
+                raise
+            tr.end(sp, sim_s=res.sim_seconds)
+            res.span = sp
+            return res
+        t_plan0 = tr.clock() if tr is not None else 0.0
         plan = BatchReadPlan.build(self.layout, lists,
                                    chunk_docs=self.io_chunk_docs,
                                    with_query_runs=False)
+        if tr is not None:
+            plan.span = tr.add("plan", cat="io", t0=t_plan0, t1=tr.clock(),
+                               n_unique=plan.n_unique,
+                               n_blocks=plan.n_blocks)
         u = plan.n_unique
         arena = (np.zeros((u, self.layout.d_cls), np.float32),
                  np.zeros((u, t_max, self.layout.d_bow), np.float32),
@@ -745,6 +764,7 @@ class StorageCluster:
         # 1) cross-batch arena cache: hot rows are a memory access
         cached = np.zeros(u, bool)
         if self.arena_cache.enabled:
+            t_c0 = tr.clock() if tr is not None else 0.0
             self._flush_cache_inserts()
             t_needs = np.minimum(self.layout.n_tokens[plan.arena_ids], t_max)
             ents = self.arena_cache.get_many(plan.arena_ids, t_needs)
@@ -756,6 +776,9 @@ class StorageCluster:
                 arena[1][row, :t_need] = ent[1][:t_need]
                 arena[2][row] = t_need
                 cached[row] = True
+            if tr is not None:
+                tr.add("cache_probe", cat="io", t0=t_c0, t1=tr.clock(),
+                       hits=int(cached.sum()), probed=u)
         cache_hits = int(cached.sum())
 
         # 2) per-shard runs over the uncached rows, concurrent gathers
@@ -781,6 +804,7 @@ class StorageCluster:
             rows_s = uncached_rows[shard_of_rows == s]
             if len(rows_s) == 0:
                 continue
+            t_s0 = tr.clock() if tr is not None else 0.0
             gids_s = plan.arena_ids[rows_s]
             pieces, base_t, nb = self._shard_read_plan(s, gids_s)
             try:
@@ -797,8 +821,14 @@ class StorageCluster:
                 for k, n in e.events.items():
                     fault_ev[k] += n
                 fault_ev["shard_read_failures"] += 1
+                if tr is not None:
+                    self._trace_shard(tr, t_s0, s, e.elapsed_s, 0,
+                                      e.events or {}, hedged=False,
+                                      win=False, failover=False,
+                                      hedge_blocks=0, failed=True)
                 continue
             vic = -1
+            ev_s: dict = dict(fev) if fev else {}
             if fev is not None:
                 for k, n in fev.items():
                     fault_ev[k] += n
@@ -808,6 +838,7 @@ class StorageCluster:
                 eff += extra
                 for k, n in cev.items():
                     fault_ev[k] += n
+                    ev_s[k] = ev_s.get(k, 0) + n
             corrupt_arena_row = int(rows_s[vic]) if vic >= 0 else -1
             sim = max(sim, eff)
             io_blocks += nb
@@ -839,6 +870,9 @@ class StorageCluster:
                 st["dedup_docs"] += int(req_by_shard[s]) - len(rows_s)
                 st["blocks"] += nb
                 st["sim_seconds"] += eff
+            if tr is not None:
+                self._trace_shard(tr, t_s0, s, eff, nb, ev_s, hedged=h,
+                                  win=w, failover=fo, hedge_blocks=hb)
 
         # 3) cache insertion is DEFERRED to the next batch's flush — never
         #    done by the gather workers (scheduling-dependent interleaving
@@ -879,11 +913,18 @@ class StorageCluster:
             if self.arena_cache.enabled:
                 self.stats["cache_hits"] += cache_hits
                 self.stats["cache_misses"] += len(uncached_rows)
-        return ClusterBatchReadResult(
+        res = ClusterBatchReadResult(
             plan=plan, sim_seconds=sim, n_blocks=io_blocks, arena=arena,
             futures=futures, run_of_row=run_of_row,
             owned_io_blocks=owned_io, hedge_blocks=hedge_blocks,
             cache_hits=cache_hits, failed_rows=failed_rows)
+        if tr is not None:
+            res.span = tr.add("read_batch", cat="io", t0=t_plan0,
+                              t1=tr.clock(), sim_s=sim, n_unique=u,
+                              n_blocks=io_blocks, cache_hits=cache_hits,
+                              hedged=hedged, hedge_wins=wins,
+                              failovers=failovers)
+        return res
 
     def read_bits(self, ids, t_max: int | None = None):
         """Resident bit-tier gather (global — side tables are not sharded)."""
@@ -892,6 +933,28 @@ class StorageCluster:
                 "this StorageCluster was built without a resident BitTable; "
                 "construct it with bits=pack_bits(...)")
         return self.bits.gather(ids, t_max or self.t_max)
+
+    # -- tracing -------------------------------------------------------------
+    def _trace_shard(self, tr, t0: float, s: int, eff: float, nb: int,
+                     events: dict, *, hedged: bool, win: bool,
+                     failover: bool, hedge_blocks: int,
+                     failed: bool = False) -> None:
+        """One ``shard_read`` span per shard per batch, with each replica
+        attempt that went sideways — hedges, retries, stalls, checksum
+        repairs, failovers, flaps — as a child span. Children share the
+        parent's wall interval (the device clock is simulated; the wall
+        section is the planning/submission work) and appear iff the
+        corresponding counter fired."""
+        t1 = tr.clock()
+        sp = tr.add("shard_read", cat="io", t0=t0, t1=t1, sim_s=eff,
+                    shard=s, blocks=nb, failed=failed)
+        if hedged:
+            tr.add("hedge", cat="io", t0=t0, t1=t1, parent=sp,
+                   win=bool(win), blocks=int(hedge_blocks))
+        if failover:
+            tr.add("failover", cat="fault", t0=t0, t1=t1, parent=sp)
+        for name, count in fault_span_counts(events):
+            tr.add(name, cat="fault", t0=t0, t1=t1, parent=sp, count=count)
 
     # -- reporting -----------------------------------------------------------
     def memory_resident_bytes(self) -> int:
@@ -906,6 +969,30 @@ class StorageCluster:
 
     def per_shard_stats(self) -> list[dict]:
         return [dict(sh.stats) for sh in self.shards]
+
+    def metrics_sources(self) -> list:
+        """``(prefix, snapshot_fn)`` pairs for a ``MetricsRegistry``: the
+        cluster-level counters (hedges, failovers, cache, faults, recovery),
+        one source per shard tier, and the arena cache. Pull-time only."""
+        def snap():
+            with self._lock:
+                s = dict(self.stats)
+            s["replicas_alive"] = sum(sum(a) for a in self._replica_alive)
+            s["memory_resident_bytes"] = self.memory_resident_bytes()
+            return s
+
+        def shard_snap(sh):
+            def _s():
+                with sh._lock:
+                    return dict(sh.stats)
+            return _s
+
+        out = [("storage_cluster", snap)]
+        for i, sh in enumerate(self.shards):
+            out.append((f"storage_shard_{i}", shard_snap(sh)))
+        if self.arena_cache.enabled:
+            out.append(("arena_cache", self.arena_cache.stats))
+        return out
 
     def close(self):
         """Idempotent cluster shutdown: the cluster pool and every shard pool

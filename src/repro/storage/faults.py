@@ -213,6 +213,23 @@ class FaultInjector:
         return zlib.crc32(wire.tobytes()) != int(layout.checksums[gid])
 
 
+#: fault-event counter -> trace span name: the canonical vocabulary for
+#: ``cat="fault"`` child spans under a read (``repro.obs`` taxonomy). Order
+#: fixed so traced runs emit children deterministically.
+FAULT_SPAN_NAMES = (("retries", "retry"), ("stalls", "stall"),
+                    ("repairs", "repair"), ("replica_flaps", "flap"),
+                    ("read_errors", "read_error"),
+                    ("checksum_failures", "checksum_failure"))
+
+
+def fault_span_counts(events: dict) -> list[tuple[str, int]]:
+    """The nonzero ``(span_name, count)`` pairs for one read's fault-event
+    dict — exactly the ``cat="fault"`` child spans a tracer should emit, so
+    a child span exists iff its counter fired."""
+    return [(name, int(events[key])) for key, name in FAULT_SPAN_NAMES
+            if events.get(key)]
+
+
 def zero_fault_stats() -> dict:
     """Fresh zeroed fault counters for a tier's stats dict."""
     return {k: 0 for k in FAULT_STAT_KEYS}

@@ -23,7 +23,7 @@ from repro.storage.batch_io import (BatchReadPlan, BatchReadResult,
                                     _exclusive_cumsum, serial_batch)
 from repro.storage.cache import PageCache
 from repro.storage.faults import (FaultInjector, ReadFaultError,
-                                  zero_fault_stats)
+                                  fault_span_counts, zero_fault_stats)
 from repro.storage.layout import (BitTable, EmbeddingLayout, gather_docs,
                                   gather_docs_into)
 
@@ -45,9 +45,11 @@ class StorageTier:
                  n_io_threads: int = 4, bits: BitTable | None = None,
                  fde: FDETable | None = None, coalesce: bool = True,
                  io_chunk_docs: int | None = None,
-                 faults: FaultInjector | None = None):
+                 faults: FaultInjector | None = None,
+                 tracer=None):
         assert stack in ("espn", "mmap", "swap", "dram")
         self.layout = layout
+        self.tracer = tracer          # repro.obs.Tracer | None (tracing off)
         if layout.mode == "fixed_stride":
             # every doc holds exactly pool_k tokens: arena rows sized to k,
             # not the ragged t_max padding ceiling
@@ -122,19 +124,21 @@ class StorageTier:
         return self.spec.read_time(n_blocks, qd=self.qd)
 
     def _faulty_read_clock(self, base_s: float, ids) -> tuple[float, int,
-                                                              bool]:
+                                                              bool, dict]:
         """Run one device read through the fault machine (single device: no
-        failover target). Returns ``(sim_s, corrupt_pos, ok)`` — the clock
-        including retries/stalls/repair, the position in ``ids`` whose
+        failover target). Returns ``(sim_s, corrupt_pos, ok, events)`` — the
+        clock including retries/stalls/repair, the position in ``ids`` whose
         gathered data must be corrupted (-1 = none: no corruption, or it
-        was detected and repaired), and whether the read succeeded at all.
-        Fault counters fold into ``self.stats``."""
+        was detected and repaired), whether the read succeeded at all, and
+        the event-count dict for this read (empty when nothing fired; the
+        tracer renders retries/repairs as child spans from it). Fault
+        counters fold into ``self.stats``."""
         fi = self.faults
         with self._lock:
             seq = self._fault_seq
             self._fault_seq += 1
         if not fi.any_event(seq, 0, 0):
-            return base_s, -1, True
+            return base_s, -1, True, {}
         ev = zero_fault_stats()
         # a single tier has one "replica"; a flap is an outage for this read
         flapped = fi.flap(seq, 0, 0)
@@ -165,7 +169,7 @@ class StorageTier:
         with self._lock:
             for k, n in ev.items():
                 self.stats[k] += n
-        return elapsed, corrupt_pos, ok
+        return elapsed, corrupt_pos, ok, ev
 
     # -- reads ---------------------------------------------------------------
     def read(self, ids, t_max: int | None = None) -> ReadResult:
@@ -174,7 +178,7 @@ class StorageTier:
         sim, n_blocks = self._sim_time(ids)
         corrupt_pos = -1
         if self.faults is not None and self.faults.cfg.enabled():
-            sim, corrupt_pos, ok = self._faulty_read_clock(sim, ids)
+            sim, corrupt_pos, ok, _ = self._faulty_read_clock(sim, ids)
             if not ok:
                 with self._lock:
                     self.stats["sim_seconds"] += sim
@@ -216,12 +220,29 @@ class StorageTier:
         """
         t_max = t_max or self.t_max
         coalesce = self.coalesce if coalesce is None else coalesce
+        tr = self.tracer
         lists = [np.asarray(x, np.int64).ravel() for x in per_query_ids]
         if not coalesce:
-            return serial_batch(lambda ids: self.read(ids, t_max), lists,
-                                skip_empty)
+            if tr is None:
+                return serial_batch(lambda ids: self.read(ids, t_max), lists,
+                                    skip_empty)
+            sp = tr.begin("read_batch", cat="io", serial=True)
+            try:
+                res = serial_batch(lambda ids: self.read(ids, t_max), lists,
+                                   skip_empty)
+            except BaseException:
+                tr.end(sp, error=True)
+                raise
+            tr.end(sp, sim_s=res.sim_seconds)
+            res.span = sp
+            return res
+        t_plan0 = tr.clock() if tr is not None else 0.0
         plan = BatchReadPlan.build(self.layout, lists,
                                    chunk_docs=self.io_chunk_docs)
+        if tr is not None:
+            plan.span = tr.add("plan", cat="io", t0=t_plan0, t1=tr.clock(),
+                               n_unique=plan.n_unique,
+                               n_blocks=plan.n_blocks)
         if plan.n_unique == 0:
             return BatchReadResult(coalesced=True, plan=plan,
                                    sim_seconds=0.0, n_blocks=0,
@@ -231,10 +252,23 @@ class StorageTier:
                                                     self.layout.d_bow),
                                                    np.float32),
                                           np.zeros(0, np.int32)))
+        t_rb0 = tr.clock() if tr is not None else 0.0
         sim, n_blocks = self._sim_time(plan.arena_ids)
         corrupt_row = -1
+        fault_ev: dict = {}
+
+        def _rb_span(sim_s: float, nb: int, failed: bool = False):
+            """Retroactive read_batch span + fault-event child spans."""
+            sp = tr.add("read_batch", cat="io", t0=t_rb0, t1=tr.clock(),
+                        sim_s=sim_s, n_unique=plan.n_unique, n_blocks=nb,
+                        failed=failed)
+            for name, count in fault_span_counts(fault_ev):
+                tr.add(name, cat="fault", t0=sp.t0, t1=sp.t1, parent=sp,
+                       count=count)
+            return sp
+
         if self.faults is not None and self.faults.cfg.enabled():
-            sim, corrupt_row, ok = self._faulty_read_clock(
+            sim, corrupt_row, ok, fault_ev = self._faulty_read_clock(
                 sim, plan.arena_ids)
             if not ok:
                 # the coalesced transaction is one device read: when it
@@ -246,13 +280,16 @@ class StorageTier:
                     self.stats["doc_requests"] += plan.n_requested
                     self.stats["sim_seconds"] += sim
                 u = plan.n_unique
-                return BatchReadResult(
+                res = BatchReadResult(
                     coalesced=True, plan=plan, sim_seconds=sim, n_blocks=0,
                     arena=(np.zeros((u, self.layout.d_cls), np.float32),
                            np.zeros((u, t_max, self.layout.d_bow),
                                     np.float32),
                            np.zeros(u, np.int32)),
                     failed_queries=np.ones(len(lists), bool))
+                if tr is not None:
+                    res.span = _rb_span(sim, 0, failed=True)
+                return res
         u = plan.n_unique
         arena = (np.zeros((u, self.layout.d_cls), np.float32),
                  np.zeros((u, t_max, self.layout.d_bow), np.float32),
@@ -284,9 +321,12 @@ class StorageTier:
             self.stats["dedup_docs"] += plan.n_requested - u
             self.stats["blocks"] += n_blocks
             self.stats["sim_seconds"] += sim
-        return BatchReadResult(coalesced=True, plan=plan, sim_seconds=sim,
-                               n_blocks=n_blocks, arena=arena,
-                               futures=futures)
+        res = BatchReadResult(coalesced=True, plan=plan, sim_seconds=sim,
+                              n_blocks=n_blocks, arena=arena,
+                              futures=futures)
+        if tr is not None:
+            res.span = _rb_span(sim, n_blocks)
+        return res
 
     def read_bits(self, ids, t_max: int | None = None):
         """Gather packed sign bits for ``ids`` from the *resident* bit tier:
@@ -312,6 +352,18 @@ class StorageTier:
         if self.stack in ("mmap", "swap"):
             return self.page_cache.capacity_pages * self.layout.block + meta
         return meta
+
+    def metrics_sources(self) -> list:
+        """``(prefix, snapshot_fn)`` pairs for a ``MetricsRegistry``:
+        everything in ``self.stats`` (including the fault-layer counters
+        when an injector is attached) plus the resident-bytes gauge.
+        Snapshots run at expose() time only — zero hot-path cost."""
+        def snap():
+            with self._lock:
+                s = dict(self.stats)
+            s["memory_resident_bytes"] = self.memory_resident_bytes()
+            return s
+        return [("storage_tier", snap)]
 
     def close(self):
         """Idempotent shutdown: pending ``read_async`` futures are cancelled

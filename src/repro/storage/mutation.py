@@ -199,6 +199,8 @@ class MutableStorageCluster(StorageCluster):
         bows = [np.asarray(b, np.float32) for b in bow_embs]
         if len(bows) == 0:
             return np.zeros(0, np.int64)
+        tr = self.tracer
+        t_mut0 = tr.clock() if tr is not None else 0.0
         with self._mut_lock:
             self._check_open()
             # segments inherit the base layout's integrity tier: checksums
@@ -245,12 +247,15 @@ class MutableStorageCluster(StorageCluster):
                     self.fde.append(self._fde_enc().encode_docs(bows_q))
             nb = int(seg_layout.offsets[:, 1].sum())
             self._shard_version[s] += 1
+            write_s = self.shards[s].spec.read_time(nb, qd=self.qd)
             with self._lock:
                 self.stats["ingests"] += 1
                 self.stats["ingested_docs"] += n_new
                 self.stats["ingest_bytes"] += nb * self.layout.block
-                self.stats["ingest_seconds"] += \
-                    self.shards[s].spec.read_time(nb, qd=self.qd)
+                self.stats["ingest_seconds"] += write_s
+            if tr is not None:
+                tr.add("ingest", cat="mutation", t0=t_mut0, t1=tr.clock(),
+                       sim_s=write_s, docs=n_new, blocks=nb, shard=s)
             return gids
 
     # -- delete --------------------------------------------------------------
@@ -261,6 +266,8 @@ class MutableStorageCluster(StorageCluster):
         ids = np.unique(np.asarray(ids, np.int64))
         if len(ids) == 0:
             return 0
+        tr = self.tracer
+        t_mut0 = tr.clock() if tr is not None else 0.0
         with self._mut_lock:
             self._check_open()
             if (ids < 0).any() or ids[-1] >= len(self.alive):
@@ -283,6 +290,9 @@ class MutableStorageCluster(StorageCluster):
             with self._lock:
                 self.stats["deletes"] += 1
                 self.stats["tombstones"] += len(ids)
+        if tr is not None:
+            tr.add("delete", cat="mutation", t0=t_mut0, t1=tr.clock(),
+                   docs=len(ids))
         return len(ids)
 
     # -- compaction ----------------------------------------------------------
@@ -360,13 +370,25 @@ class MutableStorageCluster(StorageCluster):
         fresh block-aligned runs. Returns an aggregate report."""
         with self._mut_lock:
             self._check_open()
+        tr = self.tracer
+        t_mut0 = tr.clock() if tr is not None else 0.0
+        if tr is not None:
+            with self._lock:
+                secs0 = self.stats["compaction_seconds"]
         shards = range(self.n_shards) if shard is None else [shard]
         reports = [self._compact_shard(s) for s in shards]
-        return {"shards": reports,
-                "segments_merged": sum(r["segments_merged"]
-                                       for r in reports),
-                "blocks_reclaimed": sum(r["blocks_reclaimed"]
-                                        for r in reports)}
+        out = {"shards": reports,
+               "segments_merged": sum(r["segments_merged"]
+                                      for r in reports),
+               "blocks_reclaimed": sum(r["blocks_reclaimed"]
+                                       for r in reports)}
+        if tr is not None:
+            with self._lock:
+                secs = self.stats["compaction_seconds"] - secs0
+            tr.add("compaction", cat="mutation", t0=t_mut0, t1=tr.clock(),
+                   sim_s=secs, segments_merged=out["segments_merged"],
+                   blocks_reclaimed=out["blocks_reclaimed"])
+        return out
 
     # -- rebalancing ---------------------------------------------------------
     def rebalance(self, skew_threshold: float | None = None) -> dict:
@@ -378,6 +400,8 @@ class MutableStorageCluster(StorageCluster):
         next compaction. Both sides are billed: ``migration_bytes`` counts
         the moved blocks twice (read at the source, written at the
         destination)."""
+        tr = self.tracer
+        t_mut0 = tr.clock() if tr is not None else 0.0
         with self._mut_lock:
             self._check_open()
             no_op = {"moved_docs": 0, "moved_blocks": 0, "src": None,
@@ -425,8 +449,28 @@ class MutableStorageCluster(StorageCluster):
                 self.stats["rebalances"] += 1
                 self.stats["migration_bytes"] += 2 * acc * self.layout.block
                 self.stats["migration_seconds"] += secs
+            if tr is not None:
+                tr.add("rebalance", cat="mutation", t0=t_mut0, t1=tr.clock(),
+                       sim_s=secs, docs=len(moved), blocks=acc,
+                       src=src, dst=dst)
             return {"moved_docs": len(moved), "moved_blocks": acc,
                     "src": src, "dst": dst}
+
+    # -- observability -------------------------------------------------------
+    def metrics_sources(self):
+        """Inherited cluster sources (which already expose the mutation
+        counters folded into ``self.stats``) plus live structural gauges:
+        segment debt, tombstone count, and the live-doc population."""
+        out = super().metrics_sources()
+
+        def snap() -> dict:
+            with self._mut_lock:
+                return {"segments": sum(len(s) for s in self.segments),
+                        "tombstoned_docs": int((~self.alive).sum()),
+                        "live_docs": int(self.alive.sum())}
+
+        out.append(("mutation", snap))
+        return out
 
     # -- background maintenance ----------------------------------------------
     def _needs_compact(self, s: int) -> bool:
